@@ -1,0 +1,31 @@
+"""Paper Fig. 11: peak memory vs WHICH encoder is checkpointed.
+
+12 equal encoders (Bert-base): checkpointing a later encoder yields a
+higher peak because its recompute happens while earlier activations are
+still resident."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core import ShuttlingCollector, peak_if_checkpointing_unit
+from repro.core.planner import fixed_train_bytes
+from repro.models.lm import build_model
+from repro.models.registry import get_config
+
+
+def main(out) -> None:
+    cfg = get_config("bert_base_paper").reduced(
+        num_layers=12, d_model=128, d_ff=256, vocab_size=512)
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    col = ShuttlingCollector(lm)
+    act = col.collect(params, {
+        "tokens": jnp.ones((4, 128), jnp.int32)}).activation_vector()
+    fixed = fixed_train_bytes(params)
+    peaks = [peak_if_checkpointing_unit(act, i, fixed) for i in range(12)]
+    for i, p in enumerate(peaks):
+        out(csv_row(f"fig11.encoder{i}", 0.0,
+                    f"peak_mb={p / 2**20:.2f}"))
+    out(csv_row("fig11.summary", 0.0,
+                f"last_is_worst={peaks[-1] == max(peaks)} "
+                f"earliest_best={peaks[0] == min(peaks)}"))

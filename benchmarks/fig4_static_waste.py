@@ -1,0 +1,36 @@
+"""Paper Fig. 4: a static (Sublinear) plan computed for the largest input
+wastes budget + throughput on small inputs."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import TASKS, activation_budget, build_task, \
+    csv_row, make_planner, max_input_size
+from repro.core import ShuttlingCollector
+from repro.core.planner import fixed_train_bytes
+
+
+def main(out) -> None:
+    task = TASKS[3]                       # TC-Bert on QQP, as in the paper
+    cfg, lm, params = build_task(task)
+    budget = activation_budget(lm, params, task, 0.5)
+    fixed = fixed_train_bytes(params)
+    sub = make_planner("sublinear", lm, params, task, budget)
+    mi = make_planner("mimose", lm, params, task, budget)
+    col = ShuttlingCollector(lm)
+    for S in (32, 64, 96):                # warm the mimose estimator
+        mi.plan(params, {"tokens": jnp.ones((task.batch_size, S), jnp.int32)})
+
+    for S in (64, 128, 224, 352):
+        batch = {"tokens": jnp.ones((task.batch_size, S), jnp.int32)}
+        act = col.collect(params, batch).activation_vector()
+        m_sub, _ = sub.plan(params, batch)
+        m_mi, _ = mi.plan(params, batch)
+        used_sub = fixed + sum(a for a, m in zip(act, m_sub) if not m)
+        unused_gb = (budget - used_sub) / 2**20
+        recomp_sub = sum(a for a, m in zip(act, m_sub) if m)
+        recomp_mi = sum(a for a, m in zip(act, m_mi) if m)
+        out(csv_row(f"fig4.S{S}", 0.0,
+                    f"sublinear_remat={sum(m_sub)} mimose_remat={sum(m_mi)} "
+                    f"unused_budget_mb={unused_gb:.1f} "
+                    f"recompute_bytes_sub={recomp_sub / 2**20:.1f}MB "
+                    f"mimose={recomp_mi / 2**20:.1f}MB"))

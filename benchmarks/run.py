@@ -1,0 +1,51 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Each module validates one
+of the paper's artifacts at CPU scale (see benchmarks/common.py for the
+scale note); the roofline/dry-run benchmarks live in launch/ because they
+need the 512-device environment.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run             # all
+    PYTHONPATH=src python -m benchmarks.run fig13 table2
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+
+MODULES = [
+    "fig3_input_dynamics",
+    "fig4_static_waste",
+    "fig5_dtr_overhead",
+    "fig11_position",
+    "fig13_overall",
+    "fig14_memory",
+    "fig15_convergence",
+    "table2_overhead",
+    "table34_estimator",
+]
+
+
+def main() -> None:
+    sel = sys.argv[1:]
+    rows: list[str] = []
+
+    def out(row: str) -> None:
+        print(row, flush=True)
+        rows.append(row)
+
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        if sel and not any(s in modname for s in sel):
+            continue
+        mod = importlib.import_module(f"benchmarks.{modname}")
+        t0 = time.perf_counter()
+        mod.main(out)
+        out(f"{modname}.total,{1e6 * (time.perf_counter() - t0):.0f},done")
+    print(f"# {len(rows)} rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Tables 3-4: regression model comparison for the memory estimator
+(training time, prediction latency, error) with 10 samples."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import TASKS, build_task, csv_row
+from repro.core import ESTIMATORS, ShuttlingCollector
+
+
+def main(out) -> None:
+    for task in TASKS:
+        cfg, lm, params = build_task(task)
+        col = ShuttlingCollector(lm)
+        sizes = np.linspace(32, 352, 14).astype(int)
+        data = {}
+        for S in sizes:
+            res = col.collect(params, {
+                "tokens": jnp.ones((task.batch_size, int(S)), jnp.int32)})
+            data[res.input_size] = res.activation_vector()
+        train_sz = list(data)[:10]
+        test_sz = list(data)[10:]
+        truth = np.stack([data[s] for s in test_sz])
+        for name, make in ESTIMATORS.items():
+            est = make()
+            for s in train_sz:
+                est.add_sample(s, data[s])
+            t0 = time.perf_counter()
+            est.fit()
+            fit_ms = 1e3 * (time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            for _ in range(50):
+                est.predict_total(test_sz[0])
+            pred_us = (time.perf_counter() - t0) / 50 * 1e6
+            err = est.mape(test_sz, truth)
+            out(csv_row(f"table34.{task.name}.{name}", pred_us,
+                        f"train_ms={fit_ms:.2f} error={100 * err:.2f}% "
+                        f"samples=10"))

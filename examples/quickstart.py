@@ -1,0 +1,48 @@
+"""Quickstart: train a small causal LM under a memory budget with the
+input-aware Mimose planner.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import MimosePlanner, ShuttlingCollector
+from repro.core.planner import fixed_train_bytes
+from repro.data.pipeline import make_batches
+from repro.models.lm import build_model
+from repro.models.registry import get_config
+from repro.optim.adamw import AdamW
+from repro.train.trainer import Trainer
+
+# 1. a model (the paper's Bert-base trunk, reduced for CPU)
+cfg = get_config("bert_base_paper").reduced(
+    num_layers=6, d_model=192, d_ff=384, vocab_size=512)
+lm = build_model(cfg)
+params = lm.init(jax.random.PRNGKey(0))
+
+# 2. a memory budget: fixed state + 50% of the peak activation footprint
+fixed = fixed_train_bytes(params)
+probe = {"tokens": jnp.ones((8, 160), jnp.int32)}
+acts = ShuttlingCollector(lm).collect(params, probe).total_activation_bytes()
+budget = fixed + acts // 2
+print(f"budget: {budget / 2**20:.0f} MiB "
+      f"(fixed {fixed / 2**20:.0f} + 50% of {acts / 2**20:.0f} activation)")
+
+# 3. the input-aware planner + trainer
+planner = MimosePlanner(lm, budget, warmup_samples=3, quantum=32)
+trainer = Trainer(lm, planner, AdamW(lr=1e-3))
+
+# 4. train on dynamically-sized batches (SWAG length distribution)
+opt_state = trainer.optimizer.init(params)
+for batch in make_batches("swag", batch_size=8, vocab_size=cfg.vocab_size,
+                          num_batches=30, quantum=32, seed=0):
+    params, opt_state, loss = trainer.step(params, opt_state, batch)
+    st = trainer.history[-1]
+    print(f"S={batch['tokens'].shape[1]:4d} loss={loss:6.3f} "
+          f"remat={st.remat_units}/{lm.num_plan_units()} "
+          f"plan={1e3 * st.plan_time_s:6.2f} ms")
+
+print("\nsummary:", trainer.summary())
+print("planner stats:", planner.stats)
+print(f"plans generated: {len(planner.cache)} "
+      f"(cache hits: {planner.stats['cache_hits']})")

@@ -1,0 +1,25 @@
+"""bert_base_paper — the paper's own evaluation trunk (Bert-base scale).
+
+Mimose's evaluation (§6) trains Bert-base / Roberta-base (12 encoders,
+d=768) on SWAG / SQuAD / GLUE-QQP with dynamic sequence lengths.  We keep
+it as a decoder-only 12-layer causal LM of the same dimensions — the
+planner sees exactly the paper's granularity: 12 equal encoder blocks
+(paper Fig. 11).
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="bert-base-paper",
+    family="dense",
+    source="Mimose paper §6 (Bert-base, 110M params)",
+    num_layers=12,
+    d_model=768,
+    num_heads=12, num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    mlp_act="gelu",
+    vocab_size=30522,
+    tie_embeddings=True,
+    remat_mode="unrolled",    # per-encoder planning, as in the paper
+    dtype="float32",
+)

@@ -1,0 +1,11 @@
+"""Mimose core: the paper's primary contribution (input-aware checkpointing)."""
+from repro.core.collector import (CollectionResult, ShuttlingCollector,  # noqa: F401
+                                  input_size_of, unit_residual_bytes)
+from repro.core.estimator import (DecisionTreeEstimator, ESTIMATORS,  # noqa: F401
+                                  PolyEstimator)
+from repro.core.planner import (MimosePlanner, NonePlanner, PlannerBase,  # noqa: F401
+                                fixed_train_bytes)
+from repro.core.baselines import DTRSimPlanner, SublinearPlanner  # noqa: F401
+from repro.core.scheduler import Plan, build_buckets, greedy_plan  # noqa: F401
+from repro.core.simulator import (SimResult, dtr_simulate,  # noqa: F401
+                                  peak_if_checkpointing_unit, simulate)

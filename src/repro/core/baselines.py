@@ -1,0 +1,111 @@
+"""Baseline checkpointing planners the paper compares against (§6.1).
+
+* ``SublinearPlanner`` — static: one conservative plan computed for the
+  *largest* input size the task can produce, applied to every batch
+  (Chen et al. 2016 as deployed in the paper's Fig. 4 experiment).
+* ``DTRSimPlanner`` — dynamic: greedy evict-on-OOM per iteration with no
+  plan reuse and with DTR's measured memory-fragmentation inflation
+  (paper §3.2 / Fig. 5); planning cost is re-paid on every batch.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.collector import ShuttlingCollector, input_size_of
+from repro.core.estimator import PolyEstimator
+from repro.core.planner import PlanInfo, PlannerBase, fixed_train_bytes
+from repro.core.scheduler import Plan, greedy_plan
+from repro.core.simulator import dtr_simulate
+from repro.models.lm import LM
+
+
+class SublinearPlanner(PlannerBase):
+    name = "sublinear"
+
+    def __init__(self, lm: LM, budget_bytes: float, max_input_size: int, *,
+                 fixed_bytes: Optional[float] = None,
+                 shard_divisor: int = 1,
+                 warmup_samples: int = 4):
+        self.lm = lm
+        self.budget_bytes = float(budget_bytes)
+        self.max_input_size = int(max_input_size)
+        self.fixed_bytes = fixed_bytes
+        self.shard_divisor = shard_divisor
+        self.collector = ShuttlingCollector(lm)
+        self.estimator = PolyEstimator(2, min_samples=warmup_samples)
+        self._plan: Optional[Plan] = None
+
+    def _build_static_plan(self, params, batch):
+        # collect a few sizes online (the static planner is allowed model
+        # pre-analysis; we reuse the collector for it), then plan once at
+        # the maximum input size.
+        B, S = batch["tokens"].shape
+        sizes = np.linspace(max(B, self.max_input_size // 8),
+                            self.max_input_size,
+                            self.estimator.min_samples).astype(int)
+        for s in sizes:
+            probe = dict(batch)
+            probe["tokens"] = np.zeros((B, max(1, int(s) // B)), np.int32)
+            if "frames" in batch:
+                probe["frames"] = np.zeros(
+                    (B, max(1, int(s) // B), self.lm.cfg.d_model), np.float32)
+            res = self.collector.collect(params, probe)
+            self.estimator.add_sample(res.input_size, res.activation_vector())
+        est = self.estimator.predict(self.max_input_size)
+        if self.fixed_bytes is None:
+            self.fixed_bytes = fixed_train_bytes(params) / self.shard_divisor
+        self._plan = greedy_plan(est / self.shard_divisor, self.budget_bytes,
+                                 self.fixed_bytes)
+
+    def plan(self, params, batch):
+        if self._plan is None:
+            self._build_static_plan(params, batch)
+        s = input_size_of(batch)
+        return self._plan.as_tuple(), PlanInfo(s, self.max_input_size, True,
+                                               False, self._plan)
+
+
+class DTRSimPlanner(PlannerBase):
+    name = "dtr"
+
+    def __init__(self, lm: LM, budget_bytes: float, *,
+                 fixed_bytes: Optional[float] = None,
+                 shard_divisor: int = 1,
+                 frag_factor: float = 1.25,
+                 plan_op_cost_s: float = 2e-5):
+        self.lm = lm
+        self.budget_bytes = float(budget_bytes)
+        self.fixed_bytes = fixed_bytes
+        self.shard_divisor = shard_divisor
+        self.frag_factor = frag_factor
+        self.plan_op_cost_s = plan_op_cost_s
+        self.collector = ShuttlingCollector(lm)
+        self._size_cache: Dict[int, np.ndarray] = {}
+        self.stats = {"plan_ops": 0, "plan_time_s": 0.0, "replans": 0}
+
+    def plan(self, params, batch):
+        s = input_size_of(batch)
+        # DTR knows tensor sizes at runtime (they are concrete); it just
+        # never reuses planning work across iterations.
+        if s not in self._size_cache:
+            res = self.collector.collect(params, batch)
+            self._size_cache[s] = res.activation_vector()
+        act = self._size_cache[s] / self.shard_divisor
+        if self.fixed_bytes is None:
+            self.fixed_bytes = fixed_train_bytes(params) / self.shard_divisor
+
+        t0 = time.perf_counter()
+        mask, plan_ops = dtr_simulate(act, self.budget_bytes,
+                                      self.fixed_bytes, self.frag_factor)
+        self.stats["plan_ops"] += plan_ops
+        self.stats["replans"] += 1
+        # model DTR's on-demand eviction search cost (paper: 4.4-6.1% of
+        # iteration time); charged every iteration, cache-free.
+        self.stats["plan_time_s"] += (time.perf_counter() - t0
+                                      + plan_ops * self.plan_op_cost_s)
+        p = Plan(list(mask), 0.0, float(act[np.asarray(mask)].sum()),
+                 float(act.sum()))
+        return p.as_tuple(), PlanInfo(s, s, False, False, p)

@@ -1,0 +1,138 @@
+"""Shuttling online collector (paper §4.2), adapted to JAX.
+
+The paper's collector runs every block's forward twice on the GPU — once
+to measure per-layer activation memory from the CUDA allocator, once
+checkpointed to keep the footprint at the Sublinear level.  Under XLA
+there is no runtime allocator to poll, but there is something strictly
+better: the residuals JAX AD will save for a block are *exactly* the
+leaves of the ``jax.vjp`` closure, and they can be obtained abstractly
+with ``jax.eval_shape`` — zero FLOPs, zero bytes allocated, and the
+numbers are exact rather than sampled.  The "shuttle" (forward twice)
+degenerates to a single abstract trace per block; we keep the paper's
+online character: the collector runs lazily, on the live training batch,
+only when a new input size appears, with no model pre-analysis.
+
+For wall-time data (used in the paper's Table 2 overhead breakdown) the
+collector can also time a concrete forward per block on request.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM, PlanUnit
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(tree)
+               if hasattr(l, "shape"))
+
+
+@dataclasses.dataclass
+class UnitRecord:
+    name: str
+    index: int                 # forward timestamp
+    activation_bytes: int      # residuals AD would save (excluding weights)
+    output_bytes: int          # inter-block tensor (kept even when rematted)
+    param_bytes: int
+    forward_time_s: float = 0.0
+
+
+@dataclasses.dataclass
+class CollectionResult:
+    input_size: int            # elements in the mini-batch input tensor
+    records: List[UnitRecord]
+    collect_time_s: float = 0.0
+
+    def activation_vector(self) -> np.ndarray:
+        return np.array([r.activation_bytes for r in self.records], dtype=np.float64)
+
+    def total_activation_bytes(self) -> int:
+        return int(sum(r.activation_bytes for r in self.records))
+
+
+def unit_residual_bytes(unit: PlanUnit, x_struct) -> Dict[str, int]:
+    """Exact residual footprint of one block, computed abstractly.
+
+    ``jax.vjp(f, x)[1]`` is a pytree whose array leaves are precisely the
+    tensors AD keeps live between forward and backward.  Weights appear in
+    that closure too but are resident anyway, so they are subtracted.
+    """
+    def capture(p, x):
+        out, vjp_fn = jax.vjp(lambda xx: unit.apply(p, xx), x)
+        return out, vjp_fn
+
+    out_struct, vjp_struct = jax.eval_shape(capture, unit.params, x_struct)
+    resid = _tree_bytes(vjp_struct)
+    params = _tree_bytes(unit.params)
+    return {
+        "activation_bytes": max(0, resid - params),
+        "output_bytes": _tree_bytes(out_struct),
+        "param_bytes": params,
+    }
+
+
+def input_size_of(batch) -> int:
+    """Paper §3.1: input size = number of elements in the input tensor."""
+    t = batch["tokens"]
+    size = int(np.prod(t.shape))
+    if "frames" in batch:
+        size += int(np.prod(batch["frames"].shape[:2]))
+    if "vision_embeds" in batch:
+        size += int(np.prod(batch["vision_embeds"].shape[:2]))
+    return size
+
+
+class ShuttlingCollector:
+    """Collects per-unit activation bytes for the live batch geometry."""
+
+    def __init__(self, lm: LM, measure_time: bool = False):
+        self.lm = lm
+        self.measure_time = measure_time
+
+    def collect(self, params, batch) -> CollectionResult:
+        t0 = time.perf_counter()
+        units = self.lm.plan_units(params, batch)
+        x_struct = self._residual_stream_struct(params, batch)
+        records: List[UnitRecord] = []
+        x = x_struct
+        for u in units:
+            if u.name.startswith("enc"):
+                xs = self._encoder_stream_struct(batch)
+            else:
+                xs = x_struct
+            info = unit_residual_bytes(u, xs)
+            rec = UnitRecord(u.name, u.index, info["activation_bytes"],
+                             info["output_bytes"], info["param_bytes"])
+            if self.measure_time:
+                rec.forward_time_s = self._time_unit(u, xs)
+            records.append(rec)
+        return CollectionResult(input_size_of(batch), records,
+                                time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------
+    def _residual_stream_struct(self, params, batch):
+        cfg = self.lm.cfg
+        B, S = batch["tokens"].shape
+        if cfg.family == "vlm" and cfg.vision_tokens:
+            S = S + cfg.vision_tokens
+        return jax.ShapeDtypeStruct((B, S, cfg.d_model), self.lm.dtype)
+
+    def _encoder_stream_struct(self, batch):
+        cfg = self.lm.cfg
+        B, F = batch["frames"].shape[:2]
+        return jax.ShapeDtypeStruct((B, F, cfg.d_model), self.lm.dtype)
+
+    def _time_unit(self, u: PlanUnit, x_struct) -> float:
+        x = jnp.zeros(x_struct.shape, x_struct.dtype)
+        fn = jax.jit(u.apply)
+        fn(u.params, x).block_until_ready()          # compile + warm
+        t0 = time.perf_counter()
+        fn(u.params, x).block_until_ready()
+        return time.perf_counter() - t0

@@ -1,0 +1,167 @@
+"""MimosePlanner — the input-aware checkpointing planner (paper §4).
+
+Ties together the shuttling collector, the lightning estimator, the
+responsive scheduler and the plan cache:
+
+    planner = MimosePlanner(lm, budget_bytes=6 << 30)
+    mask, info = planner.plan(params, batch)     # < 1 ms after warm-up
+    loss, _ = lm.loss(params, batch, remat_mask=mask)
+
+Phases (paper §4.1):
+  * sheltered execution — while the estimator has fewer than
+    ``warmup_samples`` distinct input sizes, each new size triggers the
+    collector (the measured bytes are used directly for that iteration's
+    plan, so training proceeds under budget from step one);
+  * responsive execution — the estimator predicts per-unit bytes for any
+    size, the greedy scheduler emits a plan in O(n log n), and the plan
+    cache keyed by quantised input size makes repeats free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.collector import ShuttlingCollector, input_size_of, _tree_bytes
+from repro.core.estimator import PolyEstimator
+from repro.core.scheduler import Plan, greedy_plan
+from repro.models.lm import LM
+
+
+def fixed_train_bytes(params, optimizer: str = "adamw",
+                      grad_dtype_bytes: Optional[int] = None) -> int:
+    """Resident bytes independent of input size: params + grads + opt state."""
+    pb = _tree_bytes(params)
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params))
+    gb = pb if grad_dtype_bytes is None else n_params * grad_dtype_bytes
+    ob = 2 * 4 * n_params if optimizer == "adamw" else 0   # fp32 m + v
+    return pb + gb + ob
+
+
+@dataclasses.dataclass
+class PlanInfo:
+    input_size: int
+    quantized_size: int
+    cache_hit: bool
+    collected: bool
+    plan: Plan
+    estimate_time_s: float = 0.0
+    schedule_time_s: float = 0.0
+    collect_time_s: float = 0.0
+
+
+class PlannerBase:
+    name = "base"
+
+    def plan(self, params, batch) -> Tuple[Tuple[bool, ...], PlanInfo]:
+        raise NotImplementedError
+
+
+class NonePlanner(PlannerBase):
+    """No checkpointing (the paper's PyTorch Baseline)."""
+    name = "none"
+
+    def __init__(self, lm: LM):
+        self.lm = lm
+
+    def plan(self, params, batch):
+        n = self.lm.num_plan_units()
+        p = Plan([False] * n, 0.0, 0.0, 0.0)
+        return p.as_tuple(), PlanInfo(input_size_of(batch), 0, True, False, p)
+
+
+class MimosePlanner(PlannerBase):
+    name = "mimose"
+
+    def __init__(self, lm: LM, budget_bytes: float, *,
+                 fixed_bytes: Optional[float] = None,
+                 shard_divisor: int = 1,
+                 quantum: int = 256,
+                 degree: int = 2,
+                 warmup_samples: int = 4,
+                 bucket_tol: float = 0.10,
+                 audit_every: int = 0,
+                 audit_tol: float = 0.02):
+        self.lm = lm
+        self.budget_bytes = float(budget_bytes)
+        self.fixed_bytes = fixed_bytes          # resolved lazily from params
+        self.shard_divisor = shard_divisor      # activation sharding ways/device
+        self.quantum = quantum
+        self.warmup_samples = warmup_samples
+        self.bucket_tol = bucket_tol
+        # adaptive-estimator extension (the paper's §4.3 future work):
+        # every ``audit_every``-th unseen size, re-collect abstractly and
+        # re-fit if the prediction drifted beyond ``audit_tol``.
+        self.audit_every = audit_every
+        self.audit_tol = audit_tol
+        self.collector = ShuttlingCollector(lm)
+        self.estimator = PolyEstimator(degree, min_samples=warmup_samples)
+        self.cache: Dict[int, Plan] = {}
+        # stats (paper Table 2)
+        self.stats = {"cache_hits": 0, "cache_misses": 0, "collections": 0,
+                      "collect_time_s": 0.0, "estimate_time_s": 0.0,
+                      "schedule_time_s": 0.0, "audits": 0, "refits": 0}
+
+    # ------------------------------------------------------------------
+    def _quantize(self, s: int) -> int:
+        q = self.quantum
+        return ((s + q - 1) // q) * q
+
+    def _fixed(self, params) -> float:
+        if self.fixed_bytes is None:
+            self.fixed_bytes = fixed_train_bytes(params) / self.shard_divisor
+        return self.fixed_bytes
+
+    def plan(self, params, batch):
+        s = input_size_of(batch)
+        qs = self._quantize(s)
+        if qs in self.cache:
+            self.stats["cache_hits"] += 1
+            p = self.cache[qs]
+            return p.as_tuple(), PlanInfo(s, qs, True, False, p)
+        self.stats["cache_misses"] += 1
+
+        collected = False
+        t_est = t_col = 0.0
+        if not self.estimator.ready:
+            # sheltered execution: collect this size online
+            res = self.collector.collect(params, batch)
+            self.estimator.add_sample(s, res.activation_vector())
+            est = res.activation_vector()
+            collected = True
+            t_col = res.collect_time_s
+            self.stats["collections"] += 1
+            self.stats["collect_time_s"] += t_col
+        else:
+            t0 = time.perf_counter()
+            est = self.estimator.predict(s)
+            t_est = time.perf_counter() - t0
+            self.stats["estimate_time_s"] += t_est
+            if (self.audit_every
+                    and self.stats["cache_misses"] % self.audit_every == 0):
+                # drift audit: exact abstract re-collection for this size
+                self.stats["audits"] += 1
+                res = self.collector.collect(params, batch)
+                truth = res.activation_vector()
+                err = abs(truth.sum() - est.sum()) / max(truth.sum(), 1.0)
+                if err > self.audit_tol:
+                    self.estimator.add_sample(s, truth)
+                    self.estimator.fit()
+                    est = truth
+                    self.stats["refits"] += 1
+                    self.cache.clear()      # stale plans out
+
+        t0 = time.perf_counter()
+        plan = greedy_plan(est / self.shard_divisor, self.budget_bytes,
+                           self._fixed(params), tol=self.bucket_tol)
+        t_sch = time.perf_counter() - t0
+        self.stats["schedule_time_s"] += t_sch
+
+        self.cache[qs] = plan
+        return plan.as_tuple(), PlanInfo(s, qs, False, collected, plan,
+                                         t_est, t_sch, t_col)

@@ -1,0 +1,86 @@
+"""Responsive memory scheduler — Algorithm 1 of the paper, verbatim.
+
+Greedy bucketed selection of which plan units to rematerialise:
+
+  1. Sort units by estimated activation bytes, descending.
+  2. Group units whose estimate is within -10% of the bucket head into a
+     bucket; sort each bucket by forward timestamp, ascending (earlier
+     blocks are cheaper to recompute at the tail of the backward pass —
+     paper Fig. 11).
+  3. excess = sum(est) + fixed - budget.
+  4. While excess > 0: among buckets whose max member covers the excess,
+     pick the one nearest the excess and take its earliest layer;
+     otherwise take the earliest layer of the largest bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Plan:
+    remat: List[bool]                 # per plan-unit, timestamp order
+    excess_bytes: float               # predicted overshoot before planning
+    covered_bytes: float              # bytes the plan frees
+    est_activation_bytes: float       # predicted total activation bytes
+    n_remat: int = 0
+
+    def __post_init__(self):
+        self.n_remat = int(sum(self.remat))
+
+    def as_tuple(self) -> Tuple[bool, ...]:
+        return tuple(self.remat)
+
+
+def build_buckets(est_mem: Sequence[float], tol: float = 0.10
+                  ) -> List[List[int]]:
+    """Bucket unit indices by similar estimated memory (paper lines 2-14)."""
+    order = sorted(range(len(est_mem)), key=lambda i: -est_mem[i])
+    buckets: List[List[int]] = []
+    i = 0
+    while i < len(order):
+        head = order[i]
+        bucket = [head]
+        j = i + 1
+        while j < len(order) and est_mem[order[j]] > est_mem[head] * (1 - tol):
+            bucket.append(order[j])
+            j += 1
+        bucket.sort()                       # timestamp ascending
+        buckets.append(bucket)
+        i = j
+    return buckets
+
+
+def greedy_plan(est_mem: Sequence[float], budget_bytes: float,
+                fixed_bytes: float = 0.0, tol: float = 0.10) -> Plan:
+    """Algorithm 1.  est_mem[i] = predicted activation bytes of unit i."""
+    est = [float(m) for m in est_mem]
+    total = sum(est)
+    excess = total + fixed_bytes - budget_bytes
+    plan = [False] * len(est)
+    if excess <= 0:
+        return Plan(plan, excess, 0.0, total)
+
+    buckets = build_buckets(est, tol)
+    remaining = excess
+    covered = 0.0
+    while remaining > 0 and any(buckets):
+        # buckets whose largest member alone covers the remaining excess
+        candidates = [b for b in buckets if b and max(est[i] for i in b) > remaining]
+        if candidates:
+            # nearest above the excess (paper line 21: candidates.top())
+            bucket = min(candidates, key=lambda b: max(est[i] for i in b))
+        else:
+            # largest activation as soon as possible (paper line 19)
+            bucket = max((b for b in buckets if b),
+                         key=lambda b: max(est[i] for i in b))
+        pick = bucket[0]                    # earliest timestamp in the bucket
+        bucket.remove(pick)
+        plan[pick] = True
+        remaining -= est[pick]
+        covered += est[pick]
+        buckets = [b for b in buckets if b]
+    return Plan(plan, excess, covered, total)

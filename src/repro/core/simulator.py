@@ -1,0 +1,112 @@
+"""Forward/backward memory-liveness timeline simulator.
+
+Given per-unit activation bytes and a remat plan, replay the training
+step's liveness and report the peak footprint plus recompute cost.  This
+is how we (a) validate scheduler plans against the budget without
+hardware, (b) reproduce the paper's Fig. 11 (peak memory vs *which*
+encoder is checkpointed), and (c) drive the DTR-style baseline, whose
+evict-on-OOM behaviour needs a memory timeline to trigger on.
+
+The model: during forward, saved (non-remat) activations accumulate; a
+unit's internal working set is transiently live while it executes whether
+or not it is rematted.  During backward (reverse order), a rematted
+unit's residuals are recomputed right before its gradient and freed right
+after; a saved unit's residuals are freed after its gradient.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SimResult:
+    peak_bytes: float
+    recompute_bytes: float            # total bytes rematerialised
+    recompute_units: int
+    timeline: List[Tuple[str, float]]  # (event, live_bytes)
+
+    def fits(self, budget: float) -> bool:
+        return self.peak_bytes <= budget
+
+
+def simulate(act_bytes: Sequence[float], remat: Sequence[bool],
+             fixed_bytes: float = 0.0,
+             output_bytes: Sequence[float] | None = None) -> SimResult:
+    n = len(act_bytes)
+    act = [float(a) for a in act_bytes]
+    out = ([float(o) for o in output_bytes] if output_bytes is not None
+           else [0.0] * n)
+    live = fixed_bytes
+    peak = live
+    timeline: List[Tuple[str, float]] = []
+
+    # ---- forward ----------------------------------------------------------
+    saved = 0.0
+    for i in range(n):
+        # transient working set while unit i runs
+        transient = live + saved + act[i] + out[i]
+        peak = max(peak, transient)
+        if not remat[i]:
+            saved += act[i]
+        else:
+            saved += out[i]               # only the boundary tensor is kept
+        timeline.append((f"fwd{i}", live + saved))
+    peak = max(peak, live + saved)
+
+    # ---- backward ---------------------------------------------------------
+    recompute = 0.0
+    n_re = 0
+    for i in reversed(range(n)):
+        if remat[i]:
+            # replay forward of unit i: its residuals come back to life
+            saved += act[i]
+            recompute += act[i]
+            n_re += 1
+        peak = max(peak, live + saved + act[i])   # grad working set ~ act_i
+        saved -= act[i]
+        timeline.append((f"bwd{i}", live + saved))
+
+    return SimResult(peak, recompute, n_re, timeline)
+
+
+def peak_if_checkpointing_unit(act_bytes: Sequence[float], which: int,
+                               fixed_bytes: float = 0.0) -> float:
+    """Paper Fig. 11: peak memory when exactly one unit is checkpointed."""
+    remat = [i == which for i in range(len(act_bytes))]
+    return simulate(act_bytes, remat, fixed_bytes).peak_bytes
+
+
+def dtr_simulate(act_bytes: Sequence[float], budget: float,
+                 fixed_bytes: float = 0.0,
+                 frag_factor: float = 1.25) -> Tuple[List[bool], int]:
+    """DTR-style greedy evict-on-OOM (paper §3.2 behaviour).
+
+    Walk the forward pass; whenever live memory (inflated by the
+    fragmentation factor the paper measured for DTR) exceeds the budget,
+    evict the largest still-saved earlier activation.  Returns the
+    effective remat mask and the number of planning (evict-search)
+    operations performed — DTR pays this every iteration since it never
+    caches plans.
+    """
+    n = len(act_bytes)
+    act = [float(a) for a in act_bytes]
+    saved = [False] * n                    # becomes True once materialised
+    evicted = [False] * n
+    plan_ops = 0
+    live = fixed_bytes
+    for i in range(n):
+        live += act[i]
+        saved[i] = True
+        while live * frag_factor > budget + 1e-9:
+            candidates = [j for j in range(i) if saved[j] and not evicted[j]]
+            plan_ops += 1 + len(candidates)   # heuristic scan over tensors
+            if not candidates:
+                break
+            victim = max(candidates, key=lambda j: act[j])
+            evicted[victim] = True
+            saved[victim] = False
+            live -= act[victim]
+    return evicted, plan_ops

@@ -1,0 +1,95 @@
+"""Synthetic data pipeline with *input-size dynamics* (paper §2.1, Fig. 3).
+
+The whole point of Mimose is that real datasets produce mini-batches of
+varying token counts.  We reproduce the three length distributions the
+paper measures (Fig. 3) and the standard pad-to-bucket collation:
+
+  * ``swag``  — multiple choice, lengths ~ N(88, 18) clipped to [35, 141]
+  * ``squad`` — question answering, lengths ~ N(330, 60) clipped to [153, 512]
+  * ``qqp``   — text classification, power-law in [30, 332]
+
+Batches are padded up to a multiple of ``quantum`` tokens so that the
+number of distinct compiled shapes (and Mimose plan-cache entries) stays
+bounded, mirroring the paper's "similar sizes share plans" observation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LengthDistribution:
+    name: str
+    lo: int
+    hi: int
+    kind: str            # "normal" | "powerlaw" | "uniform"
+    mean: float = 0.0
+    std: float = 1.0
+    alpha: float = 2.0   # power-law exponent
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        if self.kind == "normal":
+            x = rng.normal(self.mean, self.std, n)
+        elif self.kind == "powerlaw":
+            u = rng.random(n)
+            x = self.lo * (1 - u) ** (-1.0 / (self.alpha - 1.0))
+        else:
+            x = rng.uniform(self.lo, self.hi, n)
+        return np.clip(np.round(x), self.lo, self.hi).astype(np.int32)
+
+
+DISTRIBUTIONS: Dict[str, LengthDistribution] = {
+    "swag": LengthDistribution("swag", 35, 141, "normal", mean=88, std=18),
+    "squad": LengthDistribution("squad", 153, 512, "normal", mean=330, std=60),
+    "qqp": LengthDistribution("qqp", 30, 332, "powerlaw", alpha=2.5),
+    "fixed": LengthDistribution("fixed", 128, 128, "uniform"),
+}
+
+
+def make_batches(dataset: str, *, batch_size: int, vocab_size: int,
+                 num_batches: int, quantum: int = 32,
+                 seed: int = 0,
+                 extra: Optional[dict] = None) -> Iterator[dict]:
+    """Yield padded mini-batches with dynamic sequence lengths.
+
+    Each batch dict has ``tokens`` (B, S), ``labels`` (B, S) (next-token),
+    and ``weights`` (B, S) zeroing the padding — S varies across batches.
+    """
+    dist = DISTRIBUTIONS[dataset]
+    rng = np.random.default_rng(seed)
+    for _ in range(num_batches):
+        lens = dist.sample(rng, batch_size)
+        max_len = int(lens.max())
+        S = ((max_len + quantum - 1) // quantum) * quantum
+        # learnable synthetic language: deterministic bigram successor
+        # (token_{t+1} = a*token_t + c mod V) from a random start, so the
+        # convergence benchmarks (paper Fig. 15) measure real learning.
+        start = rng.integers(1, vocab_size, (batch_size, 1), dtype=np.int64)
+        mult = 31 % (vocab_size - 1) or 1
+        tokens = np.empty((batch_size, S), dtype=np.int64)
+        tokens[:, 0] = start[:, 0]
+        for t in range(1, S):
+            tokens[:, t] = (tokens[:, t - 1] * mult + 7) % (vocab_size - 1) + 1
+        tokens = tokens.astype(np.int32)
+        weights = (np.arange(S)[None, :] < lens[:, None]).astype(np.float32)
+        tokens = tokens * weights.astype(np.int32)          # pad id 0
+        labels = np.roll(tokens, -1, axis=1)
+        labels[:, -1] = 0
+        batch = {"tokens": tokens, "labels": labels, "weights": weights,
+                 "lengths": lens}
+        if extra:
+            batch.update({k: v(batch_size, S) for k, v in extra.items()})
+        yield batch
+
+
+def epoch_sizes(dataset: str, batch_size: int, num_batches: int,
+                quantum: int = 32, seed: int = 0) -> np.ndarray:
+    """Just the padded input sizes of an epoch (for distribution plots)."""
+    return np.array([b["tokens"].size
+                     for b in make_batches(dataset, batch_size=batch_size,
+                                           vocab_size=100,
+                                           num_batches=num_batches,
+                                           quantum=quantum, seed=seed)])

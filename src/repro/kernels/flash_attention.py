@@ -1,0 +1,288 @@
+"""Blockwise flash attention for TPU (Pallas, explicit VMEM BlockSpecs).
+
+TPU adaptation of FlashAttention: rather than the CUDA shared-memory /
+warp formulation, tiles are chosen for the MXU (128-aligned q/k blocks)
+and staged HBM->VMEM by ``pl.pallas_call`` BlockSpecs.  The online
+softmax runs in fp32 on the VPU; the (q_block, k_block) score tile never
+leaves VMEM, so per-layer residual memory is O(S) — this is the kernel
+whose effect the Mimose estimator observes as the quadratic coefficient
+of its fitted memory curve collapsing to ~0 (see EXPERIMENTS.md §Perf).
+
+Layout: q (B, H, S, hd); k, v (B, Hkv, S, hd) — GQA is expressed in the
+kv index_map (query head h reads kv head h // group), so no repeat is
+materialised.
+
+Grid: (B, H, S // block_q); the k loop runs inside the kernel over
+block_k-sized VMEM slices.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int,
+                  causal: bool, window: int, sm_scale: float):
+    bq, hd = q_ref.shape[-2], q_ref.shape[-1]
+    Sk = k_ref.shape[-2]
+    qi = pl.program_id(2)
+
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale           # (bq, hd)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+
+    nkb = pl.cdiv(Sk, block_k)
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        k = pl.load(k_ref, (0, 0, pl.dslice(j * block_k, block_k),
+                            slice(None))).astype(jnp.float32)  # (bk, hd)
+        v = pl.load(v_ref, (0, 0, pl.dslice(j * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        k_pos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, block_k), 1)
+        mask = k_pos < Sk
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))      # (bq,)
+        correction = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * correction + jnp.sum(p, axis=-1)
+        acc = acc * correction[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc, m_cur, l_cur
+
+    # with causal masking, key blocks past this query block contribute nothing
+    upper = nkb if not causal else jnp.minimum(
+        nkb, pl.cdiv((qi + 1) * bq, block_k))
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, upper, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    lse_ref[0, 0] = m + jnp.log(jnp.maximum(l, 1e-30))
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False, return_lse: bool = False):
+    """q: (B, H, S, hd); k, v: (B, Hkv, S, hd) -> (B, H, S, hd) [, lse]."""
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    sm_scale = 1.0 / math.sqrt(hd)
+    grid = (B, H, pl.cdiv(S, block_q))
+
+    o, lse = pl.pallas_call(
+        functools.partial(_flash_kernel, block_k=block_k, causal=causal,
+                          window=window, sm_scale=sm_scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // group, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return (o, lse) if return_lse else o
+
+
+# ---------------------------------------------------------------------------
+# backward kernels: blockwise dq and dk/dv with the score tile recomputed
+# in VMEM from the saved (q, k, v, lse) — the FlashAttention-2 backward,
+# adapted to TPU grid semantics.  GQA: dk/dv are produced per *query*
+# head and reduced over the group outside the kernel.
+# ---------------------------------------------------------------------------
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                         dq_ref, *, block_k: int, causal: bool, window: int,
+                         sm_scale: float):
+    bq, hd = q_ref.shape[-2], q_ref.shape[-1]
+    Sk = k_ref.shape[-2]
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)                       # (bq, hd)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]                                       # (bq,)
+    delta = delta_ref[0, 0]                                   # (bq,)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+    nkb = pl.cdiv(Sk, block_k)
+    upper = nkb if not causal else jnp.minimum(
+        nkb, pl.cdiv((qi + 1) * bq, block_k))
+
+    def body(j, dq):
+        k = pl.load(k_ref, (0, 0, pl.dslice(j * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, 0, pl.dslice(j * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        s = sm_scale * jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        k_pos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, block_k), 1)
+        mask = k_pos < Sk
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)   # (bq, bk)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * sm_scale
+        return dq + jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+
+    dq = jax.lax.fori_loop(0, upper, body, jnp.zeros((bq, hd), jnp.float32))
+    dq_ref[0, 0] = dq.astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                          dk_ref, dv_ref, *, block_q: int, causal: bool,
+                          window: int, sm_scale: float):
+    bk, hd = k_ref.shape[-2], k_ref.shape[-1]
+    Sq = q_ref.shape[-2]
+    ki = pl.program_id(2)
+    k = k_ref[0, 0].astype(jnp.float32)                       # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (block_q, bk), 1)
+    nqb = pl.cdiv(Sq, block_q)
+    lower = 0 if not causal else ki * bk // block_q
+
+    def body(i, carry):
+        dk, dv = carry
+        q = pl.load(q_ref, (0, 0, pl.dslice(i * block_q, block_q),
+                            slice(None))).astype(jnp.float32)
+        do = pl.load(do_ref, (0, 0, pl.dslice(i * block_q, block_q),
+                              slice(None))).astype(jnp.float32)
+        lse = pl.load(lse_ref, (0, 0, pl.dslice(i * block_q, block_q)))
+        delta = pl.load(delta_ref, (0, 0, pl.dslice(i * block_q, block_q)))
+        s = sm_scale * jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (bq, bk)
+        q_pos = i * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, bk), 0)
+        mask = q_pos < Sq
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dv = dv + jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * sm_scale
+        dk = dk + jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+        return dk, dv
+
+    dk0 = jnp.zeros((bk, hd), jnp.float32)
+    dk, dv = jax.lax.fori_loop(lower, nqb, body, (dk0, dk0))
+    dk_ref[0, 0] = dk.astype(dk_ref.dtype)
+    dv_ref[0, 0] = dv.astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool, window: int,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False):
+    """Blockwise backward.  Returns (dq, dk, dv) with dk/dv group-reduced."""
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    sm_scale = 1.0 / math.sqrt(hd)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1)                                   # (B, H, S)
+
+    kv_spec = pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // group, 0, 0))
+    q_full = pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h, 0, 0))
+    row_full = pl.BlockSpec((1, 1, S), lambda b, h, i: (b, h, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, block_k=block_k,
+                          causal=causal, window=window, sm_scale=sm_scale),
+        grid=(B, H, pl.cdiv(S, block_q)),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
+            kv_spec, kv_spec,
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i: (b, h, i)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i: (b, h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # dk/dv per query head, reduced over the GQA group afterwards
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, block_q=block_q,
+                          causal=causal, window=window, sm_scale=sm_scale),
+        grid=(B, H, pl.cdiv(S, block_k)),
+        in_specs=[
+            q_full, kv_spec, kv_spec, q_full, row_full, row_full,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i: (b, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, S, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    dk = dk_h.reshape(B, Hkv, group, S, hd).sum(axis=2).astype(k.dtype)
+    dv = dv_h.reshape(B, Hkv, group, S, hd).sum(axis=2).astype(v.dtype)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom VJP: residuals are O(S) (q, k, v, o, lse) — the flash memory
+# signature.  Backward recomputes the score tiles blockwise in VMEM
+# (FlashAttention-2 backward, Pallas kernels above).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    interpret: bool = False):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, interpret):
+    o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 interpret=interpret, return_lse=True)
+    return o, (q, k, v, o, lse)
+
+
+def _bwd(causal, window, interpret, res, do):
+    q, k, v, o, lse = res
+    return flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                               window=window, interpret=interpret)
+
+
+flash_attention.defvjp(_fwd, _bwd)

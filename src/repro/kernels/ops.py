@@ -1,0 +1,47 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else (this CPU container,
+unit tests) they run in ``interpret=True`` mode, which executes the
+kernel body with jnp semantics — bit-identical control flow, so the
+allclose sweeps against ``ref.py`` validate the real kernel logic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, S, H, hd); k, v: (B, S, Hkv, hd) -> (B, S, H, hd).
+
+    (Model layout; transposed to the kernel's (B, H, S, hd) internally.)
+    """
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = _fa.flash_attention(qt, kt, vt, causal, window, not _on_tpu())
+    return o.transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64):
+    """Pads S to a chunk multiple and runs the Pallas SSD scan."""
+    B, S, H, P = x.shape
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y = _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=not _on_tpu())
+    return y[:, :S]

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the ground truth the kernels are validated against with
+``np.testing.assert_allclose`` across shape/dtype sweeps (see
+tests/test_kernels.py).  They are deliberately the simplest possible
+formulations — no chunking, no online softmax.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_reference(q, k, v, *, causal: bool = True,
+                              window: int = 0):
+    """q: (B, H, Sq, hd); k, v: (B, Hkv, Sk, hd).  GQA via head grouping.
+
+    Returns (B, H, Sq, hd).  window > 0 limits attention to the last
+    ``window`` positions (sliding window); causal masks the future.
+    """
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    group = H // Hkv
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)     # align ends (decode-style)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_reference(x, dt, A, B, C, initial_state=None):
+    """Naive O(S) sequential SSD recurrence (the definition).
+
+    x: (Bt, S, H, P); dt: (Bt, S, H); A: (H,); B, C: (Bt, S, N).
+    Returns (y (Bt,S,H,P), final_state (Bt,H,P,N)).
+
+      state_t = exp(dt_t * A) * state_{t-1} + dt_t * B_t x_t
+      y_t     = C_t . state_t
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    state = (jnp.zeros((Bt, H, P, N), jnp.float32) if initial_state is None
+             else initial_state.astype(jnp.float32))
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t].astype(jnp.float32) * A.astype(jnp.float32))
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, t].astype(jnp.float32),
+                         x[:, t].astype(jnp.float32),
+                         B[:, t].astype(jnp.float32))
+        state = state * dA[:, :, None, None] + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", state,
+                             C[:, t].astype(jnp.float32)))
+    y = jnp.stack(ys, axis=1)
+    return y.astype(x.dtype), state

@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) lowers,
+compiles, and fits — without hardware.
+
+The two lines above run before ANY other import (jax locks the device
+count at first initialisation); only this entry point sees 512 host
+devices — tests and benchmarks see the single real CPU device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --json out.jsonl
+    PYTHONPATH=src python -m repro.launch.dryrun --arch kimi-k2-1t-a32b \
+        --shape train_4k --multi-pod --remat all --zero1
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.config import INPUT_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyse
+from repro.launch.steps import build_setup, lower_setup, shape_applicable
+from repro.models.registry import ARCH_IDS, canonical, get_config
+
+ASSIGNED = [a for a in ARCH_IDS if a != "bert_base_paper"]
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
+            zero1: bool, seq_parallel: bool, logits_f32: bool,
+            unroll: bool = False, verbose: bool = True) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if unroll:
+        # XLA's cost analysis counts while-loop (lax.scan) bodies once,
+        # not x trip-count; roofline sweeps therefore lower the unrolled
+        # model.  (Compile-proof + memory sweeps keep the scanned form —
+        # it is both the production form and the realistic peak-memory
+        # one.)  See EXPERIMENTS.md §Dry-run.
+        cfg = dataclasses.replace(cfg, remat_mode="unrolled")
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    rec = {"arch": canonical(arch), "shape": shape_name, "mesh": mesh_name,
+           "remat": remat, "zero1": zero1, "seq_parallel": seq_parallel,
+           "logits_f32": logits_f32, "unroll": unroll}
+
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.time()
+        setup = build_setup(cfg, shape, mesh, remat=remat, zero1=zero1,
+                            seq_parallel=seq_parallel, logits_f32=logits_f32)
+        lowered = lower_setup(setup, mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        roof = analyse(compiled, arch=rec["arch"], shape_cfg=shape, cfg=cfg,
+                       mesh_name=mesh_name, chips=chips)
+        rec.update(status="ok", step=setup.name,
+                   lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                   flops_per_dev=roof.flops_per_dev,
+                   bytes_per_dev=roof.bytes_per_dev,
+                   coll_bytes_per_dev=roof.coll_bytes_per_dev,
+                   coll_breakdown={k: round(v) for k, v in
+                                   roof.coll_breakdown.items()},
+                   model_flops=roof.model_flops,
+                   remat_mask=("".join("1" if m else "0"
+                                       for m in setup.remat_mask)
+                               if setup.remat_mask else None),
+                   **roof.row())
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc(limit=8))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="sweep all assigned arch x shape pairs")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="mimose",
+                    choices=["none", "all", "mimose"])
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--logits-bf16", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="lower unrolled layers (accurate roofline flops)")
+    ap.add_argument("--json", default=None, help="append JSONL records here")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip pairs already recorded ok in --json")
+    args = ap.parse_args(argv)
+
+    done = set()
+    if args.resume and args.json and os.path.exists(args.json):
+        for line in open(args.json):
+            r = json.loads(line)
+            if r.get("status") in ("ok", "skipped"):
+                done.add((r["arch"], r["shape"], r["mesh"]))
+
+    pairs = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        pairs.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    out = open(args.json, "a") if args.json else None
+    n_fail = 0
+    for arch, shape in pairs:
+        for mp in meshes:
+            key = (canonical(arch), shape, "2x16x16" if mp else "16x16")
+            if key in done:
+                continue
+            rec = run_one(arch, shape, multi_pod=mp, remat=args.remat,
+                          zero1=args.zero1, seq_parallel=args.seq_parallel,
+                          logits_f32=not args.logits_bf16,
+                          unroll=args.unroll)
+            line = json.dumps(rec)
+            print(line, flush=True)
+            if out:
+                out.write(line + "\n")
+                out.flush()
+            if rec["status"] == "error":
+                n_fail += 1
+    if out:
+        out.close()
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+TPU v5e target: one pod = 256 chips as a (16, 16) = (data, model) mesh;
+two pods = 512 chips as (2, 16, 16) = (pod, data, model).
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax
+initialises; everything else sees the single real CPU device.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} present; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py sets this automatically)")
+    dev_array = np.array(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices exist (tests on CPU)."""
+    n = data * model
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.sharding.Mesh(np.array(devices).reshape(data, model),
+                             ("data", "model"))

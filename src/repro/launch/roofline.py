@@ -1,0 +1,163 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch × shape × mesh), TPU v5e constants:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bandwidth_per_chip
+    collective = collective_bytes_per_device / ICI_link_bandwidth
+
+``compiled.cost_analysis()`` reports *per-participating-device* FLOPs and
+bytes (verified empirically: a 2MKN matmul across 256 chips reports
+2MKN/256).  Collective bytes are parsed from the per-device SPMD HLO —
+we sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (all-reduce counted
+twice: reduce-scatter + all-gather equivalent traffic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# ---- TPU v5e constants (per task spec) ------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([\d,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+# tuple-shaped collectives: "= (f32[..], f32[..]) all-reduce(...)"
+_TUPLE_RE = re.compile(
+    r"=\s+\(((?:[a-z0-9]+\[[\d,]*\][^,)]*,?\s*)+)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved by each collective kind."""
+    out: Dict[str, float] = {}
+    seen_spans = []
+    for m in _TUPLE_RE.finditer(hlo_text):
+        total = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(m.group(1)))
+        kind = m.group(2)
+        out[kind] = out.get(kind, 0.0) + total
+        seen_spans.append(m.span())
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        if any(s <= m.start() < e for s, e in seen_spans):
+            continue
+        dtype, dims, kind = m.groups()
+        out[kind] = out.get(kind, 0.0) + _shape_bytes(dtype, dims)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_breakdown: Dict[str, float]
+    temp_bytes_per_dev: float
+    arg_bytes_per_dev: float
+    model_flops: float              # 6 * N_active * tokens (global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops aggregated over chips)."""
+        hlo_global = self.flops_per_dev * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def step_time_bound_s(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu_bound(self) -> float:
+        """MFU if the step ran exactly at the dominant roofline term."""
+        t = self.step_time_bound_s
+        if not t:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_ms": round(self.t_compute * 1e3, 3),
+            "t_memory_ms": round(self.t_memory * 1e3, 3),
+            "t_collective_ms": round(self.t_collective * 1e3, 3),
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": round(self.useful_flops_ratio, 3),
+            "mfu_bound": round(self.mfu_bound, 3),
+            "temp_gib_per_dev": round(self.temp_bytes_per_dev / 2**30, 2),
+            "arg_gib_per_dev": round(self.arg_bytes_per_dev / 2**30, 2),
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode counts one token/seq."""
+    n = cfg.active_param_count()
+    if shape.kind == "decode":
+        tokens = shape.global_batch          # one new token per sequence
+        return 2.0 * n * tokens              # forward only
+    tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def analyse(compiled, *, arch: str, shape_cfg, cfg, mesh_name: str,
+            chips: int) -> Roofline:
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    # all-reduce traffic ~ 2x payload (reduce-scatter + all-gather phases)
+    total_coll = sum(v * (2.0 if k == "all-reduce" else 1.0)
+                     for k, v in coll.items())
+    return Roofline(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        flops_per_dev=float(ca.get("flops", 0.0)),
+        bytes_per_dev=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes_per_dev=total_coll,
+        coll_breakdown=coll,
+        temp_bytes_per_dev=float(ma.temp_size_in_bytes),
+        arg_bytes_per_dev=float(ma.argument_size_in_bytes),
+        model_flops=model_flops_for(cfg, shape_cfg),
+    )

@@ -1,0 +1,195 @@
+"""Step builders + abstract input specs for every (arch × input shape).
+
+Everything here is allocation-free: parameters, optimizer state, batches
+and caches are ``jax.ShapeDtypeStruct`` stand-ins with NamedShardings, so
+``jax.jit(...).lower(...)`` traces the full-scale model without touching
+device memory.  Used by the multi-pod dry-run and the roofline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models.lm import LM, build_model
+from repro.optim.adamw import AdamW
+from repro.sharding import specs as SP
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.subquadratic():
+        return False, ("skipped: pure full-attention architecture; 500k-token "
+                       "decode requires sub-quadratic attention (DESIGN.md §4)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# abstract batch specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the mini-batch of this input shape."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        batch = {"tokens": _struct((B, 1), jnp.int32)}
+        if cfg.family == "encdec":
+            pass                      # cross-attn KV lives in the cache
+        return batch
+    # training / prefill
+    text_len = S
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm" and cfg.vision_tokens:
+        text_len = S - cfg.vision_tokens
+        batch["vision_embeds"] = _struct((B, cfg.vision_tokens, cfg.d_model),
+                                         jnp.dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        batch["frames"] = _struct((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    batch["tokens"] = _struct((B, text_len), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = _struct((B, text_len), jnp.int32)
+        batch["weights"] = _struct((B, text_len), jnp.float32)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# remat plan for the dry-run
+# ---------------------------------------------------------------------------
+
+def plan_remat_mask(lm: LM, params_struct, batch_struct, *,
+                    mode: str, mesh: Mesh,
+                    hbm_per_chip: float = 16 * 2**30) -> Tuple[bool, ...]:
+    n = lm.num_plan_units()
+    if mode == "none":
+        return tuple([False] * n)
+    if mode == "all":
+        return tuple([True] * n)
+    # mode == "mimose": run the input-aware planner abstractly at scale.
+    from repro.core.planner import MimosePlanner
+    data_ways = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                             if a != "model"]))
+    planner = MimosePlanner(lm, hbm_per_chip, shard_divisor=data_ways,
+                            warmup_samples=1, quantum=1)
+    mask, _ = planner.plan(params_struct, batch_struct)
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# setups: (step_fn, example_args, in_shardings, out_shardings)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Setup:
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    remat_mask: Optional[tuple] = None
+
+
+def build_setup(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                remat: str = "mimose", zero1: bool = False,
+                seq_parallel: bool = False, logits_f32: bool = True,
+                attn_replicated: bool = False,
+                prefill_last_only: bool = False,
+                remat_policy: str = "",
+                expert_2d: bool = False,
+                attn_impl: str = "xla") -> Setup:
+    lm = build_model(arch_cfg, attn_impl=attn_impl)
+    lm.logits_f32 = logits_f32
+    if prefill_last_only and shape.kind == "prefill":
+        lm.last_logits_only = True
+    if seq_parallel:
+        lm.act_sharding = NamedSharding(mesh, P(
+            ("pod", "data") if "pod" in mesh.axis_names else "data",
+            "model", None))
+
+    params_struct = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    p_sh = SP.params_shardings(params_struct, mesh,
+                               scanned=arch_cfg.remat_mode == "scan",
+                               attn_replicated=attn_replicated,
+                               expert_2d=expert_2d)
+    batch = input_specs(arch_cfg, shape)
+    shard_seq = shape.name == "long_500k"
+    b_sh = SP.batch_shardings(batch, mesh, shard_sequence=False)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt = AdamW()
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        o_sh = SP.opt_state_shardings(p_sh, opt_struct, mesh, zero1=zero1)
+        mask = plan_remat_mask(lm, params_struct, batch, mode=remat, mesh=mesh)
+        policy = (getattr(jax.checkpoint_policies, remat_policy)
+                  if remat_policy else None)
+
+        def train_step(params, opt_state, b):
+            def loss_fn(p):
+                return lm.loss(p, b, remat_mask=mask, remat_policy=policy)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            new_p, new_o = opt.update(grads, opt_state, params)
+            return new_p, new_o, loss
+
+        return Setup("train_step", train_step,
+                     (params_struct, opt_struct, batch),
+                     (p_sh, o_sh, b_sh), (p_sh, o_sh, repl),
+                     donate_argnums=(0, 1), remat_mask=mask)
+
+    if shape.kind == "prefill":
+        data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        vocab_ax = ("model" if arch_cfg.vocab_size % mesh.shape["model"] == 0
+                    else None)
+        logits_sh = NamedSharding(
+            mesh, P(data_axes if len(data_axes) > 1 else data_axes[0],
+                    None, vocab_ax))
+
+        def prefill_step(params, b):
+            logits, _ = lm.forward(params, b)
+            return logits
+
+        return Setup("prefill_step", prefill_step, (params_struct, batch),
+                     (p_sh, b_sh), logits_sh)
+
+    # decode ---------------------------------------------------------------
+    B = shape.global_batch
+    cache_struct = jax.eval_shape(
+        lambda: lm.init_cache(B, shape.seq_len))
+    c_sh = SP.cache_shardings(cache_struct, mesh,
+                              stacked=arch_cfg.remat_mode == "scan",
+                              shard_sequence=shard_seq)
+    if shard_seq:
+        # long_500k: batch=1, the (1, 1) tokens stay replicated; the KV /
+        # SSM caches carry the sequence sharding instead
+        b_sh = jax.tree_util.tree_map(lambda _: repl, batch)
+    else:
+        b_sh = SP.batch_shardings(batch, mesh)
+    index_struct = _struct((), jnp.int32)
+
+    def serve_step(params, b, cache, index):
+        logits, new_cache = lm.decode_step(params, b["tokens"], cache, index)
+        return logits, new_cache
+
+    return Setup("serve_step", serve_step,
+                 (params_struct, batch, cache_struct, index_struct),
+                 (p_sh, b_sh, c_sh, repl), (repl, c_sh),
+                 donate_argnums=(2,))
+
+
+def lower_setup(setup: Setup, mesh: Mesh):
+    with mesh:
+        jitted = jax.jit(setup.fn,
+                         in_shardings=setup.in_shardings,
+                         out_shardings=setup.out_shardings,
+                         donate_argnums=setup.donate_argnums)
+        return jitted.lower(*setup.args)

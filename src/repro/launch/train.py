@@ -1,0 +1,95 @@
+"""End-to-end training driver with the Mimose planner on the critical path.
+
+CPU-runnable example (reduced scale):
+    PYTHONPATH=src python -m repro.launch.train --arch bert_base_paper \
+        --dataset swag --planner mimose --budget-mb 600 --steps 50 --reduced
+
+At full scale the same driver runs under a mesh (see launch/dryrun.py for
+the abstract multi-pod validation of exactly this step function).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DTRSimPlanner, MimosePlanner, NonePlanner,
+                        SublinearPlanner)
+from repro.data.pipeline import DISTRIBUTIONS, make_batches
+from repro.models.lm import build_model
+from repro.models.registry import get_config
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.train import checkpoint as ckpt
+from repro.train.trainer import Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bert_base_paper")
+    ap.add_argument("--dataset", default="swag", choices=list(DISTRIBUTIONS))
+    ap.add_argument("--planner", default="mimose",
+                    choices=["mimose", "sublinear", "dtr", "none"])
+    ap.add_argument("--budget-mb", type=float, default=0.0,
+                    help="GPU/TPU memory budget; 0 = unlimited")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--quantum", type=int, default=32)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced model variant (CPU demo)")
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(num_layers=4, d_model=256, d_ff=512,
+                          vocab_size=1024, dtype="float32")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M "
+          f"units={lm.num_plan_units()}")
+
+    budget = args.budget_mb * 2**20 if args.budget_mb else 1e18
+    dist = DISTRIBUTIONS[args.dataset]
+    max_size = args.batch_size * ((dist.hi + args.quantum - 1)
+                                  // args.quantum) * args.quantum
+    planner = {
+        "mimose": lambda: MimosePlanner(lm, budget, quantum=args.quantum,
+                                        warmup_samples=3),
+        "sublinear": lambda: SublinearPlanner(lm, budget,
+                                              max_input_size=max_size),
+        "dtr": lambda: DTRSimPlanner(lm, budget),
+        "none": lambda: NonePlanner(lm),
+    }[args.planner]()
+
+    opt = AdamW(lr=cosine_schedule(args.lr, 10, args.steps))
+    trainer = Trainer(lm, planner, opt)
+    batches = make_batches(args.dataset, batch_size=args.batch_size,
+                           vocab_size=cfg.vocab_size,
+                           num_batches=args.steps, quantum=args.quantum,
+                           seed=0)
+    t0 = time.time()
+    opt_state = opt.init(params)
+    for i, batch in enumerate(batches):
+        params, opt_state, loss = trainer.step(params, opt_state, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            st = trainer.history[-1]
+            print(f"step {i:4d} loss {loss:.4f} S={batch['tokens'].shape[1]}"
+                  f" remat={st.remat_units} step_s={st.step_time_s:.3f}")
+    print(f"done in {time.time() - t0:.1f}s")
+    print("summary:", trainer.summary())
+    if hasattr(planner, "stats"):
+        print("planner:", planner.stats, "plans cached:",
+              len(getattr(planner, "cache", {})))
+    if args.save:
+        ckpt.save(args.save, params)
+        print("saved", args.save)
+
+
+if __name__ == "__main__":
+    main()

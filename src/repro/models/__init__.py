@@ -1,0 +1,1 @@
+from repro.models.lm import LM, build_model, PlanUnit, block_apply, block_init  # noqa: F401

@@ -1,0 +1,47 @@
+"""Hymba-style hybrid block: parallel attention + SSM heads  [arXiv:2411.13676].
+
+The input projection feeds both an attention path and a Mamba2/SSD path in
+parallel within the same layer; their (normalised) outputs are averaged
+before the residual add.  We implement the two paths with the shared
+attention / mamba2 modules and a learned per-path output scale, which is
+the TPU-friendly simplification of Hymba's per-head fusion (noted in
+DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+Array = jax.Array
+
+
+def hymba_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    ka, km = jax.random.split(key)
+    return {
+        "attn": L.attention_init(ka, cfg, dtype),
+        "ssm": M.mamba2_init(km, cfg, dtype),
+        "attn_scale": jnp.ones((), jnp.float32),
+        "ssm_scale": jnp.ones((), jnp.float32),
+    }
+
+
+def hymba_apply(params: dict, cfg: ModelConfig, x: Array, *,
+                positions: Array, layer_is_global=False,
+                kv_cache=None, cache_index=None,
+                ssm_state=None, conv_state=None,
+                decode: bool = False, impl: str = "xla"):
+    """Returns (out, new_kv_cache, (new_ssm_state, new_conv_state))."""
+    attn_out, new_kv = L.attention_apply(
+        params["attn"], cfg, x, positions=positions,
+        layer_is_global=layer_is_global, kv_cache=kv_cache,
+        cache_index=cache_index, impl=impl)
+    ssm_out, (new_ssm, new_conv) = M.mamba2_apply(
+        params["ssm"], cfg, x, ssm_state=ssm_state, conv_state=conv_state,
+        decode=decode)
+    out = (params["attn_scale"] * attn_out.astype(jnp.float32)
+           + params["ssm_scale"] * ssm_out.astype(jnp.float32)) * 0.5
+    return out.astype(x.dtype), new_kv, (new_ssm, new_conv)

@@ -1,0 +1,292 @@
+"""Core neural-net layers shared by all model families.
+
+Pure-JAX (no flax): parameters are nested dicts of ``jnp.ndarray``;
+every layer is an ``init(key, cfg, ...) -> params`` plus a pure
+``apply(params, x, ...) -> y`` pair.  All shapes follow
+``(batch, seq, d_model)``.
+
+Attention supports:
+  * grouped-query attention (num_kv_heads <= num_heads)
+  * RoPE and multimodal M-RoPE (qwen2-vl style 3-section rotary)
+  * causal, sliding-window, and per-layer local/global masks (gemma3)
+  * qk-norm (qwen3)
+  * an optional Pallas flash-attention implementation (``impl='flash'``)
+    whose custom VJP saves only O(seq) residuals -- this is what the
+    Mimose collector observes as a linear memory curve.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# initialisation helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, d_in: int, d_out: int, dtype) -> Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm_apply(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions: Array, theta: float,
+                sections: tuple) -> Array:
+    """Multimodal RoPE (qwen2-vl).  positions: (3, B, S) for (t, h, w).
+
+    The head_dim/2 frequency slots are split into ``sections`` groups,
+    each rotated by its own positional stream.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    # build per-slot position: slot j uses stream according to its section
+    sec = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])                                                   # (hd/2,)
+    sec = sec[: hd // 2]
+    # pos_per_slot: (B, S, hd/2)
+    pos = jnp.take_along_axis(
+        positions.transpose(1, 2, 0).astype(jnp.float32),       # (B, S, 3)
+        jnp.broadcast_to(sec[None, None, :], positions.shape[1:] + (hd // 2,)).astype(jnp.int32) % 3,
+        axis=-1,
+    )
+    angles = pos * freqs                                 # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim()
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(kk, d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(kv, d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ko, cfg.num_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _build_mask(q_pos: Array, k_pos: Array, window, is_global) -> Array:
+    """(..., Sq, Sk) boolean mask.  window: python int or traced scalar;
+    is_global: bool scalar (python or traced) -- global layers ignore window."""
+    causal = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is None or (isinstance(window, int) and window <= 0):
+        return causal
+    in_window = (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    if isinstance(is_global, bool):
+        return causal if is_global else (causal & in_window)
+    # traced per-layer flag (scan over gemma3 local/global pattern)
+    return causal & (is_global | in_window)
+
+
+def sdpa_banded_local(q: Array, k: Array, v: Array, window: int) -> Array:
+    """Sliding-window attention with O(S * 2W) score tiles (vs O(S^2)).
+
+    q, k, v: (B, S, H|Hkv, hd) with S % window == 0 and S >= 2 * window.
+    Each query block of W tokens attends to its own block and the previous
+    one — exactly the causal sliding-window mask, but the masked-out
+    far-past columns are never materialised.  This is the XLA-native
+    counterpart of the Pallas flash kernel's banding (EXPERIMENTS.md §Perf).
+    """
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    W = window
+    nb = S // W
+    qb = q.reshape(B, nb, W, Hkv, group, hd)
+    kb = k.reshape(B, nb, W, Hkv, hd)
+    vb = v.reshape(B, nb, W, Hkv, hd)
+    # previous block (zeros before block 0)
+    kprev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :nb]
+    vprev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :nb]
+    k2 = jnp.concatenate([kprev, kb], axis=2)          # (B, nb, 2W, Hkv, hd)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    logits = jnp.einsum("bnqkgh,bnskh->bnkgqs", qb, k2,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    # in-band mask: query pos a (0..W), key pos b-W relative to block start
+    a = jnp.arange(W)[:, None]
+    b = jnp.arange(2 * W)[None, :] - W
+    mask = (a >= b) & ((a - b) < W)                    # causal + window
+    first = jnp.arange(2 * W)[None, :] >= W            # block 0: no prev
+    mask0 = mask & first
+    m = jnp.where(jnp.arange(nb)[:, None, None] == 0, mask0[None], mask[None])
+    logits = jnp.where(m[None, :, None, None], logits,
+                       jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnkgqs,bnskh->bnqkgh", probs.astype(v.dtype), v2)
+    return out.reshape(B, S, H, hd)
+
+
+def sdpa_reference(q: Array, k: Array, v: Array, mask: Array) -> Array:
+    """Plain XLA attention with GQA. q:(B,Sq,H,hd) k,v:(B,Sk,Hkv,hd)
+    mask: broadcastable to (B,1,Sq,Sk) boolean."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    q_ = q.reshape(B, Sq, Hkv, group, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q_, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / math.sqrt(hd)
+    m = mask[:, None, None, :, :] if mask.ndim == 3 else mask[None, None, None, :, :]
+    logits = jnp.where(m, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention_apply(params: dict, cfg: ModelConfig, x: Array, *,
+                    positions: Array,
+                    layer_is_global=True,
+                    kv_cache: Optional[dict] = None,
+                    cache_index: Optional[Array] = None,
+                    impl: str = "xla",
+                    mrope_positions: Optional[Array] = None,
+                    cross_kv: Optional[tuple] = None,
+                    causal: bool = True):
+    """Returns (out, new_kv_cache).
+
+    * training / prefill: kv_cache is None -> full self attention.
+    * decode: kv_cache = {'k': (B,Smax,Hkv,hd), 'v': ...}, cache_index is the
+      current length; x has Sq==1.
+    * cross attention: cross_kv = (k, v) precomputed from the encoder.
+    """
+    B, Sq, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    q = (x @ params["wq"]).reshape(B, Sq, cfg.num_heads, hd)
+    if cross_kv is None:
+        k = (x @ params["wk"]).reshape(B, Sq, cfg.num_kv_heads, hd)
+        v = (x @ params["wv"]).reshape(B, Sq, cfg.num_kv_heads, hd)
+    else:
+        k, v = cross_kv
+
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q, cfg.norm_eps)
+        if cross_kv is None:
+            k = rmsnorm_apply(params["k_norm"], k, cfg.norm_eps)
+
+    if cross_kv is None:
+        if cfg.mrope and mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        # decode: insert new k/v at cache_index
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        Sk = k.shape[1]
+        k_pos = jnp.arange(Sk)[None, :]
+        q_pos = positions                                  # (B, 1)
+        valid = k_pos <= q_pos[..., :, None][..., 0, :]     # (B, Sk) keys written so far
+        mask = _build_mask(q_pos, jnp.broadcast_to(k_pos, (B, Sk)), cfg.sliding_window,
+                           layer_is_global) & valid[:, None, :]
+    elif cross_kv is not None or not causal:
+        Sk = k.shape[1]
+        mask = jnp.ones((B, Sq, Sk), dtype=bool)
+    else:
+        mask = _build_mask(positions, positions, cfg.sliding_window, layer_is_global)
+
+    W = cfg.sliding_window
+    is_local = (isinstance(layer_is_global, bool) and not layer_is_global
+                and W > 0)
+    if impl == "flash" and kv_cache is None and cross_kv is None:
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.flash_attention(q, k, v, causal=True,
+                                         window=W if is_local else 0)
+    elif (is_local and kv_cache is None and cross_kv is None and causal
+          and Sq % W == 0 and Sq >= 2 * W):
+        out = sdpa_banded_local(q, k, v, W)    # O(S*2W) instead of O(S^2)
+    else:
+        out = sdpa_reference(q, k, v, mask)
+
+    out = out.reshape(B, Sq, cfg.num_heads * hd) @ params["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: Array, d: int, ff: int, act: str, dtype) -> dict:
+    if act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"wi": dense_init(k1, d, ff, dtype),
+                "wg": dense_init(k2, d, ff, dtype),
+                "wo": dense_init(k3, ff, d, dtype)}
+    k1, k2 = jax.random.split(key, 2)
+    return {"wi": dense_init(k1, d, ff, dtype),
+            "wo": dense_init(k2, ff, d, dtype)}
+
+
+def mlp_apply(params: dict, x: Array, act: str) -> Array:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ params["wi"])
+    else:
+        h = jax.nn.relu(x @ params["wi"])
+    return h @ params["wo"]

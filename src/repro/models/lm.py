@@ -1,0 +1,572 @@
+"""The shared language-model shell for every assigned architecture.
+
+A model is: embedding -> N plannable blocks -> final norm -> lm head.
+Families differ only in what a block contains (attention+MLP, MoE, SSD
+mixer, hybrid, encoder/decoder).  The Mimose planner sees the model as an
+ordered list of *plan units* (= blocks in ``unrolled`` mode, layer-chunks
+in ``scan`` mode) and decides which units to rematerialise.
+
+Public surface:
+    lm = LM(cfg, attn_impl="xla")
+    params = lm.init(key)
+    logits, aux = lm.forward(params, batch, remat_mask)
+    loss, metrics = lm.loss(params, batch, remat_mask)
+    cache = lm.init_cache(batch_size, max_len, dtype)
+    logits, cache = lm.decode_step(params, tokens, cache, index)
+    units = lm.plan_units(params, batch)   # for the Mimose collector
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models import hymba as HY
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# per-family block init / apply
+# ---------------------------------------------------------------------------
+
+def _block_kind(cfg: ModelConfig, decoder: bool = True) -> str:
+    if not decoder:
+        return "enc"
+    if cfg.family == "moe":
+        return "moe"
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    if cfg.family == "encdec":
+        return "dec"
+    return "dense"
+
+
+def block_init(key: Array, cfg: ModelConfig, kind: str, dtype) -> dict:
+    d = cfg.d_model
+    keys = jax.random.split(key, 6)
+    p: dict = {"norm1": L.rmsnorm_init(d, dtype)}
+    if kind == "ssm":
+        p["ssm"] = M.mamba2_init(keys[0], cfg, dtype)
+        if cfg.d_ff:
+            p["norm2"] = L.rmsnorm_init(d, dtype)
+            p["mlp"] = L.mlp_init(keys[1], d, cfg.d_ff, cfg.mlp_act, dtype)
+        return p
+    if kind == "hybrid":
+        p["mixer"] = HY.hymba_init(keys[0], cfg, dtype)
+        p["norm2"] = L.rmsnorm_init(d, dtype)
+        p["mlp"] = L.mlp_init(keys[1], d, cfg.d_ff, cfg.mlp_act, dtype)
+        return p
+    # attention-bearing kinds
+    p["attn"] = L.attention_init(keys[0], cfg, dtype)
+    if kind == "dec":
+        p["norm_cross"] = L.rmsnorm_init(d, dtype)
+        p["cross"] = L.attention_init(keys[2], cfg, dtype)
+    p["norm2"] = L.rmsnorm_init(d, dtype)
+    if kind == "moe":
+        p["moe"] = MOE.moe_init(keys[1], cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(keys[1], d, cfg.d_ff, cfg.mlp_act, dtype)
+    return p
+
+
+def block_apply(params: dict, cfg: ModelConfig, x: Array, kind: str, *,
+                positions: Array,
+                layer_is_global=True,
+                cache: Optional[dict] = None,
+                cache_index: Optional[Array] = None,
+                decode: bool = False,
+                enc_out: Optional[Array] = None,
+                mrope_positions: Optional[Array] = None,
+                impl: str = "xla",
+                ) -> Tuple[Array, Optional[dict], Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Array] = {}
+    eps = cfg.norm_eps
+
+    if kind == "ssm":
+        h, (new_ssm, new_conv) = M.mamba2_apply(
+            params["ssm"], cfg, L.rmsnorm_apply(params["norm1"], x, eps),
+            ssm_state=None if cache is None else cache["ssm"],
+            conv_state=None if cache is None else cache["conv"],
+            decode=decode)
+        x = x + h
+        if cache is not None:
+            new_cache.update(ssm=new_ssm, conv=new_conv)
+        if cfg.d_ff:
+            x = x + L.mlp_apply(params["mlp"],
+                                L.rmsnorm_apply(params["norm2"], x, eps),
+                                cfg.mlp_act)
+        return x, (new_cache or None), aux
+
+    if kind == "hybrid":
+        h, new_kv, (new_ssm, new_conv) = HY.hymba_apply(
+            params["mixer"], cfg, L.rmsnorm_apply(params["norm1"], x, eps),
+            positions=positions, layer_is_global=layer_is_global,
+            kv_cache=None if cache is None else {"k": cache["k"], "v": cache["v"]},
+            cache_index=cache_index,
+            ssm_state=None if cache is None else cache["ssm"],
+            conv_state=None if cache is None else cache["conv"],
+            decode=decode, impl=impl)
+        x = x + h
+        if cache is not None:
+            new_cache.update(k=new_kv["k"], v=new_kv["v"], ssm=new_ssm, conv=new_conv)
+        x = x + L.mlp_apply(params["mlp"],
+                            L.rmsnorm_apply(params["norm2"], x, eps), cfg.mlp_act)
+        return x, (new_cache or None), aux
+
+    # attention-bearing blocks -------------------------------------------
+    h, new_kv = L.attention_apply(
+        params["attn"], cfg, L.rmsnorm_apply(params["norm1"], x, eps),
+        positions=positions, layer_is_global=layer_is_global,
+        kv_cache=None if cache is None else {"k": cache["k"], "v": cache["v"]},
+        cache_index=cache_index, impl=impl,
+        mrope_positions=mrope_positions,
+        causal=(kind != "enc"))
+    x = x + h
+    if new_kv is not None:
+        new_cache.update(k=new_kv["k"], v=new_kv["v"])
+
+    if kind == "dec":
+        # cross attention over encoder output (k/v projected here, or cached)
+        hx = L.rmsnorm_apply(params["norm_cross"], x, eps)
+        if cache is not None and "ck" in cache:
+            ck, cv = cache["ck"], cache["cv"]
+            new_cache.update(ck=ck, cv=cv)
+        else:
+            B, F = enc_out.shape[0], enc_out.shape[1]
+            hd = cfg.resolved_head_dim()
+            ck = (enc_out @ params["cross"]["wk"]).reshape(B, F, cfg.num_kv_heads, hd)
+            cv = (enc_out @ params["cross"]["wv"]).reshape(B, F, cfg.num_kv_heads, hd)
+            if cache is not None:
+                new_cache.update(ck=ck, cv=cv)
+        hc, _ = L.attention_apply(params["cross"], cfg, hx,
+                                  positions=positions, cross_kv=(ck, cv))
+        x = x + hc
+
+    h2 = L.rmsnorm_apply(params["norm2"], x, eps)
+    if kind == "moe":
+        mo, aux = MOE.moe_apply(params["moe"], cfg, h2)
+        x = x + mo
+    else:
+        x = x + L.mlp_apply(params["mlp"], h2, cfg.mlp_act)
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# plan units
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlanUnit:
+    """One schedulable unit: a block (unrolled) or a layer chunk (scan)."""
+    name: str
+    index: int                     # forward timestamp order
+    params: Any
+    apply: Callable[[Any, Array], Array]   # pure fn(params, x) -> x
+    flops: float = 0.0             # analytic forward flops (filled by collector)
+
+
+# ---------------------------------------------------------------------------
+# the LM shell
+# ---------------------------------------------------------------------------
+
+class LM:
+    def __init__(self, cfg: ModelConfig, attn_impl: str = "xla"):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.kind = _block_kind(cfg)
+        self.dtype = jnp.dtype(cfg.dtype)
+        # perf knobs (set by the launcher; see EXPERIMENTS.md §Perf):
+        # Megatron-style sequence-parallel residual stream — shard the
+        # seq axis of the inter-block activations over the model axis.
+        self.act_sharding = None          # NamedSharding or None
+        # keep logits in bf16 (CE reductions still accumulate in f32)
+        self.logits_f32 = True
+        # prefill: emit logits for the last position only (serving needs
+        # nothing else; full-sequence logits dominate prefill memory)
+        self.last_logits_only = False
+
+    def _constrain(self, x: Array) -> Array:
+        if self.act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, self.act_sharding)
+        return x
+
+    # -- init -------------------------------------------------------------
+    def init(self, key: Array) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        keys = jax.random.split(key, cfg.num_layers + cfg.encoder_layers + 3)
+        params: dict = {
+            "embed": L.embed_init(keys[-1], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(keys[-2], cfg.d_model,
+                                             cfg.vocab_size, dt)
+        blocks = [block_init(keys[i], cfg, self.kind, dt)
+                  for i in range(cfg.num_layers)]
+        if cfg.remat_mode == "scan":
+            params["blocks"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *blocks)
+        else:
+            params["blocks"] = blocks
+        if cfg.encoder_layers:
+            enc = [block_init(keys[cfg.num_layers + i], cfg, "enc", dt)
+                   for i in range(cfg.encoder_layers)]
+            params["encoder"] = {
+                "blocks": enc,
+                "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+            }
+        return params
+
+    # -- per-layer local/global flags (gemma3 pattern) ----------------------
+    def _is_global(self, i: int) -> bool:
+        g = self.cfg.global_interval
+        if not self.cfg.sliding_window:
+            return True
+        if not g:
+            return False              # uniform sliding window
+        return (i + 1) % g == 0
+
+    def _global_flags(self) -> Array:
+        return jnp.array([self._is_global(i) for i in range(self.cfg.num_layers)])
+
+    # -- embedding / positions -------------------------------------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, St = tokens.shape
+        x = params["embed"][tokens]
+        mrope_positions = None
+        if cfg.family == "vlm" and cfg.vision_tokens:
+            ve = batch["vision_embeds"].astype(x.dtype)      # (B, vt, d)
+            x = jnp.concatenate([ve, x], axis=1)
+            vt = cfg.vision_tokens
+            side = max(int(math.sqrt(vt)), 1)
+            S = vt + St
+            if cfg.mrope:
+                idx = jnp.arange(vt)
+                tpos = jnp.zeros((vt,), jnp.int32)
+                hpos = (idx // side).astype(jnp.int32)
+                wpos = (idx % side).astype(jnp.int32)
+                text = jnp.arange(St, dtype=jnp.int32) + side
+                three = jnp.stack([
+                    jnp.concatenate([tpos, text]),
+                    jnp.concatenate([hpos, text]),
+                    jnp.concatenate([wpos, text]),
+                ])                                            # (3, S)
+                mrope_positions = jnp.broadcast_to(three[:, None, :], (3, B, S))
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        else:
+            positions = batch.get("positions")
+            if positions is None:
+                positions = jnp.broadcast_to(
+                    jnp.arange(St, dtype=jnp.int32), (B, St))
+        return x, positions, mrope_positions
+
+    def _encode(self, params, batch, remat_enc=None):
+        """Run the (bidirectional) encoder over stub frame embeddings."""
+        cfg = self.cfg
+        frames = batch["frames"].astype(self.dtype)          # (B, F, d)
+        B, F, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+        x = frames
+        for i, bp in enumerate(params["encoder"]["blocks"]):
+            def one(p, xx):
+                y, _, _ = block_apply(p, cfg, xx, "enc", positions=pos,
+                                      impl=self.attn_impl)
+                return y
+            if remat_enc is not None and remat_enc[i]:
+                one = jax.checkpoint(one)
+            x = one(bp, x)
+        return L.rmsnorm_apply(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+    # -- forward -----------------------------------------------------------
+    def forward(self, params, batch, remat_mask=None,
+                remat_policy=None) -> Tuple[Array, Array]:
+        """remat_mask: bool sequence over plan units (blocks or chunks)."""
+        cfg = self.cfg
+        x, positions, mrope_positions = self._embed_inputs(params, batch)
+        aux = jnp.zeros((), jnp.float32)
+
+        n_units = self.num_plan_units()
+        if remat_mask is None:
+            remat_mask = [False] * n_units
+        remat_mask = list(remat_mask)
+        assert len(remat_mask) == n_units, (len(remat_mask), n_units)
+
+        enc_out = None
+        enc_units = self._num_enc_units()
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, batch, remat_enc=remat_mask[:enc_units])
+        dec_mask = remat_mask[enc_units:]
+
+        if cfg.remat_mode == "scan":
+            x, aux = self._forward_scan(params, x, positions, dec_mask,
+                                        enc_out, mrope_positions, remat_policy)
+        else:
+            for i, bp in enumerate(params["blocks"]):
+                def one(p, xx):
+                    y, _, a = block_apply(
+                        p, cfg, xx, self.kind, positions=positions,
+                        layer_is_global=self._is_global(i),
+                        enc_out=enc_out, mrope_positions=mrope_positions,
+                        impl=self.attn_impl)
+                    return y, a
+                if dec_mask[i]:
+                    one = jax.checkpoint(one, policy=remat_policy)
+                x, a = one(bp, x)
+                x = self._constrain(x)
+                aux = aux + a
+
+        if self.last_logits_only:
+            x = x[:, -1:]
+        x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = x @ head
+        if self.logits_f32:
+            logits = logits.astype(jnp.float32)
+        return logits, aux
+
+    def _forward_scan(self, params, x, positions, chunk_mask, enc_out,
+                      mrope_positions, remat_policy):
+        cfg = self.cfg
+        bounds = self._chunk_bounds()
+        aux = jnp.zeros((), jnp.float32)
+
+        def make_body(flag):
+            # ``flag`` is a STATIC python bool (chunks are type-homogeneous)
+            # so local chunks take the banded sliding-window path.
+            def body(carry, p_i):
+                xx, ax = carry
+                y, _, a = block_apply(p_i, cfg, xx, self.kind,
+                                      positions=positions,
+                                      layer_is_global=flag,
+                                      enc_out=enc_out,
+                                      mrope_positions=mrope_positions,
+                                      impl=self.attn_impl)
+                y = self._constrain(y)
+                return (y, ax + a), None
+            return body
+
+        for c, (s, e) in enumerate(bounds):
+            p_chunk = jax.tree_util.tree_map(lambda a: a[s:e], params["blocks"])
+            body = make_body(self._chunk_flag(s, e))
+            bfn = (jax.checkpoint(body, policy=remat_policy)
+                   if chunk_mask[c] else body)
+            (x, aux), _ = jax.lax.scan(bfn, (x, aux), p_chunk)
+        return x, aux
+
+    def _chunk_bounds(self) -> List[Tuple[int, int]]:
+        L_ = self.cfg.num_layers
+        if self.cfg.sliding_window and self.cfg.global_interval:
+            # type-homogeneous chunks (runs of local layers + global
+            # singletons) so the local/global flag is STATIC per chunk and
+            # local chunks can take the banded-attention path.
+            bounds, s = [], 0
+            for i in range(L_):
+                if self._is_global(i):
+                    if i > s:
+                        bounds.append((s, i))
+                    bounds.append((i, i + 1))
+                    s = i + 1
+            if s < L_:
+                bounds.append((s, L_))
+            return bounds
+        K = max(1, min(self.cfg.scan_chunks, L_))
+        step = math.ceil(L_ / K)
+        return [(s, min(s + step, L_)) for s in range(0, L_, step)]
+
+    def _chunk_flag(self, s: int, e: int) -> bool:
+        """Static local/global flag for a type-homogeneous chunk."""
+        flags = {self._is_global(i) for i in range(s, e)}
+        if len(flags) == 1:
+            return flags.pop()
+        return True        # mixed chunk (no banding): treat as global/full
+
+    def _num_enc_units(self) -> int:
+        return self.cfg.encoder_layers
+
+    def num_plan_units(self) -> int:
+        if self.cfg.remat_mode == "scan":
+            return self._num_enc_units() + len(self._chunk_bounds())
+        return self._num_enc_units() + self.cfg.num_layers
+
+    # -- loss ---------------------------------------------------------------
+    def loss(self, params, batch, remat_mask=None, remat_policy=None):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, remat_mask, remat_policy)
+        labels = batch["labels"]
+        if cfg.family == "vlm" and cfg.vision_tokens:
+            logits = logits[:, cfg.vision_tokens:]           # text positions only
+        weights = batch.get("weights")
+        if weights is None:
+            weights = jnp.ones(labels.shape, jnp.float32)
+        # sharding-friendly cross entropy: the vocab axis of ``logits`` is
+        # model-sharded, so avoid take_along_axis (which would all-gather
+        # the full logits).  one_hot contracts the vocab axis locally and
+        # reduces across the model axis instead.
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+        label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot,
+                                 preferred_element_type=jnp.float32)
+        nll = lse - label_logit
+        total_w = jnp.maximum(jnp.sum(weights), 1.0)
+        ce = jnp.sum(nll * weights) / total_w
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux, "tokens": total_w}
+
+    # -- decode -------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int) -> Any:
+        cfg, dt = self.cfg, self.dtype
+        hd = cfg.resolved_head_dim()
+        d_inner, H, N, conv_dim = (M.mamba2_dims(cfg) if cfg.ssm_state
+                                   else (0, 0, 0, 0))
+
+        def one_cache():
+            c: dict = {}
+            if self.kind in ("dense", "moe", "dec", "hybrid"):
+                c["k"] = jnp.zeros((batch_size, max_len, cfg.num_kv_heads, hd), dt)
+                c["v"] = jnp.zeros((batch_size, max_len, cfg.num_kv_heads, hd), dt)
+            if self.kind in ("ssm", "hybrid"):
+                c["ssm"] = jnp.zeros((batch_size, H, cfg.ssm_head_dim, N),
+                                     jnp.float32)
+                c["conv"] = jnp.zeros((batch_size, cfg.conv_kernel - 1, conv_dim), dt)
+            if self.kind == "dec":
+                F = cfg.encoder_frames or max_len
+                c["ck"] = jnp.zeros((batch_size, F, cfg.num_kv_heads, hd), dt)
+                c["cv"] = jnp.zeros((batch_size, F, cfg.num_kv_heads, hd), dt)
+            return c
+
+        caches = [one_cache() for _ in range(cfg.num_layers)]
+        if cfg.remat_mode == "scan":
+            return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+        return caches
+
+    def decode_step(self, params, tokens, cache, index):
+        """tokens: (B, 1) int32; index: scalar current length. Returns
+        (logits (B,1,V), new_cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = params["embed"][tokens]
+        positions = jnp.full((B, 1), index, jnp.int32)
+        mrope_positions = None
+        if cfg.mrope:
+            mrope_positions = jnp.broadcast_to(positions[None], (3, B, 1))
+
+        if cfg.remat_mode == "scan":
+            flags = self._global_flags()
+
+            def body(xx, inp):
+                p_i, cache_i, flag_i = inp
+                y, nc, _ = block_apply(p_i, cfg, xx, self.kind,
+                                       positions=positions,
+                                       layer_is_global=flag_i,
+                                       cache=cache_i, cache_index=index,
+                                       decode=True, impl="xla",
+                                       mrope_positions=mrope_positions)
+                return y, nc
+            x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache, flags))
+        else:
+            new_cache = []
+            for i, bp in enumerate(params["blocks"]):
+                x, nc, _ = block_apply(bp, cfg, x, self.kind,
+                                       positions=positions,
+                                       layer_is_global=self._is_global(i),
+                                       cache=cache[i], cache_index=index,
+                                       decode=True, impl="xla",
+                                       mrope_positions=mrope_positions)
+                new_cache.append(nc)
+
+        x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = (x @ head).astype(jnp.float32)
+        return logits, new_cache
+
+    # -- plan units for the Mimose collector --------------------------------
+    def plan_units(self, params, batch) -> List[PlanUnit]:
+        """Ordered plannable units.  Each unit's ``apply`` is a pure
+        fn(unit_params, x) -> x at the *current* batch geometry, which the
+        shuttling collector inspects abstractly (eval_shape + vjp)."""
+        cfg = self.cfg
+        units: List[PlanUnit] = []
+        x, positions, mrope_positions = jax.eval_shape(
+            lambda p, b: self._embed_inputs(p, b), params, batch)[0], None, None
+        # recompute positions cheaply (concrete, shapes only matter)
+        tokens = batch["tokens"]
+        B, St = tokens.shape
+        S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        if cfg.mrope:
+            mrope_positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None, None, :], (3, B, S))
+
+        idx = 0
+        if cfg.encoder_layers:
+            F = batch["frames"].shape[1]
+            enc_pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+            for i, bp in enumerate(params["encoder"]["blocks"]):
+                def enc_fn(p, xx, _pos=enc_pos):
+                    y, _, _ = block_apply(p, cfg, xx, "enc", positions=_pos,
+                                          impl=self.attn_impl)
+                    return y
+                units.append(PlanUnit(f"enc{i}", idx, bp, enc_fn))
+                idx += 1
+
+        enc_out_struct = None
+        if cfg.encoder_layers:
+            enc_out_struct = jnp.zeros(
+                (B, batch["frames"].shape[1], cfg.d_model), self.dtype)
+
+        def _slice(a, s, e):
+            # works for arrays and ShapeDtypeStructs (abstract dry-run)
+            if isinstance(a, jax.ShapeDtypeStruct):
+                return jax.ShapeDtypeStruct((e - s,) + a.shape[1:], a.dtype)
+            return a[s:e]
+
+        if cfg.remat_mode == "scan":
+            for c, (s, e) in enumerate(self._chunk_bounds()):
+                p_chunk = jax.tree_util.tree_map(
+                    lambda a, _s=s, _e=e: _slice(a, _s, _e), params["blocks"])
+
+                def chunk_fn(p, xx, _flag=self._chunk_flag(s, e)):
+                    def body(carry, pi):
+                        y, _, _ = block_apply(pi, cfg, carry, self.kind,
+                                              positions=positions,
+                                              layer_is_global=_flag,
+                                              enc_out=enc_out_struct,
+                                              mrope_positions=mrope_positions,
+                                              impl=self.attn_impl)
+                        return y, None
+                    out, _ = jax.lax.scan(body, xx, p)
+                    return out
+                units.append(PlanUnit(f"chunk{c}[{s}:{e}]", idx, p_chunk, chunk_fn))
+                idx += 1
+        else:
+            for i, bp in enumerate(params["blocks"]):
+                def blk_fn(p, xx, _i=i):
+                    y, _, _ = block_apply(p, cfg, xx, self.kind,
+                                          positions=positions,
+                                          layer_is_global=self._is_global(_i),
+                                          enc_out=enc_out_struct,
+                                          mrope_positions=mrope_positions,
+                                          impl=self.attn_impl)
+                    return y
+                units.append(PlanUnit(f"block{i}", idx, bp, blk_fn))
+                idx += 1
+        return units
+
+
+def build_model(cfg: ModelConfig, attn_impl: str = "xla") -> LM:
+    return LM(cfg, attn_impl=attn_impl)

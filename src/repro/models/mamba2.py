@@ -1,0 +1,182 @@
+"""Mamba2 / SSD (state-space duality) mixer  [arXiv:2405.21060].
+
+Chunked "SSD" algorithm in pure JAX for the model forward (training /
+prefill) plus a constant-memory single-token ``ssd_step`` for decode.
+A Pallas TPU kernel for the chunk scan lives in ``repro.kernels.ssd_scan``
+and is validated against ``repro.kernels.ref.ssd_reference``.
+
+Layout conventions:
+    x   : (B, S, H, P)   per-head channels
+    dt  : (B, S, H)      softplus-discretised step sizes
+    A   : (H,)           negative decay rates
+    B,C : (B, S, N)      shared across heads (G = 1 group)
+    state: (B, H, P, N)
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm_init, rmsnorm_apply
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (pure jnp)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int, initial_state: Array | None = None
+                ) -> Tuple[Array, Array]:
+    """Returns (y, final_state).  Shapes as in the module docstring."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    if S % chunk:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    Nc, Q = Sp // chunk, chunk
+
+    xc = x.reshape(Bt, Nc, Q, H, P)
+    dtc = dt.reshape(Bt, Nc, Q, H).astype(jnp.float32)
+    Bc = B.reshape(Bt, Nc, Q, N).astype(jnp.float32)
+    Cc = C.reshape(Bt, Nc, Q, N).astype(jnp.float32)
+
+    dA = dtc * A.astype(jnp.float32)                     # (B,Nc,Q,H) log-decay
+    la = jnp.cumsum(dA, axis=2)                          # within-chunk cumlog
+
+    # intra-chunk (diagonal) term:
+    #   L[i,j] = exp(la_i - la_j) for i >= j
+    rel = la[:, :, :, None, :] - la[:, :, None, :, :]    # (B,Nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    # mask BEFORE exp: exp of the (large positive) future entries would be
+    # inf and poison the where() gradient with NaNs.
+    L = jnp.exp(jnp.where(causal[None, None, :, :, None], rel, -jnp.inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)           # (B,Nc,Q,Q)
+    w = cb[..., None] * L * dtc[:, :, None, :, :]        # (B,Nc,Q,Q,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w, xc.astype(jnp.float32))
+
+    # chunk summary states: state contribution of each chunk
+    decay_to_end = jnp.exp(la[:, :, -1:, :] - la)        # (B,Nc,Q,H)
+    bx = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                    Bc, decay_to_end * dtc, xc.astype(jnp.float32))
+
+    chunk_decay = jnp.exp(la[:, :, -1, :])               # (B,Nc,H)
+
+    def scan_fn(state, inp):
+        cdecay, cstate = inp                              # (B,H), (B,H,P,N)
+        new = state * cdecay[:, :, None, None] + cstate
+        return new, state                                 # emit state *before* chunk
+
+    init = (jnp.zeros((Bt, H, P, N), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (chunk_decay.transpose(1, 0, 2), bx.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B,Nc,H,P,N)
+
+    # inter-chunk (off-diagonal) term
+    decay_from_start = jnp.exp(la)                        # (B,Nc,Q,H)
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                       Cc, decay_from_start, prev_states)
+
+    y = (y_diag + y_off).reshape(Bt, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_step(state: Array, x_t: Array, dt_t: Array, A: Array,
+             B_t: Array, C_t: Array) -> Tuple[Array, Array]:
+    """One decode step.  state:(B,H,P,N) x_t:(B,H,P) dt_t:(B,H) B_t,C_t:(B,N)."""
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))   # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t.astype(jnp.float32),
+                     x_t.astype(jnp.float32), B_t.astype(jnp.float32))
+    new_state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# full mixer (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    return d_inner, H, N, conv_dim
+
+
+def mamba2_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, H, N, conv_dim = mamba2_dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * N + H           # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(k1, d, proj_out, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_kernel, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(k4, d_inner, d, dtype),
+    }
+
+
+def _causal_conv(seq: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv.  seq:(B,S,C) w:(K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + seq.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def mamba2_apply(params: dict, cfg: ModelConfig, u: Array,
+                 ssm_state: Array | None = None,
+                 conv_state: Array | None = None,
+                 decode: bool = False):
+    """u: (B, S, d_model).  Returns (out, (ssm_state, conv_state))."""
+    Bt, S, d = u.shape
+    d_inner, H, N, conv_dim = mamba2_dims(cfg)
+
+    zxbcdt = u @ params["in_proj"]
+    z, xBC, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+
+    if decode:
+        # conv_state: (B, K-1, conv_dim) rolling buffer of past inputs
+        full = jnp.concatenate([conv_state, xBC], axis=1)
+        new_conv_state = full[:, 1:]
+        K = cfg.conv_kernel
+        xBC = (jnp.einsum("bkc,kc->bc", full[:, -K:], params["conv_w"])
+               + params["conv_b"])[:, None, :]
+    else:
+        new_conv_state = None
+        xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xBC = jax.nn.silu(xBC)
+
+    x, B_, C_ = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    x = x.reshape(Bt, -1, H, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    if decode:
+        y, new_ssm = ssd_step(ssm_state, x[:, 0], dt[:, 0], A, B_[:, 0], C_[:, 0])
+        y = y[:, None]
+    else:
+        y, new_ssm = ssd_chunked(x, dt, A, B_, C_, cfg.ssm_chunk,
+                                 initial_state=ssm_state)
+
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * x
+    y = y.reshape(Bt, -1, d_inner)
+    y = rmsnorm_apply(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, (new_ssm, new_conv_state)

@@ -1,0 +1,57 @@
+"""Architecture registry: ``--arch <id>`` -> (ModelConfig, LM builder)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.config import ModelConfig
+from repro.models.lm import LM, build_model
+
+ARCH_IDS = [
+    "mamba2_1p3b",
+    "seamless_m4t_large_v2",
+    "granite_moe_1b_a400m",
+    "gemma3_12b",
+    "yi_9b",
+    "stablelm_3b",
+    "qwen2_vl_7b",
+    "qwen3_1p7b",
+    "hymba_1p5b",
+    "kimi_k2_1t_a32b",
+    # the paper's own evaluation model (Bert-base scale, encoder-style stack)
+    "bert_base_paper",
+]
+
+# accept the dashed public names too
+ALIASES = {
+    "mamba2-1.3b": "mamba2_1p3b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "gemma3-12b": "gemma3_12b",
+    "yi-9b": "yi_9b",
+    "stablelm-3b": "stablelm_3b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "qwen3-1.7b": "qwen3_1p7b",
+    "hymba-1.5b": "hymba_1p5b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+}
+
+
+def canonical(arch: str) -> str:
+    return ALIASES.get(arch, arch.replace("-", "_").replace(".", "p"))
+
+
+def get_config(arch: str) -> ModelConfig:
+    name = canonical(arch)
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def get_model(arch: str, attn_impl: str = "xla") -> LM:
+    return build_model(get_config(arch), attn_impl=attn_impl)
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,198 @@
+"""Sharding rules: parameter / activation PartitionSpecs per model family.
+
+Mesh axes:
+  * ``data``  — batch (and sequence, for the long-context decode shape)
+  * ``model`` — tensor parallel: attention heads / MLP hidden / experts
+  * ``pod``   — optional outer data-parallel axis across pods
+
+Scheme (megatron-style 1D tensor parallel + expert parallel):
+  * column-parallel: wq/wk/wv, mlp wi/wg, mamba in_proj  -> (None, 'model')
+  * row-parallel:    wo, mlp wo, mamba out_proj          -> ('model', None)
+  * embeddings vocab-sharded over 'model'
+  * MoE expert weights (E, d, f) sharded ('model', None, None) = expert parallel
+  * scan-stacked params get a leading None for the layer axis
+  * optional ZeRO-1: optimizer moments additionally sharded over 'data'
+    on the largest divisible axis
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _data_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+_COLUMN = {"wq", "wk", "wv", "wi", "wg", "in_proj", "conv_w"}
+_ROW = {"wo", "out_proj"}
+
+
+def param_spec(path: tuple, leaf, *, scanned: bool, mesh: Mesh,
+               model_dim: int, attn_replicated: bool = False,
+               expert_2d: bool = False, data_dim: int = 0) -> P:
+    """PartitionSpec for one parameter, from its tree path.
+
+    ``attn_replicated`` turns tensor parallelism OFF for the attention
+    projections (they stay data-parallel-replicated, MLP/MoE keep TP) —
+    the right call when num_heads is not divisible by the model axis and
+    head-crossing reshards would otherwise dominate collectives (see
+    EXPERIMENTS.md §Perf, qwen2-vl)."""
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    leafname = names[-1]
+    if attn_replicated and ("attn" in names or "cross" in names):
+        return P(*([None] * len(leaf.shape)))
+    shape = leaf.shape
+    lead = (None,) if (scanned and "blocks" in names) else ()
+    body_rank = len(shape) - len(lead)
+
+    def ok(dim_from_end: int) -> bool:
+        return shape[len(shape) - dim_from_end] % model_dim == 0
+
+    if leafname == "embed" or leafname == "lm_head":
+        if leafname == "embed" and shape[0] % model_dim == 0:
+            return P("model", None)
+        if leafname == "lm_head" and shape[1] % model_dim == 0:
+            return P(None, "model")
+        return P(None, None)
+    if leafname == "router":
+        return P(*lead, None, None)
+    if leafname in ("wi", "wg", "wo") and body_rank == 3:
+        # stacked expert weights (E, d, f): expert parallel
+        E, d2, d3 = shape[len(lead):]
+        if expert_2d and data_dim and E % data_dim == 0:
+            # 2D expert sharding: experts over 'data', hidden over 'model'
+            # (1T-param serving: weights shard over ALL chips)
+            if leafname == "wo" and d2 % model_dim == 0:
+                return P(*lead, "data", "model", None)
+            if leafname != "wo" and d3 % model_dim == 0:
+                return P(*lead, "data", None, "model")
+            return P(*lead, "data", None, None)
+        if E % model_dim == 0:
+            return P(*lead, "model", None, None)
+        return P(*lead, None, None, None)
+    if leafname in _COLUMN and body_rank == 2:
+        if ok(1):
+            return P(*lead, None, "model")
+        return P(*lead, None, None)
+    if leafname in _ROW and body_rank == 2:
+        if ok(2):
+            return P(*lead, "model", None)
+        return P(*lead, None, None)
+    # everything else (norm scales, biases, A_log, dt_bias, D, scalars)
+    return P(*([None] * len(shape)))
+
+
+def params_shardings(params, mesh: Mesh, *, scanned: bool,
+                     attn_replicated: bool = False,
+                     expert_2d: bool = False):
+    model_dim = mesh.shape["model"]
+    data_dim = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        spec = param_spec(path, leaf, scanned=scanned, mesh=mesh,
+                          model_dim=model_dim,
+                          attn_replicated=attn_replicated,
+                          expert_2d=expert_2d, data_dim=data_dim)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_shardings(params_sh, opt_state_struct, mesh: Mesh, *,
+                        zero1: bool = False):
+    """AdamW state: step replicated; m/v like params (optionally ZeRO-1)."""
+    data_axes = _data_axes(mesh)
+    data_dim = int(np.prod([mesh.shape[a] for a in data_axes]))
+
+    def moment_spec(p_sh: NamedSharding, leaf):
+        spec = list(p_sh.spec) + [None] * (len(leaf.shape) - len(p_sh.spec))
+        if zero1:
+            for i, s in enumerate(spec):
+                if s is None and leaf.shape[i] % data_dim == 0:
+                    spec[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    step_sh = NamedSharding(mesh, P())
+    m_sh = jax.tree_util.tree_map(moment_spec, params_sh, opt_state_struct.m)
+    v_sh = jax.tree_util.tree_map(moment_spec, params_sh, opt_state_struct.v)
+    return type(opt_state_struct)(step_sh, m_sh, v_sh)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_spec(name: str, shape: tuple, mesh: Mesh,
+               shard_sequence: bool = False) -> P:
+    """Input tensors.  Normally batch over data; the long-context decode
+    shape (batch=1) shards the *sequence* axis over data instead."""
+    data = _data_axes(mesh)
+    data = data if len(data) > 1 else data[0]
+    if name in ("tokens", "labels", "weights", "positions"):
+        if shard_sequence:
+            return P(None, data)
+        return P(data, *([None] * (len(shape) - 1)))
+    if name in ("vision_embeds", "frames"):
+        if shard_sequence:
+            return P(None, data, None)
+        return P(data, None, None)
+    return P(*([None] * len(shape)))
+
+
+def cache_spec(name: str, shape: tuple, mesh: Mesh,
+               shard_sequence: bool = False) -> P:
+    """KV / SSM caches, per layer (add a leading None if stacked).
+
+    Attention KV: (B, S, Hkv, hd) — batch over data, kv heads over model
+    when divisible (else sequence over model).  SSM state: (B, H, P, N) —
+    heads over model.  Conv buffer: (B, K-1, C) — channels over model.
+    """
+    data = _data_axes(mesh)
+    data = data if len(data) > 1 else data[0]
+    model_dim = mesh.shape["model"]
+    if name in ("k", "v", "ck", "cv"):
+        B, S, Hkv, hd = shape[-4:]
+        lead = [None] * (len(shape) - 4)
+        batch_ax = None if shard_sequence else data
+        seq_ax = data if shard_sequence else None
+        head_ax = "model" if Hkv % model_dim == 0 else None
+        if head_ax is None and seq_ax is None and S % model_dim == 0:
+            seq_ax = "model"
+        return P(*lead, batch_ax, seq_ax, head_ax, None)
+    if name == "ssm":
+        B, H, Pd, N = shape[-4:]
+        lead = [None] * (len(shape) - 4)
+        head_ax = "model" if H % model_dim == 0 else None
+        return P(*lead, None if shard_sequence else data, head_ax, None, None)
+    if name == "conv":
+        B, K, C = shape[-3:]
+        lead = [None] * (len(shape) - 3)
+        ch_ax = "model" if C % model_dim == 0 else None
+        return P(*lead, None if shard_sequence else data, None, ch_ax)
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(cache_struct, mesh: Mesh, *, stacked: bool,
+                    shard_sequence: bool = False):
+    def one(path, leaf):
+        name = getattr(path[-1], "key", None)
+        return NamedSharding(mesh, cache_spec(name, leaf.shape, mesh,
+                                              shard_sequence))
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+def batch_shardings(batch_struct, mesh: Mesh, shard_sequence: bool = False):
+    def one(path, leaf):
+        name = getattr(path[-1], "key", None)
+        return NamedSharding(mesh, batch_spec(name, leaf.shape, mesh,
+                                              shard_sequence))
+    return jax.tree_util.tree_map_with_path(one, batch_struct)

@@ -1,0 +1,50 @@
+"""Model/optimizer state persistence (msgpack + raw numpy buffers)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree) -> None:
+    leaves, treedef = _flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [
+            {"dtype": str(np.asarray(l).dtype),
+             "shape": list(np.shape(l)),
+             "data": np.asarray(l, order="C").tobytes()}
+            for l in leaves
+        ],
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = _flatten(like)
+    stored = payload["leaves"]
+    if len(stored) != len(leaves):
+        raise ValueError(f"checkpoint has {len(stored)} leaves, "
+                         f"expected {len(leaves)}")
+    out = []
+    for ref, rec in zip(leaves, stored):
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch {arr.shape} vs {np.shape(ref)}")
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), out)

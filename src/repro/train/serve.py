@@ -1,0 +1,52 @@
+"""Batched serving: prefill + token-by-token decode with KV / SSM caches."""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+
+
+def make_serve_step(lm: LM):
+    """jit-able decode step: (params, tokens(B,1), cache, index) -> (logits, cache)."""
+    def serve_step(params, tokens, cache, index):
+        return lm.decode_step(params, tokens, cache, index)
+    return serve_step
+
+
+def prefill_into_cache(lm: LM, params, tokens, cache):
+    """Feed a prompt token-by-token (reference implementation; fine for the
+    CPU-scale examples.  The dry-run prefill shape lowers the one-shot
+    forward instead)."""
+    B, S = tokens.shape
+    step = jax.jit(make_serve_step(lm))
+    logits = None
+    for t in range(S):
+        logits, cache = step(params, tokens[:, t:t + 1], cache, t)
+    return logits, cache
+
+
+def generate(lm: LM, params, prompt: jnp.ndarray, max_new_tokens: int,
+             temperature: float = 0.0, seed: int = 0):
+    """Greedy / sampled generation for the examples."""
+    B, S = prompt.shape
+    cache = lm.init_cache(B, S + max_new_tokens)
+    logits, cache = prefill_into_cache(lm, params, prompt, cache)
+    step = jax.jit(make_serve_step(lm))
+    key = jax.random.PRNGKey(seed)
+    toks = []
+    for i in range(max_new_tokens):
+        lg = logits[:, -1]
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, lg / temperature)[:, None]
+        else:
+            nxt = jnp.argmax(lg, axis=-1)[:, None]
+        toks.append(nxt)
+        logits, cache = step(params, nxt, cache, S + i)
+    return jnp.concatenate(toks, axis=1)

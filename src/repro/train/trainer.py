@@ -1,0 +1,116 @@
+"""Training loop with the Mimose planner on the critical path (paper §4.1).
+
+Per batch:
+  1. ``planner.plan`` maps the batch's input size to a remat mask —
+     cached plans are O(1); new sizes cost <1 ms (estimator + scheduler)
+     or one abstract collection during sheltered execution.
+  2. The (shape, mask) pair selects a jitted train step.  JAX recompiles
+     per shape regardless; Mimose's plan cache keys align with the jit
+     cache so a repeated size never recompiles *or* replans.
+  3. loss -> grad -> AdamW update, loss includes MoE aux losses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.planner import PlannerBase
+from repro.models.lm import LM
+from repro.optim.adamw import AdamW, AdamWState
+
+
+@dataclasses.dataclass
+class StepStats:
+    loss: float
+    step_time_s: float
+    plan_time_s: float
+    compile: bool
+    remat_units: int
+    tokens: int
+
+
+class Trainer:
+    def __init__(self, lm: LM, planner: PlannerBase,
+                 optimizer: Optional[AdamW] = None,
+                 remat_policy=None):
+        self.lm = lm
+        self.planner = planner
+        self.optimizer = optimizer or AdamW()
+        self.remat_policy = remat_policy
+        self._step_cache: Dict[Any, Any] = {}
+        self.history: list[StepStats] = []
+
+    # ------------------------------------------------------------------
+    def _batch_key(self, batch) -> tuple:
+        return tuple(sorted((k, tuple(np.shape(v)))
+                            for k, v in batch.items() if k != "lengths"))
+
+    def _get_step_fn(self, mask: Tuple[bool, ...], batch):
+        key = (self._batch_key(batch), mask)
+        fn = self._step_cache.get(key)
+        compiled = key in self._step_cache
+        if fn is None:
+            opt = self.optimizer
+            lm = self.lm
+            policy = self.remat_policy
+
+            def train_step(params, opt_state, batch):
+                def loss_fn(p):
+                    loss, metrics = lm.loss(p, batch, remat_mask=mask,
+                                            remat_policy=policy)
+                    return loss, metrics
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params)
+                new_params, new_opt = opt.update(grads, opt_state, params)
+                return new_params, new_opt, loss, metrics
+
+            fn = jax.jit(train_step, donate_argnums=(0, 1))
+            self._step_cache[key] = fn
+        return fn, not compiled
+
+    # ------------------------------------------------------------------
+    def step(self, params, opt_state: AdamWState, batch) -> tuple:
+        batch = {k: jnp.asarray(v) for k, v in batch.items() if k != "lengths"}
+        t0 = time.perf_counter()
+        mask, info = self.planner.plan(params, batch)
+        t_plan = time.perf_counter() - t0
+
+        fn, is_new = self._get_step_fn(mask, batch)
+        t1 = time.perf_counter()
+        params, opt_state, loss, metrics = fn(params, opt_state, batch)
+        loss = float(loss)
+        t_step = time.perf_counter() - t1
+        self.history.append(StepStats(loss, t_step, t_plan, is_new,
+                                      int(sum(mask)),
+                                      int(metrics["tokens"])))
+        return params, opt_state, loss
+
+    def run(self, params, batches, opt_state: Optional[AdamWState] = None):
+        if opt_state is None:
+            opt_state = self.optimizer.init(params)
+        for batch in batches:
+            params, opt_state, loss = self.step(params, opt_state, batch)
+        return params, opt_state
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        h = self.history
+        if not h:
+            return {}
+        warm = [s for s in h if not s.compile] or h
+        return {
+            "steps": len(h),
+            "mean_step_s": float(np.mean([s.step_time_s for s in warm])),
+            "total_plan_s": float(np.sum([s.plan_time_s for s in h])),
+            "compiles": int(sum(s.compile for s in h)),
+            "mean_remat_units": float(np.mean([s.remat_units for s in h])),
+            "tokens_per_s": float(np.sum([s.tokens for s in warm])
+                                  / max(np.sum([s.step_time_s for s in warm]),
+                                        1e-9)),
+            "final_loss": h[-1].loss,
+        }

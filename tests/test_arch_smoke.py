@@ -1,0 +1,186 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+For each of the 10 assigned architectures: instantiate a REDUCED variant
+of the same family (2 layers, d_model <= 512, <= 4 experts) and run one
+forward + one train step on CPU, asserting output shapes and no NaNs.
+The FULL configs are exercised only by launch/dryrun.py (abstract).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import INPUT_SHAPES
+from repro.models.lm import build_model
+from repro.models.registry import ARCH_IDS, get_config
+from repro.optim.adamw import AdamW
+
+ASSIGNED = [a for a in ARCH_IDS if a != "bert_base_paper"]
+
+
+def _batch_for(cfg, B=2, S=32, key=0):
+    rng = np.random.default_rng(key)
+    text_len = S - cfg.vision_tokens if cfg.family == "vlm" else S
+    batch = {
+        "tokens": jnp.asarray(rng.integers(1, cfg.vocab_size,
+                                           (B, text_len)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                           (B, text_len)), jnp.int32),
+        "weights": jnp.ones((B, text_len), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vision_tokens, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)), jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.fixture(scope="module", params=ASSIGNED)
+def arch(request):
+    return request.param
+
+
+def _reduced(arch_id):
+    cfg = get_config(arch_id).reduced(dtype="float32")
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    return cfg
+
+
+def test_full_config_exact(arch):
+    """The full config matches the assignment table."""
+    cfg = get_config(arch)
+    expected = {
+        "mamba2_1p3b": dict(num_layers=48, d_model=2048, vocab_size=50280,
+                            ssm_state=128, d_ff=0),
+        "seamless_m4t_large_v2": dict(num_layers=24, d_model=1024,
+                                      num_heads=16, num_kv_heads=16,
+                                      d_ff=8192, vocab_size=256206),
+        "granite_moe_1b_a400m": dict(num_layers=24, d_model=1024,
+                                     num_heads=16, num_kv_heads=8,
+                                     moe_d_ff=512, vocab_size=49155,
+                                     num_experts=32, experts_per_token=8),
+        "gemma3_12b": dict(num_layers=48, d_model=3840, num_heads=16,
+                           num_kv_heads=8, d_ff=15360, vocab_size=262144),
+        "yi_9b": dict(num_layers=48, d_model=4096, num_heads=32,
+                      num_kv_heads=4, d_ff=11008, vocab_size=64000),
+        "stablelm_3b": dict(num_layers=32, d_model=2560, num_heads=32,
+                            num_kv_heads=32, d_ff=6912, vocab_size=50304),
+        "qwen2_vl_7b": dict(num_layers=28, d_model=3584, num_heads=28,
+                            num_kv_heads=4, d_ff=18944, vocab_size=152064,
+                            mrope=True),
+        "qwen3_1p7b": dict(num_layers=28, d_model=2048, num_heads=16,
+                           num_kv_heads=8, d_ff=6144, vocab_size=151936,
+                           qk_norm=True),
+        "hymba_1p5b": dict(num_layers=32, d_model=1600, num_heads=25,
+                           num_kv_heads=5, d_ff=5504, vocab_size=32001,
+                           ssm_state=16),
+        "kimi_k2_1t_a32b": dict(num_layers=61, d_model=7168, num_heads=64,
+                                num_kv_heads=8, moe_d_ff=2048,
+                                vocab_size=163840, num_experts=384,
+                                experts_per_token=8),
+    }[arch]
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_forward_shapes_no_nan(arch):
+    cfg = _reduced(arch)
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    logits, aux = lm.forward(params, batch)
+    B = batch["tokens"].shape[0]
+    S_total = batch["tokens"].shape[1] + (cfg.vision_tokens
+                                          if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert not bool(jnp.isnan(aux))
+
+
+def test_one_train_step(arch):
+    cfg = _reduced(arch)
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+
+    def step(p, s, b):
+        (loss, _), grads = jax.value_and_grad(
+            lambda pp: lm.loss(pp, b), has_aux=True)(p)
+        np_, ns = opt.update(grads, s, p)
+        return np_, ns, loss
+
+    p1, s1, l1 = jax.jit(step)(params, opt_state, batch)
+    assert np.isfinite(float(l1))
+    # params actually changed
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(p1)))
+    assert changed
+    # a second step decreases or roughly maintains loss on the same batch
+    _, _, l2 = jax.jit(step)(p1, s1, batch)
+    assert float(l2) < float(l1) + 0.5
+
+
+def test_remat_mask_is_numerically_invariant(arch):
+    cfg = _reduced(arch)
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(1))
+    batch = _batch_for(cfg)
+    n = lm.num_plan_units()
+    base, _ = lm.loss(params, batch)
+    for mask in ([True] * n, [True] + [False] * (n - 1)):
+        loss, _ = lm.loss(params, batch, remat_mask=mask)
+        np.testing.assert_allclose(float(loss), float(base), rtol=1e-5)
+
+
+def test_decode_matches_forward(arch):
+    cfg = _reduced(arch)
+    if cfg.family == "encdec":
+        pytest.skip("enc-dec decode covered in test_system (needs frames)")
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode covered via dry-run (prefix cache setup)")
+    if cfg.num_experts:
+        # GShard capacity routing drops tokens in the batched forward;
+        # disable drops so decode (per-token, never drops) is comparable.
+        cfg = dataclasses.replace(cfg,
+                                  moe_capacity_factor=float(cfg.num_experts))
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(2))
+    T = 8
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, T), 1,
+                              cfg.vocab_size)
+    logits_full, _ = lm.forward(params, {"tokens": toks})
+    cache = lm.init_cache(1, T)
+    outs = []
+    for t in range(T):
+        lg, cache = lm.decode_step(params, toks[:, t:t + 1], cache, t)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits_full),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_scan_matches_unrolled(arch):
+    cfg = _reduced(arch)
+    if cfg.family == "encdec":
+        pytest.skip("encdec is unrolled-only")
+    cfg_s = dataclasses.replace(cfg, remat_mode="scan", scan_chunks=2)
+    lm_u, lm_s = build_model(cfg), build_model(cfg_s)
+    pu = lm_u.init(jax.random.PRNGKey(4))
+    ps = dict(pu)
+    ps["blocks"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                          *pu["blocks"])
+    batch = _batch_for(cfg)
+    lu, _ = lm_u.loss(pu, batch)
+    ls, _ = lm_s.loss(ps, batch)
+    np.testing.assert_allclose(float(lu), float(ls), rtol=1e-5)

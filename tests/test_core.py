@@ -1,0 +1,282 @@
+"""Unit + property tests for the Mimose core (collector/estimator/
+scheduler/planner/simulator)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DTRSimPlanner, MimosePlanner, NonePlanner,
+                        PolyEstimator, DecisionTreeEstimator,
+                        ShuttlingCollector, SublinearPlanner, build_buckets,
+                        dtr_simulate, greedy_plan, peak_if_checkpointing_unit,
+                        simulate)
+from repro.core.planner import fixed_train_bytes
+from repro.models.lm import build_model
+from repro.models.registry import get_config
+
+
+# ---------------------------------------------------------------------------
+# scheduler (Algorithm 1) properties
+# ---------------------------------------------------------------------------
+
+mem_lists = st.lists(st.floats(min_value=1.0, max_value=1e9,
+                               allow_nan=False, allow_infinity=False),
+                     min_size=1, max_size=64)
+
+
+@given(mem_lists, st.floats(min_value=0.0, max_value=1e10))
+@settings(max_examples=200, deadline=None)
+def test_greedy_plan_covers_excess_when_feasible(est, budget):
+    plan = greedy_plan(est, budget)
+    total = sum(est)
+    excess = total - budget
+    if excess <= 0:
+        assert not any(plan.remat)            # under budget -> no remat
+    else:
+        covered = sum(e for e, r in zip(est, plan.remat) if r)
+        # plan covers the excess whenever that is possible at all
+        if excess <= total:
+            assert covered >= min(excess, total) - 1e-6
+
+
+@given(mem_lists)
+@settings(max_examples=100, deadline=None)
+def test_greedy_plan_budget_zero_remats_everything(est):
+    plan = greedy_plan(est, 0.0)
+    assert all(plan.remat)
+
+
+@given(mem_lists, st.floats(min_value=0.0, max_value=1e10))
+@settings(max_examples=200, deadline=None)
+def test_greedy_plan_simulated_peak_within_budget(est, budget):
+    """If the plan's covered bytes reach the excess, the liveness
+    simulator's *end-of-forward* footprint respects the budget."""
+    plan = greedy_plan(est, budget)
+    saved = sum(e for e, r in zip(est, plan.remat) if not r)
+    if plan.excess_bytes > 0 and plan.covered_bytes >= plan.excess_bytes:
+        assert saved <= budget + 1e-6
+
+
+def test_greedy_prefers_earlier_timestamps_in_bucket():
+    est = [100.0, 100.0, 100.0, 100.0]
+    plan = greedy_plan(est, budget_bytes=250.0)
+    # excess 150 -> two units, the two EARLIEST (paper Fig. 11)
+    assert plan.remat == [True, True, False, False]
+
+
+def test_buckets_tolerance_grouping():
+    est = [100, 95, 50, 11, 10]
+    buckets = build_buckets(est, tol=0.10)
+    assert buckets[0] == [0, 1]         # within 10%
+    assert buckets[1] == [2]
+    assert buckets[2] == [3, 4]
+
+
+@given(mem_lists)
+@settings(max_examples=100, deadline=None)
+def test_buckets_partition_all_units(est):
+    buckets = build_buckets(est)
+    flat = sorted(i for b in buckets for i in b)
+    assert flat == list(range(len(est)))
+
+
+# ---------------------------------------------------------------------------
+# estimator
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(min_value=8, max_value=4096), min_size=4,
+                max_size=12, unique=True),
+       st.floats(min_value=0.0, max_value=10.0),
+       st.floats(min_value=0.0, max_value=1e3),
+       st.floats(min_value=0.0, max_value=1e6))
+@settings(max_examples=50, deadline=None)
+def test_poly2_fits_quadratic_exactly(sizes, a, b, c):
+    est = PolyEstimator(2, min_samples=3)
+    for s in sizes:
+        est.add_sample(s, [a * s * s + b * s + c])
+    est.fit()
+    for s in sizes:
+        truth = a * s * s + b * s + c
+        assert abs(est.predict(s)[0] - truth) <= max(1e-6 * truth, 1.0)
+
+
+def test_poly2_beats_poly1_on_attention_curve():
+    sizes = np.array([64, 128, 256, 384, 512, 768, 1024])
+    truth = 2.0 * sizes ** 2 + 100.0 * sizes           # attention-like
+    e1, e2 = PolyEstimator(1, 3), PolyEstimator(2, 3)
+    for s, t in zip(sizes[:5], truth[:5]):
+        e1.add_sample(s, [t]); e2.add_sample(s, [t])
+    t1 = np.stack([[t] for t in truth[5:]])
+    assert e2.mape(sizes[5:], t1) < e1.mape(sizes[5:], t1)
+
+
+def test_tree_estimator_runs():
+    t = DecisionTreeEstimator()
+    for s in (32, 64, 128, 256):
+        t.add_sample(s, [float(s * s)])
+    assert t.predict_total(64) > 0
+
+
+def test_estimator_latency_sub_millisecond():
+    est = PolyEstimator(2, 3)
+    for s in (64, 128, 256, 512, 1024):
+        est.add_sample(s, np.full(24, float(s * s)))
+    est.fit()
+    import time
+    t0 = time.perf_counter()
+    for _ in range(100):
+        est.predict(333)
+    per_call = (time.perf_counter() - t0) / 100
+    assert per_call < 1e-3             # paper: ~16 us
+
+
+# ---------------------------------------------------------------------------
+# simulator
+# ---------------------------------------------------------------------------
+
+@given(mem_lists)
+@settings(max_examples=100, deadline=None)
+def test_simulate_remat_all_never_worse_than_none(act):
+    none = simulate(act, [False] * len(act))
+    full = simulate(act, [True] * len(act))
+    assert full.peak_bytes <= none.peak_bytes + 1e-6
+    assert none.recompute_bytes == 0.0
+    assert full.recompute_bytes == pytest.approx(sum(act))
+
+
+def test_fig11_checkpointing_last_unit_is_worst():
+    act = [100.0] * 12                  # 12 equal encoders (Bert-base)
+    peaks = [peak_if_checkpointing_unit(act, i) for i in range(12)]
+    assert max(peaks) == peaks[-1]
+    assert all(p <= peaks[-1] for p in peaks)
+
+
+@given(mem_lists, st.floats(min_value=10.0, max_value=1e10))
+@settings(max_examples=100, deadline=None)
+def test_dtr_sim_plan_ops_positive_when_evicting(act, budget):
+    mask, ops = dtr_simulate(act, budget)
+    if any(mask):
+        assert ops > 0
+    # DTR never evicts the most recent tensor
+    assert not mask[-1] or len(act) == 1
+
+
+# ---------------------------------------------------------------------------
+# collector + planner integration (small real model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("bert_base_paper").reduced(
+        num_layers=4, d_model=128, d_ff=256, vocab_size=512)
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    return cfg, lm, params
+
+
+def _batch(S, B=2, vocab=512):
+    return {"tokens": jnp.ones((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32)}
+
+
+def test_collector_monotone_in_input_size(small):
+    _, lm, params = small
+    col = ShuttlingCollector(lm)
+    totals = [col.collect(params, _batch(S)).total_activation_bytes()
+              for S in (32, 64, 128)]
+    assert totals[0] < totals[1] < totals[2]
+
+
+def test_collector_superlinear_attention(small):
+    """Doubling seqlen more than doubles activation bytes (quadratic term)."""
+    _, lm, params = small
+    col = ShuttlingCollector(lm)
+    t64 = col.collect(params, _batch(64)).total_activation_bytes()
+    t128 = col.collect(params, _batch(128)).total_activation_bytes()
+    assert t128 > 2.0 * t64
+
+
+def test_planner_cache_hit_and_estimator_accuracy(small):
+    _, lm, params = small
+    fixed = fixed_train_bytes(params)
+    col = ShuttlingCollector(lm)
+    total128 = col.collect(params, _batch(128)).total_activation_bytes()
+    planner = MimosePlanner(lm, fixed + total128 // 2, warmup_samples=3,
+                            quantum=32)
+    for S in (32, 64, 96):
+        planner.plan(params, _batch(S))
+    assert planner.estimator.ready
+    mask, info = planner.plan(params, _batch(128))
+    assert not info.cache_hit and not info.collected   # predicted
+    # estimator vs ground truth within 2%
+    pred = planner.estimator.predict(2 * 128).sum()
+    assert abs(pred - total128) / total128 < 0.02
+    mask2, info2 = planner.plan(params, _batch(128))
+    assert info2.cache_hit and mask2 == mask
+
+
+def test_planner_no_remat_when_budget_ample(small):
+    _, lm, params = small
+    planner = MimosePlanner(lm, budget_bytes=1e12, warmup_samples=1)
+    mask, _ = planner.plan(params, _batch(64))
+    assert not any(mask)
+
+
+def test_sublinear_conservative_vs_mimose(small):
+    """Static plan at max size remats at least as much as Mimose does for
+    a small input (the paper's Fig. 4 waste)."""
+    _, lm, params = small
+    fixed = fixed_train_bytes(params)
+    col = ShuttlingCollector(lm)
+    total = col.collect(params, _batch(256)).total_activation_bytes()
+    budget = fixed + total // 3
+    sub = SublinearPlanner(lm, budget, max_input_size=2 * 256,
+                           warmup_samples=3)
+    mi = MimosePlanner(lm, budget, warmup_samples=2, quantum=16)
+    small_batch = _batch(32)
+    m_sub, _ = sub.plan(params, small_batch)
+    for S in (32, 64):
+        mi.plan(params, _batch(S))
+    m_mi, _ = mi.plan(params, small_batch)
+    assert sum(m_sub) >= sum(m_mi)
+
+
+def test_dtr_planner_replans_every_iteration(small):
+    _, lm, params = small
+    fixed = fixed_train_bytes(params)
+    col = ShuttlingCollector(lm)
+    total = col.collect(params, _batch(128)).total_activation_bytes()
+    dtr = DTRSimPlanner(lm, fixed + total // 2)
+    for _ in range(3):
+        dtr.plan(params, _batch(128))
+    assert dtr.stats["replans"] == 3          # no caching, unlike Mimose
+
+
+def test_planner_audit_detects_and_fixes_drift(small):
+    """Adaptive-estimator extension: a corrupted fit is caught by the
+    drift audit and repaired from an exact abstract re-collection."""
+    _, lm, params = small
+    planner = MimosePlanner(lm, budget_bytes=1e12, warmup_samples=2,
+                            quantum=8, audit_every=1)
+    for S in (32, 48):
+        planner.plan(params, _batch(S))
+    assert planner.estimator.ready
+    # corrupt the fitted coefficients to force drift
+    planner.estimator.fit()
+    planner.estimator._coeffs = planner.estimator._coeffs * 3.0
+    planner.plan(params, _batch(96))
+    assert planner.stats["audits"] >= 1
+    assert planner.stats["refits"] >= 1
+    # post-refit prediction is accurate again
+    col = ShuttlingCollector(lm)
+    truth = col.collect(params, _batch(128)).total_activation_bytes()
+    pred = planner.estimator.predict(2 * 128).sum()
+    assert abs(pred - truth) / truth < 0.05
+
+
+def test_fixed_train_bytes_accounts_adam(small):
+    _, lm, params = small
+    n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+    fb = fixed_train_bytes(params)
+    assert fb == pytest.approx(n * 4 + n * 4 + 8 * n)   # f32 params

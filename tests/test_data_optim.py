@@ -1,0 +1,64 @@
+"""Data pipeline + optimizer unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import DISTRIBUTIONS, epoch_sizes, make_batches
+from repro.optim.adamw import AdamW, cosine_schedule
+
+
+def test_batches_are_padded_to_quantum():
+    for b in make_batches("swag", batch_size=4, vocab_size=100,
+                          num_batches=10, quantum=32, seed=0):
+        assert b["tokens"].shape[1] % 32 == 0
+        assert b["tokens"].shape == b["labels"].shape == b["weights"].shape
+
+
+def test_padding_is_masked():
+    for b in make_batches("qqp", batch_size=4, vocab_size=100,
+                          num_batches=5, quantum=32, seed=0):
+        pad = b["weights"] == 0
+        assert (b["tokens"][pad] == 0).all()
+        lens = b["lengths"]
+        assert (b["weights"].sum(1) == lens).all()
+
+
+def test_sizes_vary_across_batches():
+    sizes = epoch_sizes("swag", 8, 50, quantum=32)
+    assert len(np.unique(sizes)) >= 2
+
+
+@given(st.sampled_from(["swag", "squad", "qqp"]),
+       st.integers(min_value=1, max_value=2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_distribution_bounds(name, seed):
+    d = DISTRIBUTIONS[name]
+    s = d.sample(np.random.default_rng(seed), 500)
+    assert s.min() >= d.lo and s.max() <= d.hi
+
+
+def test_adamw_minimises_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_grad_clipping_bounds_update():
+    opt = AdamW(lr=1.0, clip_norm=1e-3, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    grads = {"w": jnp.full(4, 1e6)}
+    new, _ = opt.update(grads, state, params)
+    assert float(jnp.max(jnp.abs(new["w"]))) < 1.1   # bounded despite 1e6 grad
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.array(0))) == 0.0
+    assert float(lr(jnp.array(10))) <= 1e-3 + 1e-9
+    assert float(lr(jnp.array(100))) < 1e-4

@@ -1,0 +1,46 @@
+"""Launch plumbing: dry-run entry point in a subprocess (it needs its own
+jax process because of --xla_force_host_platform_device_count)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(*args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
+
+
+@pytest.mark.slow
+def test_dryrun_single_pair_compiles():
+    p = _run_dryrun("--arch", "mamba2-1.3b", "--shape", "decode_32k")
+    assert p.returncode == 0, p.stdout + p.stderr
+    rec = json.loads(p.stdout.strip().splitlines()[-1])
+    assert rec["status"] == "ok"
+    assert rec["step"] == "serve_step"
+    assert rec["flops_per_dev"] > 0
+    assert rec["mesh"] == "16x16"
+
+
+@pytest.mark.slow
+def test_dryrun_skips_long_decode_for_full_attention():
+    p = _run_dryrun("--arch", "yi-9b", "--shape", "long_500k")
+    rec = json.loads(p.stdout.strip().splitlines()[-1])
+    assert rec["status"] == "skipped"
+    assert "full-attention" in rec["reason"]
+
+
+def test_mesh_requires_512_devices_message():
+    # in THIS process there is one device; the mesh must refuse politely
+    from repro.launch.mesh import make_production_mesh
+    import jax
+    if len(jax.devices()) < 256:
+        with pytest.raises(RuntimeError, match="host_platform_device_count"):
+            make_production_mesh()

@@ -1,0 +1,131 @@
+"""Sharding spec rules + launch plumbing (single-device mesh on CPU;
+the 512-device production meshes are exercised by launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config import INPUT_SHAPES
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.steps import input_specs, shape_applicable
+from repro.models.lm import build_model
+from repro.models.registry import ARCH_IDS, get_config
+from repro.optim.adamw import AdamW
+from repro.sharding import specs as SP
+
+ASSIGNED = [a for a in ARCH_IDS if a != "bert_base_paper"]
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_debug_mesh(1, 1)
+
+
+def test_param_specs_cover_all_leaves(mesh):
+    for arch in ("qwen3_1p7b", "granite_moe_1b_a400m", "mamba2_1p3b",
+                 "hymba_1p5b"):
+        cfg = get_config(arch).reduced()
+        lm = build_model(cfg)
+        struct = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+        sh = SP.params_shardings(struct, mesh,
+                                 scanned=cfg.remat_mode == "scan")
+        n_leaves = len(jax.tree_util.tree_leaves(struct))
+        n_sh = len(jax.tree_util.tree_leaves(
+            sh, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding)))
+        assert n_leaves == n_sh
+
+
+def test_column_row_rules():
+    cfg = get_config("qwen3_1p7b")                 # full size, divisible
+    lm = build_model(cfg)
+    struct = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+
+    class FakeMesh:
+        shape = {"model": 16, "data": 16}
+        axis_names = ("data", "model")
+
+    spec = SP.param_spec(
+        (jax.tree_util.DictKey("blocks"), jax.tree_util.DictKey("attn"),
+         jax.tree_util.DictKey("wq")),
+        jax.ShapeDtypeStruct((8, 2048, 2048), jnp.bfloat16),
+        scanned=True, mesh=FakeMesh(), model_dim=16)
+    assert spec == P(None, None, "model")
+    spec = SP.param_spec(
+        (jax.tree_util.DictKey("blocks"), jax.tree_util.DictKey("attn"),
+         jax.tree_util.DictKey("wo")),
+        jax.ShapeDtypeStruct((8, 2048, 2048), jnp.bfloat16),
+        scanned=True, mesh=FakeMesh(), model_dim=16)
+    assert spec == P(None, "model", None)
+    # expert weights: expert-parallel on the leading E axis
+    spec = SP.param_spec(
+        (jax.tree_util.DictKey("blocks"), jax.tree_util.DictKey("moe"),
+         jax.tree_util.DictKey("wi")),
+        jax.ShapeDtypeStruct((32, 1024, 512), jnp.bfloat16),
+        scanned=False, mesh=FakeMesh(), model_dim=16)
+    assert spec == P("model", None, None)
+    # non-divisible dims stay replicated
+    spec = SP.param_spec(
+        (jax.tree_util.DictKey("embed"),),
+        jax.ShapeDtypeStruct((50277, 512), jnp.float32),
+        scanned=False, mesh=FakeMesh(), model_dim=16)
+    assert spec == P(None, None)
+
+
+def test_input_specs_all_pairs_build():
+    """Every (arch x shape) either yields well-formed specs or is a
+    documented skip."""
+    n_ok = n_skip = 0
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in INPUT_SHAPES.values():
+            ok, why = shape_applicable(cfg, shape)
+            if not ok:
+                assert "full-attention" in why
+                n_skip += 1
+                continue
+            batch = input_specs(cfg, shape)
+            assert "tokens" in batch
+            B = shape.global_batch
+            assert batch["tokens"].shape[0] == B
+            if shape.kind == "decode":
+                assert batch["tokens"].shape[1] == 1
+            elif cfg.family == "vlm":
+                assert (batch["tokens"].shape[1] + cfg.vision_tokens
+                        == shape.seq_len)
+            else:
+                assert batch["tokens"].shape[1] == shape.seq_len
+            n_ok += 1
+    assert n_ok + n_skip == 40
+    assert n_skip == 7        # 7 pure-full-attention archs skip long_500k
+
+
+def test_jit_with_shardings_single_device(mesh):
+    """The sharded train step actually runs on a 1x1 mesh."""
+    cfg = get_config("qwen3_1p7b").reduced(dtype="float32")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    p_sh = SP.params_shardings(params, mesh, scanned=False)
+    batch = {"tokens": jnp.ones((2, 32), jnp.int32),
+             "labels": jnp.ones((2, 32), jnp.int32)}
+    b_sh = SP.batch_shardings(batch, mesh)
+    with mesh:
+        fn = jax.jit(lambda p, b: lm.loss(p, b)[0],
+                     in_shardings=(p_sh, b_sh))
+        loss = fn(jax.device_put(params, p_sh), batch)
+    assert np.isfinite(float(loss))
+
+
+def test_cache_specs(mesh):
+    cfg = get_config("hymba_1p5b").reduced()
+    lm = build_model(cfg)
+    cache = jax.eval_shape(lambda: lm.init_cache(4, 64))
+    sh = SP.cache_shardings(cache, mesh, stacked=False)
+    assert len(jax.tree_util.tree_leaves(sh,
+               is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding))) \
+        == len(jax.tree_util.tree_leaves(cache))
+
+
+def test_make_debug_mesh():
+    m = make_debug_mesh(1, 1)
+    assert m.shape == {"data": 1, "model": 1}
