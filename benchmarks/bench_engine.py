@@ -1,0 +1,215 @@
+"""Engine benchmark: the compile-once bucketed execution path.
+
+Measures the three quantities ISSUE 1's acceptance criteria name, plus
+steady-state throughput, and writes everything to ``BENCH_engine.json``:
+
+  1. scheduler  — ``greedy_plan`` (flat-array) vs the seed's python-list
+     ``greedy_plan_reference`` on 24/96-unit inputs.
+  2. collector  — deduplicated sheltered collection vs per-layer
+     collection on an >= 8-layer homogeneous model.
+  3. engine     — train steps over the SWAG-like length distributions for
+     mimose / none / sublinear: XLA compile counts vs #buckets vs
+     #distinct raw shapes, plan latency, cache hit rates, steps/s.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] \
+        [--out BENCH_engine.json]
+
+``--smoke`` shrinks every axis so the whole file runs in under a minute
+on CI while still exercising each measurement.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MimosePlanner, NonePlanner, SublinearPlanner
+from repro.core.collector import ShuttlingCollector
+from repro.core.planner import fixed_train_bytes
+from repro.core.scheduler import greedy_plan, greedy_plan_reference
+from repro.data.pipeline import DISTRIBUTIONS, bucket_edges, make_batches
+from repro.models.lm import build_model
+from repro.models.registry import get_config
+from repro.optim.adamw import AdamW
+from repro.train.trainer import Trainer
+
+
+def bench_scheduler(smoke: bool) -> dict:
+    """(c) greedy_plan latency: flat-array vs seed implementation."""
+    rng = np.random.default_rng(0)
+    reps = 30 if smoke else 300
+    out = {}
+    for n in (24, 96):
+        est = rng.uniform(1e6, 1e9, n)
+        budget = est.sum() * 0.4          # ~60% of units rematerialised
+        rows = {}
+        for fn, name in ((greedy_plan, "fast"),
+                         (greedy_plan_reference, "reference")):
+            fn(est, budget)               # warm any lazy imports
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                fn(est, budget)
+            rows[name] = (time.perf_counter() - t0) / reps * 1e6
+        agree = (greedy_plan(est, budget).remat
+                 == greedy_plan_reference(est, budget).remat)
+        out[f"units_{n}"] = {
+            "fast_us": round(rows["fast"], 1),
+            "reference_us": round(rows["reference"], 1),
+            "speedup": round(rows["reference"] / rows["fast"], 2),
+            "plans_identical": bool(agree),
+        }
+    return out
+
+
+def bench_collector(smoke: bool) -> dict:
+    """(b) sheltered collection: deduplicated vs per-layer traces."""
+    layers = 8
+    cfg = get_config("bert_base_paper").reduced(
+        num_layers=layers, d_model=96 if smoke else 128,
+        d_ff=192 if smoke else 256, vocab_size=512, dtype="float32")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+
+    def one(dedup: bool, S: int) -> float:
+        col = ShuttlingCollector(lm, dedup=dedup)
+        batch = {"tokens": jnp.ones((2, S), jnp.int32),
+                 "labels": jnp.ones((2, S), jnp.int32)}
+        t0 = time.perf_counter()
+        res = col.collect(params, batch)
+        return time.perf_counter() - t0, res
+
+    reps = 2 if smoke else 3
+    t_base = min(one(False, 128)[0] for _ in range(reps))
+    t_dedup, res = min(((t, r) for t, r in (one(True, 128)
+                                            for _ in range(reps))),
+                       key=lambda p: p[0])
+    base_res = one(False, 128)[1]
+    return {
+        "layers": layers,
+        "per_layer_s": round(t_base, 4),
+        "dedup_s": round(t_dedup, 4),
+        "speedup": round(t_base / t_dedup, 2),
+        "traced_units": res.traced_units,
+        "dedup_hits": res.dedup_hits,
+        "byte_identical": bool(np.array_equal(res.activation_vector(),
+                                              base_res.activation_vector())),
+    }
+
+
+def bench_engine(smoke: bool) -> dict:
+    """(a) compile counts bounded by #buckets + throughput comparison.
+
+    The pipeline emits batches at a fine quantum (many distinct raw
+    shapes); the mimose planner buckets at a coarser quantum, so the
+    engine's compile count collapses onto the bucket set while the
+    unbucketed baseline compiles once per raw shape.
+    """
+    cfg = get_config("bert_base_paper").reduced(
+        num_layers=2 if smoke else 4, d_model=128, d_ff=256,
+        vocab_size=512, dtype="float32")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+
+    dataset = "swag"
+    batch_size = 4
+    steps = 10 if smoke else 30
+    raw_quantum = 8                  # fine-grained -> many raw shapes
+    engine_quantum = 64              # planner bucket granularity
+
+    col = ShuttlingCollector(lm)
+    S_hi = DISTRIBUTIONS[dataset].hi
+    tot = col.collect(params, {
+        "tokens": jnp.ones((batch_size, S_hi), jnp.int32)
+    }).total_activation_bytes()
+    budget = fixed_train_bytes(params) + 0.5 * tot
+
+    batches = list(make_batches(dataset, batch_size=batch_size,
+                                vocab_size=cfg.vocab_size,
+                                num_batches=steps, quantum=raw_quantum,
+                                seed=1))
+    raw_shapes = {b["tokens"].shape for b in batches}
+    n_buckets_possible = len(bucket_edges(DISTRIBUTIONS[dataset],
+                                          engine_quantum))
+
+    results = {}
+    for kind in ("mimose", "none", "sublinear"):
+        if kind == "mimose":
+            planner = MimosePlanner(lm, budget, quantum=engine_quantum,
+                                    warmup_samples=3)
+        elif kind == "sublinear":
+            planner = SublinearPlanner(
+                lm, budget,
+                max_input_size=batch_size * S_hi, warmup_samples=3)
+        else:
+            planner = NonePlanner(lm)
+        tr = Trainer(lm, planner, AdamW(lr=1e-3))
+        p = jax.tree_util.tree_map(jnp.copy, params)
+        opt_state = tr.optimizer.init(p)
+        t0 = time.perf_counter()
+        for b in batches:
+            p, opt_state, _ = tr.step(p, opt_state, b)
+        wall = time.perf_counter() - t0
+        s = tr.summary()
+        results[kind] = {
+            "steps": steps,
+            "compiles": s["compiles"],
+            "buckets_seen": s["buckets"],
+            "jit_hits": s["jit_hits"],
+            "steps_per_s": round(steps / wall, 3),
+            "tokens_per_s": round(s["tokens_per_s"], 1),
+            "mean_plan_ms": round(s["total_plan_s"] / steps * 1e3, 3),
+            "mean_remat_units": s["mean_remat_units"],
+        }
+        if kind == "mimose":
+            results[kind]["plan_cache"] = {
+                "hits": planner.stats["cache_hits"],
+                "misses": planner.stats["cache_misses"],
+                "collections": planner.stats["collections"],
+            }
+    results["distinct_raw_shapes"] = len(raw_shapes)
+    results["bucket_set_size"] = n_buckets_possible
+    results["engine_quantum"] = engine_quantum
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (<1 min)")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args(argv)
+
+    report = {
+        "smoke": args.smoke,
+        "scheduler": bench_scheduler(args.smoke),
+        "collector": bench_collector(args.smoke),
+        "engine": bench_engine(args.smoke),
+    }
+    sched96 = report["scheduler"]["units_96"]
+    coll = report["collector"]
+    eng = report["engine"]
+    report["acceptance"] = {
+        "compile_count_bounded_by_buckets":
+            eng["mimose"]["compiles"] <= eng["mimose"]["buckets_seen"]
+            and eng["mimose"]["compiles"] < eng["distinct_raw_shapes"],
+        "collection_speedup_ge_5x": coll["speedup"] >= 5.0,
+        "scheduler_faster_than_seed_96_units": sched96["speedup"] > 1.0,
+    }
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    print(f"\nwrote {args.out}")
+    ok = all(report["acceptance"].values())
+    print("acceptance:", "PASS" if ok else "FAIL", report["acceptance"])
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,7 @@ from repro.core.estimator import (DecisionTreeEstimator, ESTIMATORS,  # noqa: F4
 from repro.core.planner import (MimosePlanner, NonePlanner, PlannerBase,  # noqa: F401
                                 fixed_train_bytes)
 from repro.core.baselines import DTRSimPlanner, SublinearPlanner  # noqa: F401
-from repro.core.scheduler import Plan, build_buckets, greedy_plan  # noqa: F401
+from repro.core.scheduler import (Plan, build_buckets, greedy_plan,  # noqa: F401
+                                  greedy_plan_reference)
 from repro.core.simulator import (SimResult, dtr_simulate,  # noqa: F401
                                   peak_if_checkpointing_unit, simulate)

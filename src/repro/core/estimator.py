@@ -46,6 +46,12 @@ class PolyEstimator:
 
     # -- fit / predict --------------------------------------------------------
     def fit(self):
+        if not self._sizes:
+            raise RuntimeError(
+                "PolyEstimator has no samples: predict/fit was called "
+                "before sheltered execution collected any input size — "
+                "call add_sample(input_size, activation_bytes) first "
+                "(or check estimator.ready before predicting).")
         t0 = time.perf_counter()
         s = np.asarray(self._sizes)
         Y = np.stack(self._acts)                       # (n_samples, n_units)
@@ -114,6 +120,10 @@ class DecisionTreeEstimator:
                 self._build(xs[i:], ys[i:], depth + 1))
 
     def fit(self):
+        if not self._sizes:
+            raise RuntimeError(
+                "DecisionTreeEstimator has no samples: call add_sample() "
+                "before predict/fit.")
         t0 = time.perf_counter()
         self._tree = self._build(np.asarray(self._sizes),
                                  np.stack(self._acts), 0)

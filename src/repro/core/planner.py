@@ -29,6 +29,7 @@ import numpy as np
 from repro.core.collector import ShuttlingCollector, input_size_of, _tree_bytes
 from repro.core.estimator import PolyEstimator
 from repro.core.scheduler import Plan, greedy_plan
+from repro.data.pipeline import bucket_length
 from repro.models.lm import LM
 
 
@@ -57,9 +58,17 @@ class PlanInfo:
 
 class PlannerBase:
     name = "base"
+    quantum: int = 1          # batch geometry granularity (1 = no bucketing)
 
     def plan(self, params, batch) -> Tuple[Tuple[bool, ...], PlanInfo]:
         raise NotImplementedError
+
+    def bucket_key(self, batch) -> int:
+        """The shared bucket id: quantised input size.  Batches padded to
+        ``quantum`` (data layer or trainer) make this key align 1:1 with
+        the jitted-step cache, so a repeated bucket never replans *or*
+        recompiles — the engine's compile count is O(#buckets)."""
+        return bucket_length(input_size_of(batch), self.quantum)
 
 
 class NonePlanner(PlannerBase):
@@ -109,8 +118,10 @@ class MimosePlanner(PlannerBase):
 
     # ------------------------------------------------------------------
     def _quantize(self, s: int) -> int:
-        q = self.quantum
-        return ((s + q - 1) // q) * q
+        # MUST stay identical to bucket_key's rounding: the plan cache
+        # (keyed here) and the trainer's jit cache (keyed by bucket_key)
+        # align only because both delegate to the same bucket_length
+        return bucket_length(s, self.quantum)
 
     def _fixed(self, params) -> float:
         if self.fixed_bytes is None:

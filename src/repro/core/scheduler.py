@@ -1,4 +1,4 @@
-"""Responsive memory scheduler — Algorithm 1 of the paper, verbatim.
+"""Responsive memory scheduler — Algorithm 1 of the paper.
 
 Greedy bucketed selection of which plan units to rematerialise:
 
@@ -11,6 +11,23 @@ Greedy bucketed selection of which plan units to rematerialise:
   4. While excess > 0: among buckets whose max member covers the excess,
      pick the one nearest the excess and take its earliest layer;
      otherwise take the earliest layer of the largest bucket.
+
+Two implementations live here:
+
+* ``greedy_plan`` — the production path.  Bucket construction is
+  vectorised (one ``argsort`` plus ``searchsorted`` jumps instead of the
+  per-element python loop) and the selection loop keeps per-bucket maxima
+  in a numpy array so each iteration is one masked argmin/argmax over
+  #buckets elements instead of rebuilding python lists and re-scanning
+  every bucket member (the seed's O(n^2) behaviour).  Bucket maxima are
+  maintained with a head pointer over the members stored in descending
+  order, so the whole plan is O(n log n + picks * #buckets).
+* ``greedy_plan_reference`` — the seed's verbatim python-list
+  implementation, kept as the equivalence oracle for tests and the
+  baseline for ``benchmarks/bench_engine.py``.
+
+Both return bit-identical plans (tie-breaks included); see
+``tests/test_engine.py::test_fast_scheduler_matches_reference``.
 """
 from __future__ import annotations
 
@@ -35,28 +52,105 @@ class Plan:
         return tuple(self.remat)
 
 
+def _bucket_bounds(desc: np.ndarray, tol: float) -> np.ndarray:
+    """Bucket boundaries over a descending estimate array.
+
+    Values below a head's tolerance band form a suffix of the sorted
+    array, so each boundary is one ``searchsorted`` jump — O(#buckets
+    log n) instead of the per-member python walk.
+    """
+    n = desc.size
+    asc = -desc                              # ascending view for searchsorted
+    bounds = [0]
+    i = 0
+    while i < n:
+        # first j with desc[j] <= head * (1 - tol): strict '>' keeps a unit
+        # in the bucket, matching the reference comparison
+        j = int(np.searchsorted(asc, -desc[i] * (1.0 - tol), side="left"))
+        j = max(j, i + 1)
+        bounds.append(j)
+        i = j
+    return np.asarray(bounds, dtype=np.int64)
+
+
 def build_buckets(est_mem: Sequence[float], tol: float = 0.10
                   ) -> List[List[int]]:
     """Bucket unit indices by similar estimated memory (paper lines 2-14)."""
-    order = sorted(range(len(est_mem)), key=lambda i: -est_mem[i])
-    buckets: List[List[int]] = []
-    i = 0
-    while i < len(order):
-        head = order[i]
-        bucket = [head]
-        j = i + 1
-        while j < len(order) and est_mem[order[j]] > est_mem[head] * (1 - tol):
-            bucket.append(order[j])
-            j += 1
-        bucket.sort()                       # timestamp ascending
-        buckets.append(bucket)
-        i = j
-    return buckets
+    est = np.asarray(est_mem, dtype=np.float64)
+    if est.size == 0:
+        return []
+    order = np.argsort(-est, kind="stable")
+    bounds = _bucket_bounds(est[order], tol)
+    return [np.sort(order[s:e]).tolist()            # timestamp ascending
+            for s, e in zip(bounds[:-1], bounds[1:])]
 
 
 def greedy_plan(est_mem: Sequence[float], budget_bytes: float,
                 fixed_bytes: float = 0.0, tol: float = 0.10) -> Plan:
     """Algorithm 1.  est_mem[i] = predicted activation bytes of unit i."""
+    est = np.asarray(est_mem, dtype=np.float64)
+    n = est.size
+    total = float(est.sum())
+    excess = total + float(fixed_bytes) - float(budget_bytes)
+    plan = [False] * n
+    if excess <= 0 or n == 0:
+        return Plan(plan, excess, 0.0, total)
+
+    order = np.argsort(-est, kind="stable")
+    desc = est[order]
+    bounds = _bucket_bounds(desc, tol)
+    nb = bounds.size - 1
+    starts, ends = bounds[:-1], bounds[1:]
+    # All bucket state lives in flat arrays indexed by *sorted position*
+    # (no per-bucket python objects — with near-unique estimates most
+    # buckets are singletons and per-bucket allocation dominates):
+    #   ts_flat  — unit ids grouped by bucket, timestamp-ascending within
+    #   ts_ptr   — per bucket, next timestamp pick (pop-front cursor)
+    #   alive    — per sorted position, unit not yet rematerialised
+    #   heads    — per bucket, sorted position of its current max
+    bid = np.repeat(np.arange(nb), np.diff(bounds))
+    ts_flat = order[np.lexsort((order, bid))]
+    ts_ptr = starts.copy()
+    pos_of = np.empty(n, dtype=np.int64)
+    pos_of[order] = np.arange(n)
+    alive = np.ones(n, dtype=bool)
+    heads = starts.copy()
+    bmax = desc[starts].copy()
+
+    remaining = excess
+    covered = 0.0
+    n_alive = n
+    while remaining > 0 and n_alive > 0:
+        cand = bmax > remaining
+        if cand.any():
+            # nearest above the excess (paper line 21: candidates.top());
+            # argmin over the +inf-masked array keeps the reference
+            # tie-break (first bucket in construction order wins)
+            b = int(np.argmin(np.where(cand, bmax, np.inf)))
+        else:
+            # largest activation as soon as possible (paper line 19)
+            b = int(np.argmax(bmax))
+        pick = int(ts_flat[ts_ptr[b]])
+        ts_ptr[b] += 1
+        plan[pick] = True
+        remaining -= est[pick]
+        covered += est[pick]
+        n_alive -= 1
+        # retire the pick and advance the bucket's max pointer past dead
+        # slots (amortised O(n) over the whole plan)
+        alive[pos_of[pick]] = False
+        h, e = int(heads[b]), int(ends[b])
+        while h < e and not alive[h]:
+            h += 1
+        heads[b] = h
+        bmax[b] = desc[h] if h < e else -np.inf
+    return Plan(plan, excess, covered, total)
+
+
+def greedy_plan_reference(est_mem: Sequence[float], budget_bytes: float,
+                          fixed_bytes: float = 0.0, tol: float = 0.10) -> Plan:
+    """The seed's python-list Algorithm 1 — equivalence oracle and the
+    baseline the engine benchmark measures ``greedy_plan`` against."""
     est = [float(m) for m in est_mem]
     total = sum(est)
     excess = total + fixed_bytes - budget_bytes
@@ -64,17 +158,30 @@ def greedy_plan(est_mem: Sequence[float], budget_bytes: float,
     if excess <= 0:
         return Plan(plan, excess, 0.0, total)
 
-    buckets = build_buckets(est, tol)
+    # the seed's own sort-and-walk bucketing, deliberately NOT shared
+    # with the vectorised build_buckets: the oracle must stay independent
+    # so the equivalence test can catch a bucketing bug in the fast path
+    order = sorted(range(len(est)), key=lambda i: -est[i])
+    buckets: List[List[int]] = []
+    i = 0
+    while i < len(order):
+        head = order[i]
+        bucket = [head]
+        j = i + 1
+        while j < len(order) and est[order[j]] > est[head] * (1 - tol):
+            bucket.append(order[j])
+            j += 1
+        bucket.sort()                       # timestamp ascending
+        buckets.append(bucket)
+        i = j
     remaining = excess
     covered = 0.0
     while remaining > 0 and any(buckets):
         # buckets whose largest member alone covers the remaining excess
         candidates = [b for b in buckets if b and max(est[i] for i in b) > remaining]
         if candidates:
-            # nearest above the excess (paper line 21: candidates.top())
             bucket = min(candidates, key=lambda b: max(est[i] for i in b))
         else:
-            # largest activation as soon as possible (paper line 19)
             bucket = max((b for b in buckets if b),
                          key=lambda b: max(est[i] for i in b))
         pick = bucket[0]                    # earliest timestamp in the bucket

@@ -15,9 +15,85 @@ bounded, mirroring the paper's "similar sizes share plans" observation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# bucketing — the data-layer half of the compile-once execution engine
+# ---------------------------------------------------------------------------
+
+def bucket_length(max_len: int, quantum: int) -> int:
+    """Smallest quantum multiple >= max_len (the batch's bucket seq-len)."""
+    q = max(int(quantum), 1)
+    return ((int(max_len) + q - 1) // q) * q
+
+
+def bucket_edges(dist: "LengthDistribution", quantum: int) -> List[int]:
+    """Every padded sequence length the distribution can produce.
+
+    This is the engine's compile-count bound: batch geometry is always
+    drawn from this fixed set, so the number of distinct (shape, plan)
+    pairs — and therefore XLA compiles — is O(len(bucket_edges)), not
+    O(#distinct raw lengths).
+    """
+    lo = bucket_length(dist.lo, quantum)
+    hi = bucket_length(dist.hi, quantum)
+    return list(range(lo, hi + 1, max(int(quantum), 1)))
+
+
+def top_buckets(dataset: str, *, batch_size: int, quantum: int, k: int,
+                seed: int = 0, samples: int = 256) -> List[Tuple[int, float]]:
+    """The k most likely bucket seq-lens, with their empirical frequency.
+
+    Used to pre-warm plan + jit caches off the critical path: compile the
+    buckets that will actually occur before step 0 instead of eating the
+    compile stall mid-training.
+    """
+    dist = DISTRIBUTIONS[dataset]
+    rng = np.random.default_rng(seed)
+    counts: Dict[int, int] = {}
+    for _ in range(samples):
+        lens = dist.sample(rng, batch_size)
+        S = bucket_length(int(lens.max()), quantum)
+        counts[S] = counts.get(S, 0) + 1
+    ranked = sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+    return [(S, c / samples) for S, c in ranked]
+
+
+def pad_batch(batch: dict, quantum: int) -> dict:
+    """Pad a ragged batch's sequence axis up to its bucket length.
+
+    tokens/labels pad with 0 (the pad id), weights with 0.0 so the loss
+    mask stays exact — the true ``lengths`` ride along untouched.  If
+    ``weights`` is absent but ``lengths`` is present, exact weights are
+    rebuilt from the true lengths.  Already-bucketed batches pass through
+    unchanged.
+    """
+    q = max(int(quantum), 1)
+    tokens = np.asarray(batch["tokens"])
+    B, S = tokens.shape
+    Sp = bucket_length(S, q)
+    out = dict(batch)
+    if "weights" not in out:
+        if "lengths" in out:
+            lens = np.asarray(out["lengths"])
+            out["weights"] = (np.arange(S)[None, :]
+                              < lens[:, None]).astype(np.float32)
+        elif Sp != S:
+            # weight-less batch about to grow a padded tail: materialise
+            # the implicit all-ones mask over the REAL positions first,
+            # otherwise the padding would enter the loss with weight 1
+            out["weights"] = np.ones((B, S), np.float32)
+    if Sp == S:
+        return out
+    pad = Sp - S
+    for key in ("tokens", "labels", "weights"):
+        if key in out:
+            a = np.asarray(out[key])
+            out[key] = np.pad(a, ((0, 0), (0, pad)))
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,8 +138,7 @@ def make_batches(dataset: str, *, batch_size: int, vocab_size: int,
     rng = np.random.default_rng(seed)
     for _ in range(num_batches):
         lens = dist.sample(rng, batch_size)
-        max_len = int(lens.max())
-        S = ((max_len + quantum - 1) // quantum) * quantum
+        S = bucket_length(int(lens.max()), quantum)
         # learnable synthetic language: deterministic bigram successor
         # (token_{t+1} = a*token_t + c mod V) from a random start, so the
         # convergence benchmarks (paper Fig. 15) measure real learning.

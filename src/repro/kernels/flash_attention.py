@@ -26,6 +26,24 @@ from jax.experimental import pallas as pl
 
 NEG_INF = float(jnp.finfo(jnp.float32).min)
 
+_LEAD = (pl.dslice(0, 1), pl.dslice(0, 1))   # (batch, head) block coords
+
+
+def _load_seq(ref, start, size):
+    """Load a (size, hd) tile at seq offset ``start`` from a (1,1,S,hd) ref.
+
+    The leading unit dims are addressed with size-1 dslices rather than
+    raw ints: integer indices inside ``pl.load`` break the interpret-mode
+    discharge rule on this jax version, and the dslice form lowers to the
+    same VMEM access on TPU.
+    """
+    return pl.load(ref, _LEAD + (pl.dslice(start, size), slice(None)))[0, 0]
+
+
+def _load_row(ref, start, size):
+    """Load a (size,) row vector at seq offset ``start`` from a (1,1,S) ref."""
+    return pl.load(ref, _LEAD + (pl.dslice(start, size),))[0, 0]
+
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int,
                   causal: bool, window: int, sm_scale: float):
@@ -40,10 +58,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int,
 
     def body(j, carry):
         acc, m_prev, l_prev = carry
-        k = pl.load(k_ref, (0, 0, pl.dslice(j * block_k, block_k),
-                            slice(None))).astype(jnp.float32)  # (bk, hd)
-        v = pl.load(v_ref, (0, 0, pl.dslice(j * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
+        k = _load_seq(k_ref, j * block_k, block_k).astype(jnp.float32)  # (bk, hd)
+        v = _load_seq(v_ref, j * block_k, block_k).astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (bq, bk)
         k_pos = j * block_k + jax.lax.broadcasted_iota(
@@ -132,10 +148,8 @@ def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         nkb, pl.cdiv((qi + 1) * bq, block_k))
 
     def body(j, dq):
-        k = pl.load(k_ref, (0, 0, pl.dslice(j * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, 0, pl.dslice(j * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
+        k = _load_seq(k_ref, j * block_k, block_k).astype(jnp.float32)
+        v = _load_seq(v_ref, j * block_k, block_k).astype(jnp.float32)
         s = sm_scale * jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -171,12 +185,10 @@ def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
     def body(i, carry):
         dk, dv = carry
-        q = pl.load(q_ref, (0, 0, pl.dslice(i * block_q, block_q),
-                            slice(None))).astype(jnp.float32)
-        do = pl.load(do_ref, (0, 0, pl.dslice(i * block_q, block_q),
-                              slice(None))).astype(jnp.float32)
-        lse = pl.load(lse_ref, (0, 0, pl.dslice(i * block_q, block_q)))
-        delta = pl.load(delta_ref, (0, 0, pl.dslice(i * block_q, block_q)))
+        q = _load_seq(q_ref, i * block_q, block_q).astype(jnp.float32)
+        do = _load_seq(do_ref, i * block_q, block_q).astype(jnp.float32)
+        lse = _load_row(lse_ref, i * block_q, block_q)
+        delta = _load_row(delta_ref, i * block_q, block_q)
         s = sm_scale * jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)               # (bq, bk)

@@ -146,6 +146,11 @@ def model_flops_for(cfg, shape) -> float:
 def analyse(compiled, *, arch: str, shape_cfg, cfg, mesh_name: str,
             chips: int) -> Roofline:
     ca = compiled.cost_analysis()
+    # jaxlib returns one dict per computation on some versions, a bare
+    # dict on others; normalise to a dict
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    ca = ca or {}
     ma = compiled.memory_analysis()
     coll = collective_bytes(compiled.as_text())
     # all-reduce traffic ~ 2x payload (reduce-scatter + all-gather phases)

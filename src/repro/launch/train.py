@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.core import (DTRSimPlanner, MimosePlanner, NonePlanner,
                         SublinearPlanner)
-from repro.data.pipeline import DISTRIBUTIONS, make_batches
+from repro.data.pipeline import (DISTRIBUTIONS, bucket_length, make_batches,
+                                 top_buckets)
 from repro.models.lm import build_model
 from repro.models.registry import get_config
 from repro.optim.adamw import AdamW, cosine_schedule
@@ -38,6 +39,9 @@ def main(argv=None):
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--quantum", type=int, default=32)
+    ap.add_argument("--prewarm", type=int, default=0,
+                    help="AOT-compile the top-K likeliest buckets before "
+                         "step 0 (0 = off)")
     ap.add_argument("--reduced", action="store_true",
                     help="reduced model variant (CPU demo)")
     ap.add_argument("--save", default=None)
@@ -56,8 +60,7 @@ def main(argv=None):
 
     budget = args.budget_mb * 2**20 if args.budget_mb else 1e18
     dist = DISTRIBUTIONS[args.dataset]
-    max_size = args.batch_size * ((dist.hi + args.quantum - 1)
-                                  // args.quantum) * args.quantum
+    max_size = args.batch_size * bucket_length(dist.hi, args.quantum)
     planner = {
         "mimose": lambda: MimosePlanner(lm, budget, quantum=args.quantum,
                                         warmup_samples=3),
@@ -75,6 +78,16 @@ def main(argv=None):
                            seed=0)
     t0 = time.time()
     opt_state = opt.init(params)
+    if args.prewarm:
+        likely = top_buckets(args.dataset, batch_size=args.batch_size,
+                             quantum=max(args.quantum,
+                                         getattr(planner, "quantum", 1)),
+                             k=args.prewarm)
+        tw = time.time()
+        n = trainer.prewarm(params, opt_state, [S for S, _ in likely],
+                            args.batch_size)
+        print(f"prewarmed {n} bucket(s) {[S for S, _ in likely]} "
+              f"in {time.time() - tw:.1f}s")
     for i, batch in enumerate(batches):
         params, opt_state, loss = trainer.step(params, opt_state, batch)
         if i % 10 == 0 or i == args.steps - 1:
@@ -83,6 +96,7 @@ def main(argv=None):
                   f" remat={st.remat_units} step_s={st.step_time_s:.3f}")
     print(f"done in {time.time() - t0:.1f}s")
     print("summary:", trainer.summary())
+    print("engine:", trainer.cache_stats)
     if hasattr(planner, "stats"):
         print("planner:", planner.stats, "plans cached:",
               len(getattr(planner, "cache", {})))

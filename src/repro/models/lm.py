@@ -176,6 +176,12 @@ class PlanUnit:
     params: Any
     apply: Callable[[Any, Array], Array]   # pure fn(params, x) -> x
     flops: float = 0.0             # analytic forward flops (filled by collector)
+    # behavioural statics baked into ``apply`` (block kind, local/global
+    # attention flag, chunk width...).  Two units with equal signature AND
+    # equal param/input shapes trace to identical residual footprints, so
+    # the collector measures only one of them (O(#unique units) traces).
+    # None disables deduplication for this unit.
+    signature: Optional[tuple] = None
 
 
 # ---------------------------------------------------------------------------
@@ -521,13 +527,19 @@ class LM:
                     y, _, _ = block_apply(p, cfg, xx, "enc", positions=_pos,
                                           impl=self.attn_impl)
                     return y
-                units.append(PlanUnit(f"enc{i}", idx, bp, enc_fn))
+                units.append(PlanUnit(f"enc{i}", idx, bp, enc_fn,
+                                      signature=("enc",)))
                 idx += 1
 
         enc_out_struct = None
         if cfg.encoder_layers:
             enc_out_struct = jnp.zeros(
                 (B, batch["frames"].shape[1], cfg.d_model), self.dtype)
+        # decoder units close over the encoder output: its geometry must be
+        # part of the dedup signature or cross-attention residuals cached at
+        # one frame count would be replayed at another
+        enc_sig = (tuple(enc_out_struct.shape)
+                   if enc_out_struct is not None else None)
 
         def _slice(a, s, e):
             # works for arrays and ShapeDtypeStructs (abstract dry-run)
@@ -551,7 +563,10 @@ class LM:
                         return y, None
                     out, _ = jax.lax.scan(body, xx, p)
                     return out
-                units.append(PlanUnit(f"chunk{c}[{s}:{e}]", idx, p_chunk, chunk_fn))
+                units.append(PlanUnit(
+                    f"chunk{c}[{s}:{e}]", idx, p_chunk, chunk_fn,
+                    signature=("chunk", self._chunk_flag(s, e), e - s,
+                               enc_sig)))
                 idx += 1
         else:
             for i, bp in enumerate(params["blocks"]):
@@ -563,7 +578,9 @@ class LM:
                                           mrope_positions=mrope_positions,
                                           impl=self.attn_impl)
                     return y
-                units.append(PlanUnit(f"block{i}", idx, bp, blk_fn))
+                units.append(PlanUnit(f"block{i}", idx, bp, blk_fn,
+                                      signature=("block", self._is_global(i),
+                                                 enc_sig)))
                 idx += 1
         return units
 

@@ -1,25 +1,36 @@
 """Training loop with the Mimose planner on the critical path (paper §4.1).
 
-Per batch:
-  1. ``planner.plan`` maps the batch's input size to a remat mask —
-     cached plans are O(1); new sizes cost <1 ms (estimator + scheduler)
-     or one abstract collection during sheltered execution.
-  2. The (shape, mask) pair selects a jitted train step.  JAX recompiles
-     per shape regardless; Mimose's plan cache keys align with the jit
-     cache so a repeated size never recompiles *or* replans.
-  3. loss -> grad -> AdamW update, loss includes MoE aux losses.
+The trainer is the execution half of the *compile-once bucketed engine*:
+
+  1. Each incoming batch is padded up to the planner's quantum
+     (``repro.data.pipeline.pad_batch``) so batch geometry is always
+     drawn from the small fixed bucket set; the true ``lengths`` stay in
+     the batch dict until the loss weights are materialised, so masking
+     is exact and padded positions contribute nothing.
+  2. ``planner.plan`` maps the bucket to a remat mask — cached plans are
+     O(1); new buckets cost <1 ms (estimator + scheduler) or one
+     deduplicated abstract collection during sheltered execution.
+  3. The plan cache and the jit-step cache share one key: the planner's
+     ``bucket_key`` (quantised input size).  Because padding collapses
+     every raw shape in a bucket onto the bucket's canonical shape, a
+     repeated bucket never recompiles *or* replans, and total XLA
+     compiles are bounded by #buckets, not #distinct raw shapes.
+  4. ``prewarm`` AOT-compiles (``jit.lower(...).compile()``) the top-k
+     buckets off the critical path before step 0, so the first epoch
+     never stalls on mid-training compilation.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.planner import PlannerBase
+from repro.data.pipeline import pad_batch
 from repro.models.lm import LM
 from repro.optim.adamw import AdamW, AdamWState
 
@@ -32,62 +43,130 @@ class StepStats:
     compile: bool
     remat_units: int
     tokens: int
+    bucket: int = 0
 
 
 class Trainer:
     def __init__(self, lm: LM, planner: PlannerBase,
                  optimizer: Optional[AdamW] = None,
-                 remat_policy=None):
+                 remat_policy=None,
+                 bucket_pad: bool = True):
         self.lm = lm
         self.planner = planner
         self.optimizer = optimizer or AdamW()
         self.remat_policy = remat_policy
+        self.bucket_pad = bucket_pad
         self._step_cache: Dict[Any, Any] = {}
         self.history: list[StepStats] = []
+        self.cache_stats = {"compiles": 0, "prewarm_compiles": 0,
+                            "jit_hits": 0, "bucket_steps": {}}
 
     # ------------------------------------------------------------------
     def _batch_key(self, batch) -> tuple:
-        return tuple(sorted((k, tuple(np.shape(v)))
+        # dtypes matter, not just shapes: prewarmed entries are AOT
+        # Compiled executables fixed to the exact avals they were lowered
+        # with — a same-shape/different-dtype batch must miss the cache
+        # and compile, not crash inside a Compiled call
+        return tuple(sorted((k, tuple(np.shape(v)),
+                             str(getattr(v, "dtype", "")))
                             for k, v in batch.items() if k != "lengths"))
 
+    def _prepare(self, batch) -> dict:
+        """Bucket-pad and device-put one batch (drops the host-side
+        ``lengths`` after the exact loss weights are materialised)."""
+        if self.bucket_pad:
+            batch = pad_batch(batch, getattr(self.planner, "quantum", 1))
+        return {k: jnp.asarray(v) for k, v in batch.items() if k != "lengths"}
+
+    def _build_step(self, mask: Tuple[bool, ...]):
+        opt = self.optimizer
+        lm = self.lm
+        policy = self.remat_policy
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                loss, metrics = lm.loss(p, batch, remat_mask=mask,
+                                        remat_policy=policy)
+                return loss, metrics
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            return new_params, new_opt, loss, metrics
+
+        return jax.jit(train_step, donate_argnums=(0, 1))
+
+    def _step_key(self, mask: Tuple[bool, ...], batch) -> tuple:
+        # the bucket id is fully determined by the padded shapes already in
+        # the batch signature (bucket = quantised element count), so the
+        # jit cache keys on (shapes, mask) and aligns with the plan cache
+        # (keyed on the bucket id) through the shared bucket_length rounding
+        return (self._batch_key(batch), mask)
+
     def _get_step_fn(self, mask: Tuple[bool, ...], batch):
-        key = (self._batch_key(batch), mask)
+        key = self._step_key(mask, batch)
         fn = self._step_cache.get(key)
-        compiled = key in self._step_cache
         if fn is None:
-            opt = self.optimizer
-            lm = self.lm
-            policy = self.remat_policy
-
-            def train_step(params, opt_state, batch):
-                def loss_fn(p):
-                    loss, metrics = lm.loss(p, batch, remat_mask=mask,
-                                            remat_policy=policy)
-                    return loss, metrics
-                (loss, metrics), grads = jax.value_and_grad(
-                    loss_fn, has_aux=True)(params)
-                new_params, new_opt = opt.update(grads, opt_state, params)
-                return new_params, new_opt, loss, metrics
-
-            fn = jax.jit(train_step, donate_argnums=(0, 1))
+            fn = self._build_step(mask)
             self._step_cache[key] = fn
-        return fn, not compiled
+            self.cache_stats["compiles"] += 1
+            return fn, True
+        self.cache_stats["jit_hits"] += 1
+        return fn, False
+
+    # ------------------------------------------------------------------
+    def prewarm(self, params, opt_state: AdamWState,
+                seq_lens: Iterable[int], batch_size: int,
+                extra=None) -> int:
+        """AOT-compile the train step for the given bucket seq-lens off
+        the critical path (``jit.lower(...).compile()`` — no step is
+        executed, params are untouched).  Plans for those buckets are
+        computed and cached along the way, so the first real batch of a
+        prewarmed bucket is a pure cache hit on both caches.
+
+        ``extra`` maps additional batch keys to ``fn(batch_size, S) ->
+        array`` builders (the ``make_batches`` convention) — required for
+        families whose batches carry more than tokens/labels/weights
+        (encoder ``frames``, VLM ``vision_embeds``).  Returns the number
+        of executables compiled."""
+        n = 0
+        for S in seq_lens:
+            raw = {
+                "tokens": np.zeros((batch_size, int(S)), np.int32),
+                "labels": np.zeros((batch_size, int(S)), np.int32),
+                "weights": np.ones((batch_size, int(S)), np.float32),
+            }
+            if extra:
+                raw.update({k: v(batch_size, int(S))
+                            for k, v in extra.items()})
+            batch = self._prepare(raw)
+            mask, _info = self.planner.plan(params, batch)
+            key = self._step_key(mask, batch)
+            if key in self._step_cache:
+                continue
+            fn = self._build_step(mask)
+            self._step_cache[key] = fn.lower(params, opt_state, batch).compile()
+            self.cache_stats["prewarm_compiles"] += 1
+            n += 1
+        return n
 
     # ------------------------------------------------------------------
     def step(self, params, opt_state: AdamWState, batch) -> tuple:
-        batch = {k: jnp.asarray(v) for k, v in batch.items() if k != "lengths"}
+        batch = self._prepare(batch)
         t0 = time.perf_counter()
         mask, info = self.planner.plan(params, batch)
         t_plan = time.perf_counter() - t0
 
+        bucket = self.planner.bucket_key(batch)
         fn, is_new = self._get_step_fn(mask, batch)
         t1 = time.perf_counter()
         params, opt_state, loss, metrics = fn(params, opt_state, batch)
         loss = float(loss)
         t_step = time.perf_counter() - t1
+        bs = self.cache_stats["bucket_steps"]
+        bs[bucket] = bs.get(bucket, 0) + 1
         self.history.append(StepStats(loss, t_step, t_plan, is_new,
                                       int(sum(mask)),
-                                      int(metrics["tokens"])))
+                                      int(metrics["tokens"]), bucket))
         return params, opt_state, loss
 
     def run(self, params, batches, opt_state: Optional[AdamWState] = None):
@@ -108,6 +187,9 @@ class Trainer:
             "mean_step_s": float(np.mean([s.step_time_s for s in warm])),
             "total_plan_s": float(np.sum([s.plan_time_s for s in h])),
             "compiles": int(sum(s.compile for s in h)),
+            "prewarm_compiles": int(self.cache_stats["prewarm_compiles"]),
+            "jit_hits": int(self.cache_stats["jit_hits"]),
+            "buckets": len(self.cache_stats["bucket_steps"]),
             "mean_remat_units": float(np.mean([s.remat_units for s in h])),
             "tokens_per_s": float(np.sum([s.tokens for s in warm])
                                   / max(np.sum([s.step_time_s for s in warm]),

@@ -1,0 +1,115 @@
+"""Test harness glue.
+
+The property tests are written against ``hypothesis``; this container
+does not ship it and nothing may be pip-installed, so when the real
+library is missing we register a small deterministic stand-in that
+implements exactly the strategy surface the suite uses (``floats``,
+``integers``, ``lists``, ``sampled_from``, ``composite``) plus the
+``given``/``settings`` decorators.  Draws come from a seeded PRNG so
+runs are reproducible; the real hypothesis always wins when installed.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import random
+import sys
+import types
+
+
+def _install_hypothesis_shim() -> None:
+    try:
+        import hypothesis  # noqa: F401  (real library present)
+        return
+    except ImportError:
+        pass
+
+    class Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    def floats(min_value=None, max_value=None, allow_nan=True,
+               allow_infinity=True, **_):
+        lo = 0.0 if min_value is None else float(min_value)
+        hi = (lo + 1e6) if max_value is None else float(max_value)
+        return Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def integers(min_value=0, max_value=1 << 30, **_):
+        return Strategy(lambda rng: rng.randint(int(min_value), int(max_value)))
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def lists(elements, min_size=0, max_size=None, unique=False, **_):
+        hi = (min_size + 8) if max_size is None else max_size
+
+        def draw(rng: random.Random):
+            n = rng.randint(min_size, hi)
+            out, seen, tries = [], set(), 0
+            while len(out) < n and tries < 200 * (n + 1):
+                v = elements.example(rng)
+                tries += 1
+                if unique:
+                    if v in seen:
+                        continue
+                    seen.add(v)
+                out.append(v)
+            return out
+        return Strategy(draw)
+
+    def composite(fn):
+        @functools.wraps(fn)
+        def make(*args, **kwargs):
+            def draw_from(rng: random.Random):
+                return fn(lambda strat: strat.example(rng), *args, **kwargs)
+            return Strategy(draw_from)
+        return make
+
+    _DEFAULT_EXAMPLES = int(os.environ.get("HYPOTHESIS_SHIM_EXAMPLES", "15"))
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = (getattr(wrapper, "_shim_max_examples", None)
+                     or getattr(fn, "_shim_max_examples", None)
+                     or _DEFAULT_EXAMPLES)
+                n = min(int(n), _DEFAULT_EXAMPLES)
+                for i in range(n):
+                    rng = random.Random(f"{fn.__module__}.{fn.__qualname__}:{i}")
+                    drawn = [s.example(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+            # copy identity but NOT __wrapped__: pytest must see the
+            # (*args, **kwargs) signature, not the drawn parameters
+            for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+                setattr(wrapper, attr, getattr(fn, attr))
+            wrapper.is_hypothesis_test = True
+            return wrapper
+        return deco
+
+    def settings(max_examples=None, deadline=None, **_):
+        def deco(fn):
+            if max_examples is not None:
+                fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    strat_mod = types.ModuleType("hypothesis.strategies")
+    strat_mod.floats = floats
+    strat_mod.integers = integers
+    strat_mod.lists = lists
+    strat_mod.sampled_from = sampled_from
+    strat_mod.composite = composite
+    hyp.strategies = strat_mod
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat_mod
+
+
+_install_hypothesis_shim()

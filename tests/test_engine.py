@@ -1,0 +1,308 @@
+"""Tests for the compile-once bucketed execution engine (ISSUE 1):
+padded-bucket loss equivalence, plan-cache/jit-cache key alignment,
+collector deduplication, the vectorised scheduler, and the estimator
+guard."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MimosePlanner, NonePlanner, PolyEstimator
+from repro.core.collector import ShuttlingCollector
+from repro.core.planner import fixed_train_bytes
+from repro.core.scheduler import greedy_plan, greedy_plan_reference
+from repro.data.pipeline import (DISTRIBUTIONS, bucket_edges, bucket_length,
+                                 make_batches, pad_batch, top_buckets)
+from repro.models.lm import build_model
+from repro.models.registry import get_config
+from repro.optim.adamw import AdamW
+from repro.train.trainer import Trainer
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("bert_base_paper").reduced(
+        num_layers=4, d_model=128, d_ff=256, vocab_size=512)
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    return cfg, lm, params
+
+
+def _ragged_batch(S, B=2, vocab=512, seed=0):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(S // 2, S + 1, B)
+    tokens = rng.integers(1, vocab, (B, S)).astype(np.int32)
+    weights = (np.arange(S)[None, :] < lens[:, None]).astype(np.float32)
+    tokens = tokens * weights.astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1)
+    labels[:, -1] = 0
+    return {"tokens": tokens, "labels": labels, "weights": weights,
+            "lengths": lens}
+
+
+# ---------------------------------------------------------------------------
+# bucketing (data layer)
+# ---------------------------------------------------------------------------
+
+def test_bucket_length_rounds_up_to_quantum():
+    assert bucket_length(65, 64) == 128
+    assert bucket_length(64, 64) == 64
+    assert bucket_length(1, 64) == 64
+
+
+def test_bucket_edges_bound_geometry():
+    d = DISTRIBUTIONS["swag"]                     # lengths in [35, 141]
+    edges = set(bucket_edges(d, 32))
+    assert edges == {64, 96, 128, 160}
+    for b in make_batches("swag", batch_size=8, vocab_size=64,
+                          num_batches=40, quantum=32, seed=3):
+        assert b["tokens"].shape[1] in edges
+
+
+def test_top_buckets_are_quantum_multiples_and_ranked():
+    tb = top_buckets("swag", batch_size=8, quantum=32, k=3, seed=0)
+    assert 1 <= len(tb) <= 3
+    freqs = [f for _, f in tb]
+    assert freqs == sorted(freqs, reverse=True)
+    for S, f in tb:
+        assert S % 32 == 0 and 0 < f <= 1
+
+
+def test_pad_batch_pads_and_rebuilds_weights():
+    b = _ragged_batch(50)
+    del b["weights"]
+    p = pad_batch(b, 64)
+    assert p["tokens"].shape[1] == 64
+    assert p["weights"].shape == p["tokens"].shape
+    # exact mask from the true lengths; padded tail fully zeroed
+    assert (p["weights"].sum(1) == b["lengths"]).all()
+    assert (p["tokens"][:, 50:] == 0).all()
+    assert (p["weights"][:, 50:] == 0).all()
+
+
+def test_pad_batch_synthesizes_mask_for_bare_batch():
+    """Regression: a {tokens, labels} batch relies on lm.loss's implicit
+    all-ones weights — padding must materialise that mask over the REAL
+    positions so the padded tail cannot enter the loss."""
+    b = _ragged_batch(50)
+    del b["weights"], b["lengths"]
+    p = pad_batch(b, 64)
+    assert p["weights"].shape == (2, 64)
+    assert (p["weights"][:, :50] == 1).all()
+    assert (p["weights"][:, 50:] == 0).all()
+
+
+def test_pad_batch_noop_when_aligned():
+    b = _ragged_batch(64)
+    p = pad_batch(b, 64)
+    assert p["tokens"].shape == b["tokens"].shape
+    np.testing.assert_array_equal(p["tokens"], b["tokens"])
+
+
+def test_padded_bucket_loss_equals_unpadded(small):
+    """Masked loss on the padded bucket == loss on the raw ragged batch
+    (padding is causal-suffix + zero-weight, so it is invisible)."""
+    _, lm, params = small
+    raw = _ragged_batch(50)
+    padded = pad_batch(raw, 64)
+    l_raw, m_raw = lm.loss(params, {k: jnp.asarray(v) for k, v in raw.items()
+                                    if k != "lengths"})
+    l_pad, m_pad = lm.loss(params, {k: jnp.asarray(v)
+                                    for k, v in padded.items()
+                                    if k != "lengths"})
+    assert float(m_raw["tokens"]) == float(m_pad["tokens"])
+    np.testing.assert_allclose(float(l_raw), float(l_pad),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# unified plan-cache / jit-cache key
+# ---------------------------------------------------------------------------
+
+def test_repeat_bucket_means_zero_recompiles(small):
+    """Raw batches of many distinct lengths inside one bucket share ONE
+    compiled step and ONE plan: the caches are keyed identically."""
+    _, lm, params = small
+    planner = MimosePlanner(lm, budget_bytes=1e12, quantum=64,
+                            warmup_samples=2)
+    tr = Trainer(lm, planner, AdamW(lr=1e-3))
+    p = jax.tree_util.tree_map(jnp.copy, params)   # steps donate buffers
+    opt_state = tr.optimizer.init(p)
+    for i, S in enumerate((30, 40, 50, 60, 33, 64)):
+        p, opt_state, _ = tr.step(p, opt_state, _ragged_batch(S, seed=i))
+    assert tr.cache_stats["compiles"] == 1
+    assert tr.cache_stats["jit_hits"] == 5
+    assert list(tr.cache_stats["bucket_steps"]) == [2 * 64]
+    assert planner.stats["cache_misses"] == 1
+    assert planner.stats["cache_hits"] == 5
+
+
+def test_compiles_bounded_by_buckets_not_raw_shapes(small):
+    _, lm, params = small
+    planner = MimosePlanner(lm, budget_bytes=1e12, quantum=64,
+                            warmup_samples=2)
+    tr = Trainer(lm, planner, AdamW(lr=1e-3))
+    p = jax.tree_util.tree_map(jnp.copy, params)   # steps donate buffers
+    opt_state = tr.optimizer.init(p)
+    sizes = (30, 60, 70, 120, 40, 100, 50, 110)    # 8 raw -> 2 buckets
+    for i, S in enumerate(sizes):
+        p, opt_state, _ = tr.step(p, opt_state, _ragged_batch(S, seed=i))
+    assert tr.cache_stats["compiles"] == 2
+    assert sorted(tr.cache_stats["bucket_steps"]) == [2 * 64, 2 * 128]
+
+
+def test_prewarm_compiles_off_critical_path(small):
+    _, lm, params = small
+    planner = MimosePlanner(lm, budget_bytes=1e12, quantum=64,
+                            warmup_samples=2)
+    tr = Trainer(lm, planner, AdamW(lr=1e-3))
+    p = jax.tree_util.tree_map(jnp.copy, params)   # steps donate buffers
+    opt_state = tr.optimizer.init(p)
+    n = tr.prewarm(p, opt_state, [64, 128], batch_size=2)
+    assert n == 2 and tr.cache_stats["prewarm_compiles"] == 2
+    p, opt_state, loss = tr.step(p, opt_state, _ragged_batch(50))
+    assert np.isfinite(loss)
+    assert tr.cache_stats["compiles"] == 0          # served by prewarm
+    assert tr.cache_stats["jit_hits"] == 1
+
+
+def test_prewarm_extra_keys_for_encoder_family():
+    """Encoder batches carry ``frames``; prewarm takes builders for the
+    extra keys instead of KeyErroring on its synthetic batch."""
+    cfg = get_config("seamless_m4t_large_v2").reduced(
+        num_layers=1, encoder_layers=1, d_model=64, d_ff=128,
+        vocab_size=128, dtype="float32")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    tr = Trainer(lm, MimosePlanner(lm, budget_bytes=1e12, quantum=64,
+                                   warmup_samples=2), AdamW(lr=1e-3))
+    opt_state = tr.optimizer.init(params)
+    extra = {"frames": lambda B, S: np.zeros((B, 16, cfg.d_model),
+                                             np.float32)}
+    with pytest.raises(KeyError):
+        tr.prewarm(params, opt_state, [64], batch_size=2)
+    n = tr.prewarm(params, opt_state, [64], batch_size=2, extra=extra)
+    assert n == 1 and tr.cache_stats["prewarm_compiles"] == 1
+
+
+def test_unbucketed_planner_still_trains(small):
+    """NonePlanner has quantum 1: the engine degrades to the seed's
+    per-shape behaviour without erroring."""
+    _, lm, params = small
+    tr = Trainer(lm, NonePlanner(lm), AdamW(lr=1e-3))
+    p = jax.tree_util.tree_map(jnp.copy, params)   # steps donate buffers
+    opt_state = tr.optimizer.init(p)
+    p, _, loss = tr.step(p, opt_state, _ragged_batch(48))
+    assert np.isfinite(loss)
+    assert tr.cache_stats["compiles"] == 1
+
+
+# ---------------------------------------------------------------------------
+# deduplicated collector
+# ---------------------------------------------------------------------------
+
+def test_dedup_collector_matches_per_layer_byte_for_byte(small):
+    _, lm, params = small
+    batch = {"tokens": jnp.ones((2, 96), jnp.int32),
+             "labels": jnp.ones((2, 96), jnp.int32)}
+    base = ShuttlingCollector(lm, dedup=False).collect(params, batch)
+    fast = ShuttlingCollector(lm, dedup=True).collect(params, batch)
+    assert np.array_equal(base.activation_vector(), fast.activation_vector())
+    for r0, r1 in zip(base.records, fast.records):
+        assert (r0.name, r0.index, r0.activation_bytes, r0.output_bytes,
+                r0.param_bytes) == (r1.name, r1.index, r1.activation_bytes,
+                                    r1.output_bytes, r1.param_bytes)
+    # 4 homogeneous blocks -> one abstract trace
+    assert fast.traced_units == 1
+    assert fast.dedup_hits == 3
+    assert base.traced_units == 4 and base.dedup_hits == 0
+
+
+def test_dedup_keyed_on_encoder_geometry():
+    """Regression: decoder units close over the encoder output, so frame
+    count must be part of the trace key — same token shape with a
+    different F must NOT replay cached cross-attention residuals."""
+    cfg = get_config("seamless_m4t_large_v2").reduced(
+        num_layers=2, encoder_layers=2, d_model=96, d_ff=192,
+        vocab_size=256, dtype="float32")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    col = ShuttlingCollector(lm, dedup=True)
+    base = ShuttlingCollector(lm, dedup=False)
+    for F in (16, 64):
+        batch = {"tokens": jnp.ones((2, 32), jnp.int32),
+                 "labels": jnp.ones((2, 32), jnp.int32),
+                 "frames": jnp.zeros((2, F, cfg.d_model), jnp.float32)}
+        fast = col.collect(params, batch)
+        ref = base.collect(params, batch)
+        np.testing.assert_array_equal(fast.activation_vector(),
+                                      ref.activation_vector())
+
+
+def test_measure_time_not_replayed_from_dedup_cache(small):
+    """Timings are wall-clock, not shape-determined: every unit gets its
+    own measurement even when its byte trace is a dedup hit."""
+    _, lm, params = small
+    col = ShuttlingCollector(lm, measure_time=True, dedup=True)
+    batch = {"tokens": jnp.ones((1, 32), jnp.int32),
+             "labels": jnp.ones((1, 32), jnp.int32)}
+    res = col.collect(params, batch)
+    assert res.dedup_hits > 0
+    assert all(r.forward_time_s > 0 for r in res.records)
+
+
+def test_dedup_trace_cache_persists_across_sizes(small):
+    _, lm, params = small
+    col = ShuttlingCollector(lm)
+    for S in (64, 96, 64):
+        col.collect(params, {"tokens": jnp.ones((2, S), jnp.int32),
+                             "labels": jnp.ones((2, S), jnp.int32)})
+    # one trace per distinct geometry, repeats fully served by the cache
+    assert col.stats["traces"] == 2
+    assert col.stats["dedup_hits"] == 3 * 4 - 2
+
+
+# ---------------------------------------------------------------------------
+# vectorised scheduler
+# ---------------------------------------------------------------------------
+
+def test_fast_scheduler_matches_reference():
+    rng = np.random.default_rng(7)
+    for trial in range(300):
+        n = int(rng.integers(1, 64))
+        kind = trial % 4
+        if kind == 0:
+            est = rng.uniform(1.0, 1e9, n)
+        elif kind == 1:
+            est = np.round(rng.uniform(1, 10, n)) * 100.0   # heavy ties
+        elif kind == 2:
+            est = np.full(n, 100.0)                         # one bucket
+        else:
+            est = np.concatenate([rng.uniform(1, 1e6, n // 2 + 1),
+                                  np.zeros(n // 2)])[:n]    # zero units
+        budget = float(rng.uniform(0, est.sum() * 1.2))
+        fixed = float(rng.choice([0.0, est.sum() * 0.1]))
+        a = greedy_plan(est, budget, fixed)
+        b = greedy_plan_reference(est, budget, fixed)
+        assert a.remat == b.remat
+        assert a.excess_bytes == pytest.approx(b.excess_bytes)
+        assert a.covered_bytes == pytest.approx(b.covered_bytes)
+
+
+def test_fast_scheduler_empty_input():
+    p = greedy_plan([], 100.0)
+    assert p.remat == [] and p.covered_bytes == 0.0
+
+
+# ---------------------------------------------------------------------------
+# estimator guard
+# ---------------------------------------------------------------------------
+
+def test_estimator_predict_before_samples_raises_clearly():
+    est = PolyEstimator(2)
+    with pytest.raises(RuntimeError, match="no samples"):
+        est.predict(128)
+    with pytest.raises(RuntimeError, match="no samples"):
+        est.fit()
+    est.add_sample(64, [1.0])
+    assert est.predict(64)[0] >= 0.0      # usable after the first sample
