@@ -10,6 +10,12 @@ steady-state throughput, and writes everything to ``BENCH_engine.json``:
   3. engine     — train steps over the SWAG-like length distributions for
      mimose / none / sublinear: XLA compile counts vs #buckets vs
      #distinct raw shapes, plan latency, cache hit rates, steps/s.
+  4. sharded    — the mesh-budget scenario sweep (1-device, (4, 2),
+     (16, 16)): the same per-device HBM budget is infeasible on one
+     device (the fixed param/grad/optimizer bytes alone exceed it) but
+     the sharding-aware planner fits it on the meshes, validated by the
+     per-device liveness simulator.  MeshBudget is pure axis-size math,
+     so the 256-chip scenario plans on this single-CPU container.
 
 Usage:
     PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] \
@@ -29,7 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import MimosePlanner, NonePlanner, SublinearPlanner
+from repro.core import (MeshBudget, MimosePlanner, NonePlanner,
+                        SublinearPlanner, simulate_sharded)
 from repro.core.collector import ShuttlingCollector
 from repro.core.planner import fixed_train_bytes
 from repro.core.scheduler import greedy_plan, greedy_plan_reference
@@ -178,6 +185,61 @@ def bench_engine(smoke: bool) -> dict:
     return results
 
 
+def bench_sharded(smoke: bool) -> dict:
+    """(d) mesh-budget scenario sweep: 1-device vs (4, 2) vs (16, 16).
+
+    One per-device HBM budget (75% of the single-device fixed bytes, so
+    a lone device cannot even hold the param/grad/optimizer state) is
+    planned on each mesh shape; the per-device liveness simulation then
+    checks the plan's peak against the budget.
+    """
+    cfg = get_config("bert_base_paper").reduced(
+        num_layers=2 if smoke else 4, d_model=128, d_ff=256,
+        vocab_size=512, dtype="float32")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    S = 32 if smoke else 64
+    batch = {"tokens": jnp.ones((16, S), jnp.int32),
+             "labels": jnp.ones((16, S), jnp.int32)}
+
+    fixed_global = fixed_train_bytes(params)
+    hbm = 0.75 * fixed_global
+    out = {"hbm_per_device_bytes": int(hbm),
+           "single_device_fixed_bytes": int(fixed_global),
+           "scenarios": {}}
+    for shape in ((1,), (4, 2), (16, 16)):
+        budget = MeshBudget.from_shape(shape, hbm, zero1=True)
+        # the scheduler models peak as fixed + saved residuals; the
+        # liveness replay additionally charges the executing unit's
+        # recomputed residuals + gradient working set (up to 2x the
+        # largest unit), so plan with that much headroom
+        col = ShuttlingCollector(lm, mesh_budget=budget).collect(
+            params, batch)
+        margin = 2 * float(col.device_activation_vector().max(initial=0.0))
+        planner = MimosePlanner(lm, max(hbm - margin, 0.0),
+                                mesh_budget=budget,
+                                warmup_samples=1, quantum=32)
+        t0 = time.perf_counter()
+        mask, _info = planner.plan(params, batch)
+        t_plan = time.perf_counter() - t0
+        sim = simulate_sharded(col.device_activation_vector(), mask,
+                               planner.resolve_fixed_bytes(params), budget.n_devices)
+        name = "x".join(str(s) for s in shape)
+        out["scenarios"][name] = {
+            "n_devices": budget.n_devices,
+            "fixed_bytes_per_device": int(planner.resolve_fixed_bytes(params)),
+            "peak_bytes_per_device": int(sim.peak_bytes_per_device),
+            "budget_bytes_per_device": int(hbm),
+            "fits": bool(sim.fits(hbm)),
+            "n_remat": int(sum(mask)),
+            "plan_ms": round(t_plan * 1e3, 3),
+        }
+    sc = out["scenarios"]
+    out["single_device_infeasible"] = not sc["1"]["fits"]
+    out["sharded_fit_per_device"] = sc["4x2"]["fits"] and sc["16x16"]["fits"]
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -190,16 +252,20 @@ def main(argv=None) -> int:
         "scheduler": bench_scheduler(args.smoke),
         "collector": bench_collector(args.smoke),
         "engine": bench_engine(args.smoke),
+        "sharded": bench_sharded(args.smoke),
     }
     sched96 = report["scheduler"]["units_96"]
     coll = report["collector"]
     eng = report["engine"]
+    shd = report["sharded"]
     report["acceptance"] = {
         "compile_count_bounded_by_buckets":
             eng["mimose"]["compiles"] <= eng["mimose"]["buckets_seen"]
             and eng["mimose"]["compiles"] < eng["distinct_raw_shapes"],
         "collection_speedup_ge_5x": coll["speedup"] >= 5.0,
         "scheduler_faster_than_seed_96_units": sched96["speedup"] > 1.0,
+        "sharded_fits_where_single_device_cannot":
+            shd["single_device_infeasible"] and shd["sharded_fit_per_device"],
     }
 
     with open(args.out, "w") as f:

@@ -7,6 +7,9 @@ from repro.core.planner import (MimosePlanner, NonePlanner, PlannerBase,  # noqa
                                 fixed_train_bytes)
 from repro.core.baselines import DTRSimPlanner, SublinearPlanner  # noqa: F401
 from repro.core.scheduler import (Plan, build_buckets, greedy_plan,  # noqa: F401
-                                  greedy_plan_reference)
-from repro.core.simulator import (SimResult, dtr_simulate,  # noqa: F401
-                                  peak_if_checkpointing_unit, simulate)
+                                  greedy_plan_reference, greedy_plan_sharded)
+from repro.core.simulator import (ShardedSimResult, SimResult,  # noqa: F401
+                                  dtr_simulate, peak_if_checkpointing_unit,
+                                  simulate, simulate_sharded)
+from repro.sharding.budget import (MeshBudget,  # noqa: F401
+                                   fixed_train_bytes_per_device)

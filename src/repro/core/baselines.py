@@ -6,6 +6,10 @@
 * ``DTRSimPlanner`` — dynamic: greedy evict-on-OOM per iteration with no
   plan reuse and with DTR's measured memory-fragmentation inflation
   (paper §3.2 / Fig. 5); planning cost is re-paid on every batch.
+
+Both accept the same ``mesh_budget`` as ``MimosePlanner`` so the paper's
+comparisons stay apples-to-apples under a mesh: collection, fixed bytes
+and the budget all switch to per-device quantities.
 """
 from __future__ import annotations
 
@@ -16,25 +20,31 @@ import numpy as np
 
 from repro.core.collector import ShuttlingCollector, input_size_of
 from repro.core.estimator import PolyEstimator
-from repro.core.planner import PlanInfo, PlannerBase, fixed_train_bytes
+from repro.core.planner import PlanInfo, PlannerBase
 from repro.core.scheduler import Plan, greedy_plan
 from repro.core.simulator import dtr_simulate
 from repro.models.lm import LM
+from repro.sharding.budget import MeshBudget
 
 
 class SublinearPlanner(PlannerBase):
     name = "sublinear"
 
-    def __init__(self, lm: LM, budget_bytes: float, max_input_size: int, *,
+    def __init__(self, lm: LM, budget_bytes: Optional[float] = None,
+                 max_input_size: int = 0, *,
                  fixed_bytes: Optional[float] = None,
                  shard_divisor: int = 1,
+                 mesh_budget: Optional[MeshBudget] = None,
                  warmup_samples: int = 4):
         self.lm = lm
-        self.budget_bytes = float(budget_bytes)
+        self.mesh_budget = mesh_budget
+        if not max_input_size:
+            raise ValueError("max_input_size is required")
+        self.budget_bytes = self.resolve_budget_bytes(budget_bytes)
         self.max_input_size = int(max_input_size)
         self.fixed_bytes = fixed_bytes
         self.shard_divisor = shard_divisor
-        self.collector = ShuttlingCollector(lm)
+        self.collector = ShuttlingCollector(lm, mesh_budget=mesh_budget)
         self.estimator = PolyEstimator(2, min_samples=warmup_samples)
         self._plan: Optional[Plan] = None
 
@@ -53,12 +63,12 @@ class SublinearPlanner(PlannerBase):
                 probe["frames"] = np.zeros(
                     (B, max(1, int(s) // B), self.lm.cfg.d_model), np.float32)
             res = self.collector.collect(params, probe)
-            self.estimator.add_sample(res.input_size, res.activation_vector())
+            self.estimator.add_sample(res.input_size,
+                                      self.collected_vector(res))
         est = self.estimator.predict(self.max_input_size)
-        if self.fixed_bytes is None:
-            self.fixed_bytes = fixed_train_bytes(params) / self.shard_divisor
-        self._plan = greedy_plan(est / self.shard_divisor, self.budget_bytes,
-                                 self.fixed_bytes)
+        self._plan = greedy_plan(est / self.activation_divisor_scalar(),
+                                 self.budget_bytes,
+                                 self.resolve_fixed_bytes(params))
 
     def plan(self, params, batch):
         if self._plan is None:
@@ -71,18 +81,20 @@ class SublinearPlanner(PlannerBase):
 class DTRSimPlanner(PlannerBase):
     name = "dtr"
 
-    def __init__(self, lm: LM, budget_bytes: float, *,
+    def __init__(self, lm: LM, budget_bytes: Optional[float] = None, *,
                  fixed_bytes: Optional[float] = None,
                  shard_divisor: int = 1,
+                 mesh_budget: Optional[MeshBudget] = None,
                  frag_factor: float = 1.25,
                  plan_op_cost_s: float = 2e-5):
         self.lm = lm
-        self.budget_bytes = float(budget_bytes)
+        self.mesh_budget = mesh_budget
+        self.budget_bytes = self.resolve_budget_bytes(budget_bytes)
         self.fixed_bytes = fixed_bytes
         self.shard_divisor = shard_divisor
         self.frag_factor = frag_factor
         self.plan_op_cost_s = plan_op_cost_s
-        self.collector = ShuttlingCollector(lm)
+        self.collector = ShuttlingCollector(lm, mesh_budget=mesh_budget)
         self._size_cache: Dict[int, np.ndarray] = {}
         self.stats = {"plan_ops": 0, "plan_time_s": 0.0, "replans": 0}
 
@@ -92,10 +104,9 @@ class DTRSimPlanner(PlannerBase):
         # never reuses planning work across iterations.
         if s not in self._size_cache:
             res = self.collector.collect(params, batch)
-            self._size_cache[s] = res.activation_vector()
-        act = self._size_cache[s] / self.shard_divisor
-        if self.fixed_bytes is None:
-            self.fixed_bytes = fixed_train_bytes(params) / self.shard_divisor
+            self._size_cache[s] = self.collected_vector(res)
+        act = self._size_cache[s] / self.activation_divisor_scalar()
+        self.resolve_fixed_bytes(params)
 
         t0 = time.perf_counter()
         mask, plan_ops = dtr_simulate(act, self.budget_bytes,

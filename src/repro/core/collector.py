@@ -14,9 +14,17 @@ only when a new input size appears, with no model pre-analysis.
 
 For wall-time data (used in the paper's Table 2 overhead breakdown) the
 collector can also time a concrete forward per block on request.
+
+Sharding-aware collection: given a ``MeshBudget`` the collector also
+records each unit's *per-device* activation bytes — every leaf of the
+vjp closure is divided by its ``MeshBudget.activation_divisor`` (the
+``sharding/specs.py`` rules: batch over the data axes, tensor-parallel
+intermediates over ``model``), so downstream estimation and planning can
+run against a per-device HBM budget instead of a fictitious global one.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional
@@ -26,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import LM, PlanUnit
+from repro.sharding.budget import MeshBudget
 
 
 def _tree_bytes(tree) -> int:
@@ -42,6 +51,9 @@ class UnitRecord:
     output_bytes: int          # inter-block tensor (kept even when rematted)
     param_bytes: int
     forward_time_s: float = 0.0
+    # per-device residual bytes after the unit's PartitionSpec divisors
+    # (== activation_bytes when collected without a MeshBudget)
+    device_activation_bytes: int = 0
 
 
 @dataclasses.dataclass
@@ -55,16 +67,29 @@ class CollectionResult:
     def activation_vector(self) -> np.ndarray:
         return np.array([r.activation_bytes for r in self.records], dtype=np.float64)
 
+    def device_activation_vector(self) -> np.ndarray:
+        """Per-unit bytes landing on ONE device under the collection's
+        MeshBudget (identical to ``activation_vector`` without one)."""
+        return np.array([r.device_activation_bytes for r in self.records],
+                        dtype=np.float64)
+
     def total_activation_bytes(self) -> int:
         return int(sum(r.activation_bytes for r in self.records))
 
 
-def unit_residual_bytes(unit: PlanUnit, x_struct) -> Dict[str, int]:
+def unit_residual_bytes(unit: PlanUnit, x_struct,
+                        mesh_budget: Optional[MeshBudget] = None
+                        ) -> Dict[str, int]:
     """Exact residual footprint of one block, computed abstractly.
 
     ``jax.vjp(f, x)[1]`` is a pytree whose array leaves are precisely the
     tensors AD keeps live between forward and backward.  Weights appear in
     that closure too but are resident anyway, so they are subtracted.
+
+    With a ``mesh_budget`` the per-device footprint is also computed:
+    closure leaves matching a parameter's (shape, dtype) are excluded
+    (they are counted in the fixed per-device bytes instead) and each
+    remaining activation leaf is divided by its sharding divisor.
     """
     def capture(p, x):
         out, vjp_fn = jax.vjp(lambda xx: unit.apply(p, xx), x)
@@ -73,11 +98,36 @@ def unit_residual_bytes(unit: PlanUnit, x_struct) -> Dict[str, int]:
     out_struct, vjp_struct = jax.eval_shape(capture, unit.params, x_struct)
     resid = _tree_bytes(vjp_struct)
     params = _tree_bytes(unit.params)
-    return {
+    info = {
         "activation_bytes": max(0, resid - params),
         "output_bytes": _tree_bytes(out_struct),
         "param_bytes": params,
     }
+    if mesh_budget is None:
+        info["device_activation_bytes"] = info["activation_bytes"]
+        return info
+
+    B = int(x_struct.shape[0])
+    d_model = int(x_struct.shape[-1])
+    # params appear in the closure at their own (sharded) residency; match
+    # them out by (shape, dtype) multiset so only activations are divided
+    param_sig = collections.Counter(
+        (tuple(l.shape), str(jnp.dtype(l.dtype)))
+        for l in jax.tree_util.tree_leaves(unit.params)
+        if hasattr(l, "shape"))
+    dev = 0.0
+    for leaf in jax.tree_util.tree_leaves(vjp_struct):
+        if not hasattr(leaf, "shape"):
+            continue
+        key = (tuple(leaf.shape), str(jnp.dtype(leaf.dtype)))
+        if param_sig.get(key, 0) > 0:
+            param_sig[key] -= 1
+            continue
+        nbytes = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        dev += nbytes / mesh_budget.activation_divisor(
+            leaf.shape, batch=B, d_model=d_model)
+    info["device_activation_bytes"] = int(dev)
+    return info
 
 
 def input_size_of(batch) -> int:
@@ -112,10 +162,16 @@ class ShuttlingCollector:
     """
 
     def __init__(self, lm: LM, measure_time: bool = False,
-                 dedup: bool = True):
+                 dedup: bool = True,
+                 mesh_budget: Optional[MeshBudget] = None):
         self.lm = lm
         self.measure_time = measure_time
         self.dedup = dedup
+        # sharding-aware mode: also record per-device bytes under this
+        # budget's divisors.  Part of the trace-cache key so a collector
+        # is safe to rebuild with a different mesh shape.
+        self.mesh_budget = mesh_budget
+        self._mesh_sig = mesh_budget.sig() if mesh_budget is not None else None
         self._trace_cache: Dict[tuple, dict] = {}
         self.stats = {"traces": 0, "dedup_hits": 0, "collections": 0}
 
@@ -134,10 +190,10 @@ class ShuttlingCollector:
             info = None
             if self.dedup and u.signature is not None:
                 key = (u.signature, _tree_struct_sig(u.params),
-                       tuple(xs.shape), str(xs.dtype))
+                       tuple(xs.shape), str(xs.dtype), self._mesh_sig)
                 info = self._trace_cache.get(key)
             if info is None:
-                info = dict(unit_residual_bytes(u, xs))
+                info = dict(unit_residual_bytes(u, xs, self.mesh_budget))
                 if key is not None:
                     self._trace_cache[key] = info
                 traced += 1
@@ -149,7 +205,7 @@ class ShuttlingCollector:
             t_fwd = self._time_unit(u, xs) if self.measure_time else 0.0
             rec = UnitRecord(u.name, u.index, info["activation_bytes"],
                              info["output_bytes"], info["param_bytes"],
-                             t_fwd)
+                             t_fwd, info["device_activation_bytes"])
             records.append(rec)
         self.stats["traces"] += traced
         self.stats["dedup_hits"] += hits

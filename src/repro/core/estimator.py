@@ -9,6 +9,12 @@ decision tree used for the Table 3 comparison benchmark.
 
 All fitting is plain numpy least squares — training on 10 samples takes
 ~1 ms and prediction ~15 us, matching the paper's reported overheads.
+
+The estimator is unit-agnostic about sharding: a sharding-aware planner
+feeds it *per-device* byte vectors (global bytes already divided by the
+MeshBudget divisors, which are constant per unit across input sizes) —
+bytes stay polynomial in input size either way, so one fit serves any
+mesh shape via the divisor and nothing here needs to know the mesh.
 """
 from __future__ import annotations
 

@@ -15,6 +15,14 @@ Phases (paper §4.1):
   * responsive execution — the estimator predicts per-unit bytes for any
     size, the greedy scheduler emits a plan in O(n log n), and the plan
     cache keyed by quantised input size makes repeats free.
+
+Sharding-aware mode: pass ``mesh_budget=MeshBudget.from_shape(...)`` and
+every quantity above becomes *per-device* — the collector divides each
+activation leaf by its PartitionSpec divisor, the estimator fits
+per-device bytes, the fixed bytes are the param/grad/optimizer *shards*
+(ZeRO-1 aware), and the scheduler plans against
+``mesh_budget.hbm_per_device_bytes``.  Plan-cache keys embed the mesh
+signature so plans never leak across mesh shapes.
 """
 from __future__ import annotations
 
@@ -31,6 +39,7 @@ from repro.core.estimator import PolyEstimator
 from repro.core.scheduler import Plan, greedy_plan
 from repro.data.pipeline import bucket_length
 from repro.models.lm import LM
+from repro.sharding.budget import MeshBudget, fixed_train_bytes_per_device
 
 
 def fixed_train_bytes(params, optimizer: str = "adamw",
@@ -59,9 +68,50 @@ class PlanInfo:
 class PlannerBase:
     name = "base"
     quantum: int = 1          # batch geometry granularity (1 = no bucketing)
+    mesh_budget: Optional[MeshBudget] = None
+    fixed_bytes: Optional[float] = None
+    shard_divisor: int = 1    # legacy scalar activation ways (global mode)
 
     def plan(self, params, batch) -> Tuple[Tuple[bool, ...], PlanInfo]:
         raise NotImplementedError
+
+    # -- shared mesh-vs-global accounting (one implementation for the
+    # Mimose planner and both baselines, so their byte accounting can
+    # never drift apart) --------------------------------------------------
+    def resolve_budget_bytes(self, budget_bytes: Optional[float]) -> float:
+        """The planning budget: explicit bytes win (interpreted
+        per-device when a mesh budget is set), else the budget's HBM."""
+        if budget_bytes is None:
+            if self.mesh_budget is None:
+                raise ValueError("pass budget_bytes or mesh_budget")
+            budget_bytes = self.mesh_budget.hbm_per_device_bytes
+        return float(budget_bytes)
+
+    def collected_vector(self, res) -> np.ndarray:
+        """The byte vector planning runs on: per-device when sharding-
+        aware, global otherwise."""
+        return (res.device_activation_vector()
+                if self.mesh_budget is not None
+                else res.activation_vector())
+
+    def resolve_fixed_bytes(self, params) -> float:
+        """Resident (input-independent) bytes, resolved lazily from the
+        params: the per-device param/grad/optimizer shards under a mesh
+        budget, the legacy global bytes / shard_divisor otherwise."""
+        if self.fixed_bytes is None:
+            if self.mesh_budget is not None:
+                self.fixed_bytes = fixed_train_bytes_per_device(
+                    params, self.mesh_budget,
+                    scanned=self.lm.cfg.remat_mode == "scan")
+            else:
+                self.fixed_bytes = (fixed_train_bytes(params)
+                                    / self.shard_divisor)
+        return self.fixed_bytes
+
+    def activation_divisor_scalar(self) -> int:
+        """Mesh-aware vectors are already per-device; the legacy scalar
+        divisor only applies in global mode."""
+        return 1 if self.mesh_budget is not None else self.shard_divisor
 
     def bucket_key(self, batch) -> int:
         """The shared bucket id: quantised input size.  Batches padded to
@@ -69,6 +119,18 @@ class PlannerBase:
         the jitted-step cache, so a repeated bucket never replans *or*
         recompiles — the engine's compile count is O(#buckets)."""
         return bucket_length(input_size_of(batch), self.quantum)
+
+    def mesh_sig(self) -> tuple:
+        """Mesh identity component of every cache key: () when planning
+        for a single global budget, the MeshBudget signature otherwise.
+        Plans (and jitted steps, via the trainer) built for one mesh
+        shape must never be replayed under another."""
+        return (self.mesh_budget.sig()
+                if self.mesh_budget is not None else ())
+
+    def plan_key(self, batch) -> tuple:
+        """Full plan-cache key: (bucket id, mesh signature)."""
+        return (self.bucket_key(batch), self.mesh_sig())
 
 
 class NonePlanner(PlannerBase):
@@ -87,9 +149,10 @@ class NonePlanner(PlannerBase):
 class MimosePlanner(PlannerBase):
     name = "mimose"
 
-    def __init__(self, lm: LM, budget_bytes: float, *,
+    def __init__(self, lm: LM, budget_bytes: Optional[float] = None, *,
                  fixed_bytes: Optional[float] = None,
                  shard_divisor: int = 1,
+                 mesh_budget: Optional[MeshBudget] = None,
                  quantum: int = 256,
                  degree: int = 2,
                  warmup_samples: int = 4,
@@ -97,9 +160,10 @@ class MimosePlanner(PlannerBase):
                  audit_every: int = 0,
                  audit_tol: float = 0.02):
         self.lm = lm
-        self.budget_bytes = float(budget_bytes)
+        self.mesh_budget = mesh_budget
+        self.budget_bytes = self.resolve_budget_bytes(budget_bytes)
         self.fixed_bytes = fixed_bytes          # resolved lazily from params
-        self.shard_divisor = shard_divisor      # activation sharding ways/device
+        self.shard_divisor = shard_divisor
         self.quantum = quantum
         self.warmup_samples = warmup_samples
         self.bucket_tol = bucket_tol
@@ -108,9 +172,9 @@ class MimosePlanner(PlannerBase):
         # re-fit if the prediction drifted beyond ``audit_tol``.
         self.audit_every = audit_every
         self.audit_tol = audit_tol
-        self.collector = ShuttlingCollector(lm)
+        self.collector = ShuttlingCollector(lm, mesh_budget=mesh_budget)
         self.estimator = PolyEstimator(degree, min_samples=warmup_samples)
-        self.cache: Dict[int, Plan] = {}
+        self.cache: Dict[tuple, Plan] = {}
         # stats (paper Table 2)
         self.stats = {"cache_hits": 0, "cache_misses": 0, "collections": 0,
                       "collect_time_s": 0.0, "estimate_time_s": 0.0,
@@ -123,17 +187,13 @@ class MimosePlanner(PlannerBase):
         # align only because both delegate to the same bucket_length
         return bucket_length(s, self.quantum)
 
-    def _fixed(self, params) -> float:
-        if self.fixed_bytes is None:
-            self.fixed_bytes = fixed_train_bytes(params) / self.shard_divisor
-        return self.fixed_bytes
-
     def plan(self, params, batch):
         s = input_size_of(batch)
         qs = self._quantize(s)
-        if qs in self.cache:
+        key = (qs, self.mesh_sig())
+        if key in self.cache:
             self.stats["cache_hits"] += 1
-            p = self.cache[qs]
+            p = self.cache[key]
             return p.as_tuple(), PlanInfo(s, qs, True, False, p)
         self.stats["cache_misses"] += 1
 
@@ -142,8 +202,8 @@ class MimosePlanner(PlannerBase):
         if not self.estimator.ready:
             # sheltered execution: collect this size online
             res = self.collector.collect(params, batch)
-            self.estimator.add_sample(s, res.activation_vector())
-            est = res.activation_vector()
+            self.estimator.add_sample(s, self.collected_vector(res))
+            est = self.collected_vector(res)
             collected = True
             t_col = res.collect_time_s
             self.stats["collections"] += 1
@@ -158,7 +218,7 @@ class MimosePlanner(PlannerBase):
                 # drift audit: exact abstract re-collection for this size
                 self.stats["audits"] += 1
                 res = self.collector.collect(params, batch)
-                truth = res.activation_vector()
+                truth = self.collected_vector(res)
                 err = abs(truth.sum() - est.sum()) / max(truth.sum(), 1.0)
                 if err > self.audit_tol:
                     self.estimator.add_sample(s, truth)
@@ -168,11 +228,13 @@ class MimosePlanner(PlannerBase):
                     self.cache.clear()      # stale plans out
 
         t0 = time.perf_counter()
-        plan = greedy_plan(est / self.shard_divisor, self.budget_bytes,
-                           self._fixed(params), tol=self.bucket_tol)
+        plan = greedy_plan(est / self.activation_divisor_scalar(),
+                           self.budget_bytes,
+                           self.resolve_fixed_bytes(params),
+                           tol=self.bucket_tol)
         t_sch = time.perf_counter() - t0
         self.stats["schedule_time_s"] += t_sch
 
-        self.cache[qs] = plan
+        self.cache[key] = plan
         return plan.as_tuple(), PlanInfo(s, qs, False, collected, plan,
                                          t_est, t_sch, t_col)

@@ -147,6 +147,24 @@ def greedy_plan(est_mem: Sequence[float], budget_bytes: float,
     return Plan(plan, excess, covered, total)
 
 
+def greedy_plan_sharded(device_est_mem: Sequence[float], mesh_budget,
+                        fixed_device_bytes: float = 0.0,
+                        tol: float = 0.10) -> Plan:
+    """Algorithm 1 against a *per-device* budget.
+
+    ``device_est_mem[i]`` must be the bytes unit i lands on ONE device
+    (``CollectionResult.device_activation_vector`` or a per-device
+    estimator fit) and ``fixed_device_bytes`` the param/grad/optimizer
+    *shard* bytes (``budget.fixed_train_bytes_per_device``).  The budget
+    is ``mesh_budget.hbm_per_device_bytes`` — under SPMD every device
+    runs the same plan over its shard, so one per-device schedule covers
+    the whole mesh.  ``mesh_budget`` is duck-typed (anything with an
+    ``hbm_per_device_bytes`` attribute) to keep this module numpy-only.
+    """
+    return greedy_plan(device_est_mem, mesh_budget.hbm_per_device_bytes,
+                       fixed_device_bytes, tol=tol)
+
+
 def greedy_plan_reference(est_mem: Sequence[float], budget_bytes: float,
                           fixed_bytes: float = 0.0, tol: float = 0.10) -> Plan:
     """The seed's python-list Algorithm 1 — equivalence oracle and the

@@ -72,6 +72,51 @@ def simulate(act_bytes: Sequence[float], remat: Sequence[bool],
     return SimResult(peak, recompute, n_re, timeline)
 
 
+@dataclasses.dataclass
+class ShardedSimResult:
+    """Per-device replay of one plan across a mesh.
+
+    Under SPMD every device executes the same step over its shard, so
+    the per-device timeline is one liveness replay of the *per-device*
+    byte vector; ``global_peak_bytes`` is the mesh-wide footprint at the
+    per-device peak instant (exact when sharding is homogeneous, an
+    upper-bound approximation when some leaves stay replicated).
+    """
+    per_device: SimResult
+    n_devices: int
+
+    @property
+    def peak_bytes_per_device(self) -> float:
+        return self.per_device.peak_bytes
+
+    @property
+    def global_peak_bytes(self) -> float:
+        return self.per_device.peak_bytes * self.n_devices
+
+    def fits(self, budget_per_device: float) -> bool:
+        return self.per_device.peak_bytes <= budget_per_device
+
+
+def simulate_sharded(device_act_bytes: Sequence[float],
+                     remat: Sequence[bool],
+                     fixed_device_bytes: float = 0.0,
+                     n_devices: int = 1,
+                     output_bytes: Sequence[float] | None = None
+                     ) -> ShardedSimResult:
+    """Replay the training step's per-device memory timeline.
+
+    ``device_act_bytes`` is the per-unit byte vector landing on one
+    device (``CollectionResult.device_activation_vector``) and
+    ``fixed_device_bytes`` the resident shard bytes
+    (``budget.fixed_train_bytes_per_device``).  Validates a
+    sharding-aware plan against ``MeshBudget.hbm_per_device_bytes``
+    without hardware — the multi-device analogue of ``simulate``.
+    """
+    base = simulate(device_act_bytes, remat, fixed_device_bytes,
+                    output_bytes)
+    return ShardedSimResult(base, int(n_devices))
+
+
 def peak_if_checkpointing_unit(act_bytes: Sequence[float], which: int,
                                fixed_bytes: float = 0.0) -> float:
     """Paper Fig. 11: peak memory when exactly one unit is checkpointed."""

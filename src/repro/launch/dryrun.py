@@ -1,19 +1,21 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: prove every (arch x input-shape x mesh) lowers,
 compiles, and fits — without hardware.
 
-The two lines above run before ANY other import (jax locks the device
-count at first initialisation); only this entry point sees 512 host
-devices — tests and benchmarks see the single real CPU device.
+The XLA_FLAGS line below runs before ANY other import (jax locks the
+device count at first initialisation); only this entry point sees 512
+host devices — tests and benchmarks see the single real CPU device.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all --json out.jsonl
     PYTHONPATH=src python -m repro.launch.dryrun --arch kimi-k2-1t-a32b \
         --shape train_4k --multi-pod --remat all --zero1
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k --mesh-shape 4x2      # small fake-device mesh
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import json
 import sys
@@ -21,9 +23,10 @@ import time
 import traceback
 
 import jax
+import numpy as np
 
 from repro.config import INPUT_SHAPES
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, parse_mesh_shape
 from repro.launch.roofline import analyse
 from repro.launch.steps import build_setup, lower_setup, shape_applicable
 from repro.models.registry import ARCH_IDS, canonical, get_config
@@ -33,7 +36,8 @@ ASSIGNED = [a for a in ARCH_IDS if a != "bert_base_paper"]
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
             zero1: bool, seq_parallel: bool, logits_f32: bool,
-            unroll: bool = False, verbose: bool = True) -> dict:
+            unroll: bool = False, verbose: bool = True,
+            mesh_shape=None) -> dict:
     import dataclasses
     cfg = get_config(arch)
     if unroll:
@@ -44,8 +48,12 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
         # one.)  See EXPERIMENTS.md §Dry-run.
         cfg = dataclasses.replace(cfg, remat_mode="unrolled")
     shape = INPUT_SHAPES[shape_name]
-    mesh_name = "2x16x16" if multi_pod else "16x16"
-    chips = 512 if multi_pod else 256
+    if mesh_shape is not None:
+        mesh_name = "x".join(str(s) for s in mesh_shape)
+        chips = int(np.prod(mesh_shape))
+    else:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        chips = 512 if multi_pod else 256
     rec = {"arch": canonical(arch), "shape": shape_name, "mesh": mesh_name,
            "remat": remat, "zero1": zero1, "seq_parallel": seq_parallel,
            "logits_f32": logits_f32, "unroll": unroll}
@@ -56,7 +64,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
         return rec
 
     try:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
         t0 = time.time()
         setup = build_setup(cfg, shape, mesh, remat=remat, zero1=zero1,
                             seq_parallel=seq_parallel, logits_f32=logits_f32)
@@ -93,6 +101,11 @@ def main(argv=None):
                     help="sweep all assigned arch x shape pairs")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="explicit mesh shape like 4x2 or 2x16x16 "
+                         "(overrides --multi-pod; small shapes let the "
+                         "dry-run validate sharded plans without 512 "
+                         "fake devices)")
     ap.add_argument("--remat", default="mimose",
                     choices=["none", "all", "mimose"])
     ap.add_argument("--zero1", action="store_true")
@@ -125,18 +138,22 @@ def main(argv=None):
     meshes = [args.multi_pod]
     if args.both_meshes:
         meshes = [False, True]
+    mesh_shape = (parse_mesh_shape(args.mesh_shape)
+                  if args.mesh_shape else None)
 
     out = open(args.json, "a") if args.json else None
     n_fail = 0
     for arch, shape in pairs:
         for mp in meshes:
-            key = (canonical(arch), shape, "2x16x16" if mp else "16x16")
+            mesh_name = ("x".join(str(s) for s in mesh_shape) if mesh_shape
+                         else ("2x16x16" if mp else "16x16"))
+            key = (canonical(arch), shape, mesh_name)
             if key in done:
                 continue
             rec = run_one(arch, shape, multi_pod=mp, remat=args.remat,
                           zero1=args.zero1, seq_parallel=args.seq_parallel,
                           logits_f32=not args.logits_bf16,
-                          unroll=args.unroll)
+                          unroll=args.unroll, mesh_shape=mesh_shape)
             line = json.dumps(rec)
             print(line, flush=True)
             if out:

@@ -1,23 +1,45 @@
-"""Production mesh construction.
+"""Production mesh construction + per-device budget derivation.
 
 TPU v5e target: one pod = 256 chips as a (16, 16) = (data, model) mesh;
-two pods = 512 chips as (2, 16, 16) = (pod, data, model).
+two pods = 512 chips as (2, 16, 16) = (pod, data, model).  Any explicit
+shape — (4, 2) for tests, (1, 1) for CPU demos — is accepted via the
+``shape`` argument so small dry-runs don't need 512 fake devices.
 
 Defined as functions (never module-level constants) so importing this
 module touches no jax device state — the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax
 initialises; everything else sees the single real CPU device.
+
+``budget_from_mesh`` turns a live mesh into the planner's ``MeshBudget``
+(see ``sharding/budget.py``) — the bridge from the launch layer to
+sharding-aware planning.
 """
 from __future__ import annotations
+
+from typing import Optional, Sequence
 
 import numpy as np
 
 import jax
 
+from repro.sharding.budget import MeshBudget, resolve_axis_names
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: Optional[Sequence[int]] = None,
+                         axis_names: Optional[Sequence[str]] = None):
+    """Build a mesh over the first ``prod(shape)`` visible devices.
+
+    Without ``shape``, the production defaults apply: (16, 16) single
+    pod, or (2, 16, 16) with ``multi_pod``.  An explicit ``shape`` (1-3
+    axes) overrides both; ``axis_names`` defaults by rank via the same
+    ``resolve_axis_names`` the planner's MeshBudget uses, so the mesh
+    the launcher builds and the budget the planner plans with can never
+    disagree about axis naming.
+    """
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    shape, axis_names = resolve_axis_names(shape, axis_names)
     n = int(np.prod(shape))
     devices = jax.devices()
     if len(devices) < n:
@@ -26,7 +48,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "(launch/dryrun.py sets this automatically)")
     dev_array = np.array(devices[:n]).reshape(shape)
-    return jax.sharding.Mesh(dev_array, axes)
+    return jax.sharding.Mesh(dev_array, axis_names)
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
@@ -37,3 +59,22 @@ def make_debug_mesh(data: int = 1, model: int = 1):
         raise RuntimeError(f"need {n} devices, have {len(devices)}")
     return jax.sharding.Mesh(np.array(devices).reshape(data, model),
                              ("data", "model"))
+
+
+def budget_from_mesh(mesh, hbm_per_device: float, *,
+                     zero1: bool = False,
+                     seq_parallel: bool = False) -> MeshBudget:
+    """Per-device planning budget for a live mesh (see sharding/budget)."""
+    return MeshBudget.from_mesh(mesh, hbm_per_device, zero1=zero1,
+                                seq_parallel=seq_parallel)
+
+
+def parse_mesh_shape(text: str) -> tuple:
+    """Parse a CLI mesh shape like ``"4x2"`` or ``"2x16x16"``."""
+    try:
+        shape = tuple(int(p) for p in text.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"bad mesh shape {text!r}; expected e.g. '4x2'")
+    if not shape or any(s < 1 for s in shape):
+        raise ValueError(f"bad mesh shape {text!r}; axes must be >= 1")
+    return shape

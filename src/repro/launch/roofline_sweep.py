@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Roofline sweep: accurate compute/memory/collective terms per
 (arch x input shape) on the single-pod production mesh.
 
@@ -23,6 +20,9 @@ Usage:
     PYTHONPATH=src python -m repro.launch.roofline_sweep --arch qwen3-1.7b \
         --shape train_4k [--remat all|none|mimose] [--seq-parallel] ...
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import dataclasses
 import json

@@ -67,17 +67,28 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
 
 def plan_remat_mask(lm: LM, params_struct, batch_struct, *,
                     mode: str, mesh: Mesh,
-                    hbm_per_chip: float = 16 * 2**30) -> Tuple[bool, ...]:
+                    hbm_per_chip: float = 16 * 2**30,
+                    zero1: bool = False,
+                    seq_parallel: bool = False,
+                    attn_replicated: bool = False,
+                    expert_2d: bool = False) -> Tuple[bool, ...]:
     n = lm.num_plan_units()
     if mode == "none":
         return tuple([False] * n)
     if mode == "all":
         return tuple([True] * n)
-    # mode == "mimose": run the input-aware planner abstractly at scale.
+    # mode == "mimose": run the input-aware planner abstractly at scale,
+    # against the true per-device budget — activations divided by their
+    # PartitionSpec divisors, fixed bytes as the param/opt shards.  The
+    # policy flags must match what params_shardings is called with, or
+    # the fixed bytes diverge from the real per-chip residency.
     from repro.core.planner import MimosePlanner
-    data_ways = int(np.prod([mesh.shape[a] for a in mesh.axis_names
-                             if a != "model"]))
-    planner = MimosePlanner(lm, hbm_per_chip, shard_divisor=data_ways,
+    from repro.sharding.budget import MeshBudget
+    budget = MeshBudget.from_mesh(mesh, hbm_per_chip, zero1=zero1,
+                                  seq_parallel=seq_parallel,
+                                  attn_replicated=attn_replicated,
+                                  expert_2d=expert_2d)
+    planner = MimosePlanner(lm, mesh_budget=budget,
                             warmup_samples=1, quantum=1)
     mask, _ = planner.plan(params_struct, batch_struct)
     return mask
@@ -129,7 +140,11 @@ def build_setup(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
         opt = AdamW()
         opt_struct = jax.eval_shape(opt.init, params_struct)
         o_sh = SP.opt_state_shardings(p_sh, opt_struct, mesh, zero1=zero1)
-        mask = plan_remat_mask(lm, params_struct, batch, mode=remat, mesh=mesh)
+        mask = plan_remat_mask(lm, params_struct, batch, mode=remat,
+                               mesh=mesh, zero1=zero1,
+                               seq_parallel=seq_parallel,
+                               attn_replicated=attn_replicated,
+                               expert_2d=expert_2d)
         policy = (getattr(jax.checkpoint_policies, remat_policy)
                   if remat_policy else None)
 

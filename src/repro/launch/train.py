@@ -4,8 +4,14 @@ CPU-runnable example (reduced scale):
     PYTHONPATH=src python -m repro.launch.train --arch bert_base_paper \
         --dataset swag --planner mimose --budget-mb 600 --steps 50 --reduced
 
-At full scale the same driver runs under a mesh (see launch/dryrun.py for
-the abstract multi-pod validation of exactly this step function).
+Sharding-aware planning: ``--mesh-shape 4x2 --hbm-gb 16`` plans against
+the *per-device* budget of a (data=4, model=2) mesh — activations and
+fixed bytes divided by their PartitionSpec divisors, ZeRO-1 aware with
+``--zero1``.  When enough devices are visible the step compiles under
+the Mesh context (inputs stay replicated — this driver passes no
+explicit shardings); end-to-end *sharded* execution is validated by the
+dry-run path (launch/dryrun.py), which lowers the step with full
+param/batch/optimizer NamedShardings.
 """
 from __future__ import annotations
 
@@ -16,8 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DTRSimPlanner, MimosePlanner, NonePlanner,
-                        SublinearPlanner)
+from repro.core import (DTRSimPlanner, MeshBudget, MimosePlanner,
+                        NonePlanner, SublinearPlanner)
+from repro.launch.mesh import make_production_mesh, parse_mesh_shape
 from repro.data.pipeline import (DISTRIBUTIONS, bucket_length, make_batches,
                                  top_buckets)
 from repro.models.lm import build_model
@@ -35,6 +42,13 @@ def main(argv=None):
                     choices=["mimose", "sublinear", "dtr", "none"])
     ap.add_argument("--budget-mb", type=float, default=0.0,
                     help="GPU/TPU memory budget; 0 = unlimited")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="plan against a per-device mesh budget, e.g. 4x2 "
+                         "(data x model) or 2x16x16 (pod x data x model)")
+    ap.add_argument("--hbm-gb", type=float, default=16.0,
+                    help="per-device HBM for --mesh-shape planning")
+    ap.add_argument("--zero1", action="store_true",
+                    help="ZeRO-1 optimizer-state sharding in the budget")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -59,19 +73,43 @@ def main(argv=None):
           f"units={lm.num_plan_units()}")
 
     budget = args.budget_mb * 2**20 if args.budget_mb else 1e18
+    mesh_budget = mesh = None
+    if args.mesh_shape:
+        shape = parse_mesh_shape(args.mesh_shape)
+        mesh_budget = MeshBudget.from_shape(shape, args.hbm_gb * 2**30,
+                                            zero1=args.zero1)
+        # explicit --budget-mb overrides the per-device HBM
+        budget = args.budget_mb * 2**20 if args.budget_mb else None
+        n_dev = int(np.prod(shape))
+        if len(jax.devices()) >= n_dev:
+            # the Mesh context lets XLA honour any sharding constraints
+            # the model emits; this driver does not device_put explicit
+            # param/batch shardings, so data stays replicated — fully
+            # sharded execution is the dry-run's job (launch/dryrun.py)
+            mesh = make_production_mesh(shape=shape)
+            print(f"mesh {shape}: planning per-device; compiling under "
+                  f"the {n_dev}-device mesh context (inputs replicated — "
+                  "see launch/dryrun.py for sharded execution)")
+        else:
+            print(f"mesh {shape}: {n_dev} devices unavailable "
+                  f"({len(jax.devices())} visible) — planning per-device, "
+                  "executing single-device (see launch/dryrun.py for "
+                  "sharded execution)")
     dist = DISTRIBUTIONS[args.dataset]
     max_size = args.batch_size * bucket_length(dist.hi, args.quantum)
     planner = {
         "mimose": lambda: MimosePlanner(lm, budget, quantum=args.quantum,
+                                        mesh_budget=mesh_budget,
                                         warmup_samples=3),
         "sublinear": lambda: SublinearPlanner(lm, budget,
-                                              max_input_size=max_size),
-        "dtr": lambda: DTRSimPlanner(lm, budget),
+                                              max_input_size=max_size,
+                                              mesh_budget=mesh_budget),
+        "dtr": lambda: DTRSimPlanner(lm, budget, mesh_budget=mesh_budget),
         "none": lambda: NonePlanner(lm),
     }[args.planner]()
 
     opt = AdamW(lr=cosine_schedule(args.lr, 10, args.steps))
-    trainer = Trainer(lm, planner, opt)
+    trainer = Trainer(lm, planner, opt, mesh=mesh)
     batches = make_batches(args.dataset, batch_size=args.batch_size,
                            vocab_size=cfg.vocab_size,
                            num_batches=args.steps, quantum=args.quantum,

@@ -1,1 +1,3 @@
+"""Model zoo: the LM shell plus per-family block implementations
+(dense / MoE / SSM / hybrid / encoder-decoder)."""
 from repro.models.lm import LM, build_model, PlanUnit, block_apply, block_init  # noqa: F401

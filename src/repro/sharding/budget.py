@@ -1,0 +1,252 @@
+"""Per-device memory budgets derived from a mesh shape (sharding-aware
+planning).
+
+The planner pipeline historically reasoned about one *global* memory
+budget, which is only correct on a single device.  Under a mesh, the
+bytes that actually land on each device are the global bytes divided by
+the product of the mesh-axis sizes the tensor is sharded over — and that
+divisor differs between parameters (tensor-parallel over ``model`` per
+``sharding/specs.py``), optimizer moments (additionally ZeRO-1 sharded
+over ``data``) and activations (batch over ``data``, tensor-parallel
+intermediates over ``model``).
+
+``MeshBudget`` captures exactly that arithmetic as *pure axis-size math*:
+it never touches ``jax.Mesh`` or device state, so a (16, 16) pod budget
+can be planned, simulated, and benchmarked on a single-CPU container.
+The divisor rules deliberately mirror ``sharding/specs.py``:
+
+* parameters / gradients — ``specs.param_spec`` is evaluated per leaf and
+  the divisor is the product of the mesh-axis sizes named in the spec
+  (exact: the same rule the launcher shards real arrays with);
+* optimizer moments — like parameters, with the ZeRO-1 extra ``data``
+  sharding of ``specs.opt_state_shardings`` replayed leaf-wise;
+* activations — batch-leading tensors divide by the data ways
+  (``specs.batch_spec``); tensor-parallel *intermediates* (anything that
+  is not a residual-stream boundary tensor ``(B, S, d_model)``) further
+  divide by the model ways when divisible, matching megatron-style
+  column/row parallelism where only block boundaries are replicated;
+  with ``seq_parallel`` the boundary tensors shard their sequence axis
+  over ``model`` too (the launcher's ``lm.act_sharding``).
+
+Entry points:
+    budget = MeshBudget.from_shape((4, 2), hbm_per_device=16 << 30)
+    budget = MeshBudget.from_mesh(mesh, hbm_per_device=16 << 30)
+    budget.activation_divisor(leaf_shape, batch=B, d_model=d)
+    fixed_train_bytes_per_device(params, budget, scanned=...)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.sharding import specs as SP
+
+_DEFAULT_AXES = {1: ("data",), 2: ("data", "model"),
+                 3: ("pod", "data", "model")}
+
+
+def resolve_axis_names(shape: Sequence[int],
+                       axis_names: Optional[Sequence[str]] = None) -> tuple:
+    """Validate a mesh shape and resolve its axis names (shared by
+    ``MeshBudget.from_shape`` and ``launch.mesh.make_production_mesh``
+    so the launcher's mesh and the planner's budget can never
+    desynchronise).  Defaults by rank: ("data",), ("data", "model"),
+    ("pod", "data", "model")."""
+    shape = tuple(int(s) for s in shape)
+    if not shape or any(s < 1 for s in shape):
+        raise ValueError(f"mesh shape must be positive, got {shape}")
+    if axis_names is None:
+        if len(shape) not in _DEFAULT_AXES:
+            raise ValueError(
+                f"no default axis_names for a rank-{len(shape)} mesh "
+                f"{shape}; pass axis_names explicitly")
+        axis_names = _DEFAULT_AXES[len(shape)]
+    axis_names = tuple(axis_names)
+    if len(axis_names) != len(shape):
+        raise ValueError(f"axis_names {axis_names} does not match "
+                         f"shape {shape}")
+    return shape, axis_names
+
+
+def spec_divisor(spec, axis_sizes: Mapping[str, int]) -> int:
+    """Product of the mesh-axis sizes a PartitionSpec shards over.
+
+    Entries may be ``None`` (replicated), an axis name, or a tuple of
+    axis names (e.g. ``("pod", "data")`` from ZeRO-1).
+    """
+    div = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        for nm in names:
+            div *= int(axis_sizes.get(nm, 1))
+    return div
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshBudget:
+    """Per-device budget + sharding divisors for one mesh shape.
+
+    ``axis_sizes`` is an ordered tuple of (axis name, size) pairs — e.g.
+    ``(("data", 4), ("model", 2))``.  ``hbm_per_device_bytes`` is the
+    memory each device offers; the planner subtracts the fixed
+    (param/grad/optimizer shard) bytes and plans activations into the
+    remainder.
+    """
+    axis_sizes: Tuple[Tuple[str, int], ...]
+    hbm_per_device_bytes: float
+    zero1: bool = False
+    seq_parallel: bool = False
+    # param-sharding policy flags — must match what the launcher passes
+    # to specs.params_shardings or fixed bytes diverge from reality:
+    # attn_replicated keeps attention projections data-parallel only,
+    # expert_2d spreads expert weights over data x model
+    attn_replicated: bool = False
+    expert_2d: bool = False
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_shape(cls, shape: Sequence[int], hbm_per_device: float, *,
+                   axis_names: Optional[Sequence[str]] = None,
+                   zero1: bool = False, seq_parallel: bool = False,
+                   attn_replicated: bool = False,
+                   expert_2d: bool = False) -> "MeshBudget":
+        shape, axis_names = resolve_axis_names(shape, axis_names)
+        return cls(tuple(zip(axis_names, shape)), float(hbm_per_device),
+                   zero1=zero1, seq_parallel=seq_parallel,
+                   attn_replicated=attn_replicated, expert_2d=expert_2d)
+
+    @classmethod
+    def from_mesh(cls, mesh, hbm_per_device: float, *,
+                  zero1: bool = False, seq_parallel: bool = False,
+                  attn_replicated: bool = False,
+                  expert_2d: bool = False) -> "MeshBudget":
+        """Build from a live ``jax.sharding.Mesh`` (dry-run / launcher)."""
+        return cls(tuple((a, int(mesh.shape[a])) for a in mesh.axis_names),
+                   float(hbm_per_device), zero1=zero1,
+                   seq_parallel=seq_parallel,
+                   attn_replicated=attn_replicated, expert_2d=expert_2d)
+
+    # ------------------------------------------------------------------
+    @property
+    def axis_dict(self) -> dict:
+        return dict(self.axis_sizes)
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod([s for _, s in self.axis_sizes]))
+
+    @property
+    def data_ways(self) -> int:
+        """Product of all non-``model`` axes (pod x data)."""
+        return int(np.prod([s for a, s in self.axis_sizes if a != "model"]))
+
+    @property
+    def model_ways(self) -> int:
+        return int(self.axis_dict.get("model", 1))
+
+    def sig(self) -> tuple:
+        """Hashable identity for plan / jit cache keys: two budgets with
+        different mesh shapes (or sharding-policy settings) must never
+        share a cached plan or executable."""
+        return (self.axis_sizes, self.zero1, self.seq_parallel,
+                self.attn_replicated, self.expert_2d)
+
+    # -- activations ----------------------------------------------------
+    def activation_divisor(self, shape: Sequence[int], *, batch: int,
+                           d_model: int) -> int:
+        """Sharding divisor for one saved-residual (activation) leaf.
+
+        Mirrors the activation side of ``sharding/specs.py``: leaves that
+        do not lead with the batch axis are treated as replicated
+        (broadcast constants, scalars).  Batch-leading leaves shard the
+        batch over the data ways; residual-stream boundary tensors
+        ``(B, S, d_model)`` stay replicated over ``model`` (megatron)
+        unless ``seq_parallel``, while every other batch-leading leaf is
+        a tensor-parallel intermediate (attention heads / scores, MLP
+        hidden, qkv) and divides by the model ways when divisible.
+        """
+        shape = tuple(int(s) for s in shape)
+        if not shape or shape[0] != int(batch):
+            return 1
+        div = 1
+        if self.data_ways > 1 and shape[0] % self.data_ways == 0:
+            div *= self.data_ways
+        boundary = len(shape) == 3 and shape[-1] == int(d_model)
+        if boundary:
+            if (self.seq_parallel and self.model_ways > 1
+                    and shape[1] % self.model_ways == 0):
+                div *= self.model_ways
+        elif self.model_ways > 1:
+            rest = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+            if rest % self.model_ways == 0:
+                div *= self.model_ways
+        return div
+
+    # -- parameters -----------------------------------------------------
+    def _param_spec(self, path: tuple, leaf, *, scanned: bool):
+        return SP.param_spec(path, leaf, scanned=scanned, mesh=None,
+                             model_dim=self.model_ways,
+                             attn_replicated=self.attn_replicated,
+                             expert_2d=self.expert_2d,
+                             data_dim=self.axis_dict.get("data", 1))
+
+    def param_divisor(self, path: tuple, leaf, *, scanned: bool) -> int:
+        """Exact divisor for one parameter leaf via ``specs.param_spec``
+        (honouring this budget's attn_replicated / expert_2d policy)."""
+        return spec_divisor(self._param_spec(path, leaf, scanned=scanned),
+                            self.axis_dict)
+
+    def _moment_divisor(self, path: tuple, leaf, *, scanned: bool) -> int:
+        """Optimizer-moment divisor: like the parameter, plus ZeRO-1's
+        extra data sharding on the first unsharded divisible axis
+        (replaying ``specs.opt_state_shardings``)."""
+        spec = self._param_spec(path, leaf, scanned=scanned)
+        div = spec_divisor(spec, self.axis_dict)
+        if self.zero1 and self.data_ways > 1:
+            padded = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            for i, s in enumerate(padded):
+                if s is None and leaf.shape[i] % self.data_ways == 0:
+                    div *= self.data_ways
+                    break
+        return div
+
+
+def fixed_train_bytes_per_device(params, budget: MeshBudget, *,
+                                 scanned: bool = False,
+                                 optimizer: str = "adamw",
+                                 grad_dtype_bytes: Optional[int] = None
+                                 ) -> float:
+    """Per-device resident bytes independent of input size.
+
+    The sharded counterpart of ``planner.fixed_train_bytes``: each
+    parameter leaf is divided by its ``specs.param_spec`` divisor
+    (under the budget's attn_replicated / expert_2d policy), gradients
+    shard like parameters, and the fp32 AdamW moments shard like
+    parameters plus the ZeRO-1 data sharding when enabled.
+    """
+    total = 0.0
+
+    def one(path, leaf):
+        nonlocal total
+        if not hasattr(leaf, "shape"):
+            return leaf
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        itemsize = np.dtype(leaf.dtype).itemsize
+        pdiv = budget.param_divisor(path, leaf, scanned=scanned)
+        pb = n * itemsize / pdiv
+        gb = (n * grad_dtype_bytes / pdiv if grad_dtype_bytes is not None
+              else pb)
+        ob = 0.0
+        if optimizer == "adamw":
+            mdiv = budget._moment_divisor(path, leaf, scanned=scanned)
+            ob = 2 * 4 * n / mdiv                    # fp32 m + v
+        total += pb + gb + ob
+        return leaf
+
+    jax.tree_util.tree_map_with_path(one, params)
+    return float(total)

@@ -18,9 +18,16 @@ The trainer is the execution half of the *compile-once bucketed engine*:
   4. ``prewarm`` AOT-compiles (``jit.lower(...).compile()``) the top-k
      buckets off the critical path before step 0, so the first epoch
      never stalls on mid-training compilation.
+
+Sharding: pass ``mesh`` to build and run every step under that Mesh
+context (required for ``with_sharding_constraint`` in the model).  The
+jit-step cache key embeds the planner's mesh signature, so executables
+compiled for one mesh shape are never replayed under another — the
+execution-side mirror of the planner's (bucket, mesh) plan-cache key.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Dict, Iterable, Optional, Tuple
@@ -50,12 +57,14 @@ class Trainer:
     def __init__(self, lm: LM, planner: PlannerBase,
                  optimizer: Optional[AdamW] = None,
                  remat_policy=None,
-                 bucket_pad: bool = True):
+                 bucket_pad: bool = True,
+                 mesh=None):
         self.lm = lm
         self.planner = planner
         self.optimizer = optimizer or AdamW()
         self.remat_policy = remat_policy
         self.bucket_pad = bucket_pad
+        self.mesh = mesh                  # jax.sharding.Mesh or None
         self._step_cache: Dict[Any, Any] = {}
         self.history: list[StepStats] = []
         self.cache_stats = {"compiles": 0, "prewarm_compiles": 0,
@@ -98,9 +107,14 @@ class Trainer:
     def _step_key(self, mask: Tuple[bool, ...], batch) -> tuple:
         # the bucket id is fully determined by the padded shapes already in
         # the batch signature (bucket = quantised element count), so the
-        # jit cache keys on (shapes, mask) and aligns with the plan cache
-        # (keyed on the bucket id) through the shared bucket_length rounding
-        return (self._batch_key(batch), mask)
+        # jit cache keys on (shapes, mask, mesh signature) and aligns with
+        # the plan cache (keyed on (bucket id, mesh signature)) through the
+        # shared bucket_length rounding + planner.mesh_sig
+        return (self._batch_key(batch), mask, self.planner.mesh_sig())
+
+    def _mesh_ctx(self):
+        """Mesh context for compile + execute (no-op without a mesh)."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
     def _get_step_fn(self, mask: Tuple[bool, ...], batch):
         key = self._step_key(mask, batch)
@@ -144,7 +158,9 @@ class Trainer:
             if key in self._step_cache:
                 continue
             fn = self._build_step(mask)
-            self._step_cache[key] = fn.lower(params, opt_state, batch).compile()
+            with self._mesh_ctx():
+                self._step_cache[key] = fn.lower(params, opt_state,
+                                                 batch).compile()
             self.cache_stats["prewarm_compiles"] += 1
             n += 1
         return n
@@ -159,7 +175,8 @@ class Trainer:
         bucket = self.planner.bucket_key(batch)
         fn, is_new = self._get_step_fn(mask, batch)
         t1 = time.perf_counter()
-        params, opt_state, loss, metrics = fn(params, opt_state, batch)
+        with self._mesh_ctx():
+            params, opt_state, loss, metrics = fn(params, opt_state, batch)
         loss = float(loss)
         t_step = time.perf_counter() - t1
         bs = self.cache_stats["bucket_steps"]

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Docs CI gate: markdown links resolve + every module has a docstring.
+
+Two checks, both zero-dependency (stdlib only):
+
+1. Every relative (intra-repo) markdown link in README.md and docs/**.md
+   points at a file or directory that exists.  External links (http/
+   https/mailto) and pure #anchors are skipped; a link with an anchor
+   (``path#section``) is checked on its path part only.
+2. Every module under src/repro opens with a module docstring
+   (``ast.get_docstring`` — a leading comment does not count).
+
+Exit code 0 when clean, 1 with a per-violation report otherwise.
+
+Usage:
+    python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+# matches [text](target) while ignoring images' leading ! (still a link)
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def check_markdown_links(root: pathlib.Path) -> list:
+    errors = []
+    pages = [root / "README.md"]
+    pages += sorted((root / "docs").glob("**/*.md"))
+    for page in pages:
+        if not page.exists():
+            continue
+        text = page.read_text()
+        # strip fenced code blocks: shell snippets legitimately contain
+        # bracket-paren sequences that are not links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:
+                continue
+            resolved = (page.parent / path_part).resolve()
+            if not resolved.exists():
+                errors.append(f"{page.relative_to(root)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_module_docstrings(root: pathlib.Path) -> list:
+    errors = []
+    for mod in sorted((root / "src" / "repro").glob("**/*.py")):
+        tree = ast.parse(mod.read_text())
+        if not ast.get_docstring(tree):
+            errors.append(f"{mod.relative_to(root)}: missing module "
+                          "docstring")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = pathlib.Path(argv[0] if argv else ".").resolve()
+    errors = check_markdown_links(root) + check_module_docstrings(root)
+    for e in errors:
+        print(f"FAIL {e}")
+    if errors:
+        print(f"\n{len(errors)} docs violation(s)")
+        return 1
+    print("docs OK: links resolve, all src/repro modules documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
