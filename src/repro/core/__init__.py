@@ -11,5 +11,7 @@ from repro.core.scheduler import (Plan, build_buckets, greedy_plan,  # noqa: F40
 from repro.core.simulator import (ShardedSimResult, SimResult,  # noqa: F401
                                   dtr_simulate, peak_if_checkpointing_unit,
                                   simulate, simulate_sharded)
+from repro.launch.roofline import (plan_unit_flops,  # noqa: F401
+                                   unit_fwd_flops)
 from repro.sharding.budget import (MeshBudget,  # noqa: F401
                                    fixed_train_bytes_per_device)

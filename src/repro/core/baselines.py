@@ -23,6 +23,7 @@ from repro.core.estimator import PolyEstimator
 from repro.core.planner import PlanInfo, PlannerBase
 from repro.core.scheduler import Plan, greedy_plan
 from repro.core.simulator import dtr_simulate
+from repro.launch.roofline import plan_unit_flops
 from repro.models.lm import LM
 from repro.sharding.budget import MeshBudget
 
@@ -35,7 +36,8 @@ class SublinearPlanner(PlannerBase):
                  fixed_bytes: Optional[float] = None,
                  shard_divisor: int = 1,
                  mesh_budget: Optional[MeshBudget] = None,
-                 warmup_samples: int = 4):
+                 warmup_samples: int = 4,
+                 cost_aware: bool = True):
         self.lm = lm
         self.mesh_budget = mesh_budget
         if not max_input_size:
@@ -44,6 +46,7 @@ class SublinearPlanner(PlannerBase):
         self.max_input_size = int(max_input_size)
         self.fixed_bytes = fixed_bytes
         self.shard_divisor = shard_divisor
+        self.cost_aware = cost_aware
         self.collector = ShuttlingCollector(lm, mesh_budget=mesh_budget)
         self.estimator = PolyEstimator(2, min_samples=warmup_samples)
         self._plan: Optional[Plan] = None
@@ -56,6 +59,7 @@ class SublinearPlanner(PlannerBase):
         sizes = np.linspace(max(B, self.max_input_size // 8),
                             self.max_input_size,
                             self.estimator.min_samples).astype(int)
+        probe = batch
         for s in sizes:
             probe = dict(batch)
             probe["tokens"] = np.zeros((B, max(1, int(s) // B)), np.int32)
@@ -66,9 +70,14 @@ class SublinearPlanner(PlannerBase):
             self.estimator.add_sample(res.input_size,
                                       self.collected_vector(res))
         est = self.estimator.predict(self.max_input_size)
+        # recompute cost at the planning geometry (the largest probe):
+        # same cost-aware scoring as MimosePlanner, apples-to-apples
+        flops = (plan_unit_flops(self.lm, probe) if self.cost_aware
+                 else None)
         self._plan = greedy_plan(est / self.activation_divisor_scalar(),
                                  self.budget_bytes,
-                                 self.resolve_fixed_bytes(params))
+                                 self.resolve_fixed_bytes(params),
+                                 flops=flops)
 
     def plan(self, params, batch):
         if self._plan is None:

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.roofline import plan_unit_flops
 from repro.models.lm import LM, PlanUnit
 from repro.sharding.budget import MeshBudget
 
@@ -54,6 +55,9 @@ class UnitRecord:
     # per-device residual bytes after the unit's PartitionSpec divisors
     # (== activation_bytes when collected without a MeshBudget)
     device_activation_bytes: int = 0
+    # analytic forward FLOPs at the collection geometry — the recompute
+    # cost of rematerialising this unit (launch/roofline.py cost model)
+    flops: float = 0.0
 
 
 @dataclasses.dataclass
@@ -72,6 +76,11 @@ class CollectionResult:
         MeshBudget (identical to ``activation_vector`` without one)."""
         return np.array([r.device_activation_bytes for r in self.records],
                         dtype=np.float64)
+
+    def flops_vector(self) -> np.ndarray:
+        """Per-unit analytic forward FLOPs (= recompute cost) at the
+        collection geometry — the scheduler's cost-aware score input."""
+        return np.array([r.flops for r in self.records], dtype=np.float64)
 
     def total_activation_bytes(self) -> int:
         return int(sum(r.activation_bytes for r in self.records))
@@ -178,6 +187,10 @@ class ShuttlingCollector:
     def collect(self, params, batch) -> CollectionResult:
         t0 = time.perf_counter()
         units = self.lm.plan_units(params, batch)
+        # analytic recompute cost per unit (pure python math, ~us): rides
+        # along with the byte records so schedulers can score bytes
+        # freed per recompute-FLOP without re-deriving geometry
+        unit_flops = plan_unit_flops(self.lm, batch)
         x_struct = self._residual_stream_struct(params, batch)
         records: List[UnitRecord] = []
         traced = hits = 0
@@ -205,7 +218,8 @@ class ShuttlingCollector:
             t_fwd = self._time_unit(u, xs) if self.measure_time else 0.0
             rec = UnitRecord(u.name, u.index, info["activation_bytes"],
                              info["output_bytes"], info["param_bytes"],
-                             t_fwd, info["device_activation_bytes"])
+                             t_fwd, info["device_activation_bytes"],
+                             float(unit_flops[u.index]))
             records.append(rec)
         self.stats["traces"] += traced
         self.stats["dedup_hits"] += hits

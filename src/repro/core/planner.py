@@ -16,6 +16,12 @@ Phases (paper §4.1):
     size, the greedy scheduler emits a plan in O(n log n), and the plan
     cache keyed by quantised input size makes repeats free.
 
+Cost-aware selection (default): every plan is scored on bytes freed per
+recompute-FLOP using the ``launch/roofline.py`` per-unit cost model, so
+the scheduler rematerialises cheap MLP/SSM units before FLOP-heavy
+attention units that free the same bytes — and never does worse than the
+paper's byte-only Algorithm 1 (``cost_aware=False`` restores it).
+
 Sharding-aware mode: pass ``mesh_budget=MeshBudget.from_shape(...)`` and
 every quantity above becomes *per-device* — the collector divides each
 activation leaf by its PartitionSpec divisor, the estimator fits
@@ -38,6 +44,7 @@ from repro.core.collector import ShuttlingCollector, input_size_of, _tree_bytes
 from repro.core.estimator import PolyEstimator
 from repro.core.scheduler import Plan, greedy_plan
 from repro.data.pipeline import bucket_length
+from repro.launch.roofline import plan_unit_flops
 from repro.models.lm import LM
 from repro.sharding.budget import MeshBudget, fixed_train_bytes_per_device
 
@@ -157,6 +164,7 @@ class MimosePlanner(PlannerBase):
                  degree: int = 2,
                  warmup_samples: int = 4,
                  bucket_tol: float = 0.10,
+                 cost_aware: bool = True,
                  audit_every: int = 0,
                  audit_tol: float = 0.02):
         self.lm = lm
@@ -167,6 +175,9 @@ class MimosePlanner(PlannerBase):
         self.quantum = quantum
         self.warmup_samples = warmup_samples
         self.bucket_tol = bucket_tol
+        # cost-aware selection (bytes freed per recompute-FLOP, floored
+        # by the byte-only oracle); False = the paper's Algorithm 1
+        self.cost_aware = cost_aware
         # adaptive-estimator extension (the paper's §4.3 future work):
         # every ``audit_every``-th unseen size, re-collect abstractly and
         # re-fit if the prediction drifted beyond ``audit_tol``.
@@ -198,12 +209,17 @@ class MimosePlanner(PlannerBase):
         self.stats["cache_misses"] += 1
 
         collected = False
+        flops = None
         t_est = t_col = 0.0
         if not self.estimator.ready:
-            # sheltered execution: collect this size online
+            # sheltered execution: collect this size online (the
+            # collection carries the recompute-cost vector for this
+            # geometry, so the scheduler reads it straight off)
             res = self.collector.collect(params, batch)
             self.estimator.add_sample(s, self.collected_vector(res))
             est = self.collected_vector(res)
+            if self.cost_aware:
+                flops = res.flops_vector()
             collected = True
             t_col = res.collect_time_s
             self.stats["collections"] += 1
@@ -228,10 +244,15 @@ class MimosePlanner(PlannerBase):
                     self.cache.clear()      # stale plans out
 
         t0 = time.perf_counter()
+        # analytic recompute cost at this bucket's geometry (pure python
+        # math, microseconds) — makes selection cost-aware: cheap units
+        # are rematerialised before FLOP-heavy ones freeing equal bytes
+        if self.cost_aware and flops is None:
+            flops = plan_unit_flops(self.lm, batch)
         plan = greedy_plan(est / self.activation_divisor_scalar(),
                            self.budget_bytes,
                            self.resolve_fixed_bytes(params),
-                           tol=self.bucket_tol)
+                           tol=self.bucket_tol, flops=flops)
         t_sch = time.perf_counter() - t0
         self.stats["schedule_time_s"] += t_sch
 

@@ -1,6 +1,8 @@
-"""Responsive memory scheduler — Algorithm 1 of the paper.
+"""Responsive memory scheduler — Algorithm 1 of the paper, plus the
+cost-aware selection the heterogeneous-chains line of work (Beaumont et
+al.; MONeT, Shah et al.) shows is needed to close the recompute gap.
 
-Greedy bucketed selection of which plan units to rematerialise:
+Byte-only greedy (Algorithm 1) selects which units to rematerialise:
 
   1. Sort units by estimated activation bytes, descending.
   2. Group units whose estimate is within -10% of the bucket head into a
@@ -12,21 +14,30 @@ Greedy bucketed selection of which plan units to rematerialise:
      pick the one nearest the excess and take its earliest layer;
      otherwise take the earliest layer of the largest bucket.
 
-Two implementations live here:
+Cost-aware selection (the production default when a ``flops`` vector is
+supplied) scores each unit by *bytes freed per recompute-FLOP* and picks
+high-density units first, then trims picks the coverage does not need —
+so a cheap MLP unit is rematerialised before a flash-attention unit that
+frees the same bytes at many times the recompute FLOPs.  The result is
+compared against the byte-only plan on total recompute FLOPs and the
+better plan wins, so cost-aware selection is *never* worse than the
+byte-only oracle at equal budget (the property
+``tests/test_ragged.py::test_cost_aware_never_slower_than_byte_only``
+locks in).
 
-* ``greedy_plan`` — the production path.  Bucket construction is
-  vectorised (one ``argsort`` plus ``searchsorted`` jumps instead of the
-  per-element python loop) and the selection loop keeps per-bucket maxima
-  in a numpy array so each iteration is one masked argmin/argmax over
-  #buckets elements instead of rebuilding python lists and re-scanning
-  every bucket member (the seed's O(n^2) behaviour).  Bucket maxima are
-  maintained with a head pointer over the members stored in descending
-  order, so the whole plan is O(n log n + picks * #buckets).
+Implementations:
+
+* ``greedy_plan`` — the production path.  Dispatches to cost-aware
+  selection when ``flops`` is given (``byte_only=True`` keeps the
+  Algorithm 1 oracle); the byte-only path keeps the vectorised
+  flat-array bucket selection (one argsort + searchsorted jumps,
+  per-bucket maxima via head pointers — O(n log n + picks * #buckets)).
 * ``greedy_plan_reference`` — the seed's verbatim python-list
   implementation, kept as the equivalence oracle for tests and the
   baseline for ``benchmarks/bench_engine.py``.
 
-Both return bit-identical plans (tie-breaks included); see
+Byte-only ``greedy_plan`` and the reference return bit-identical plans
+(tie-breaks included); see
 ``tests/test_engine.py::test_fast_scheduler_matches_reference``.
 """
 from __future__ import annotations
@@ -44,12 +55,21 @@ class Plan:
     covered_bytes: float              # bytes the plan frees
     est_activation_bytes: float       # predicted total activation bytes
     n_remat: int = 0
+    # total forward FLOPs the plan re-executes in the backward pass
+    # (0.0 when planned without a cost model)
+    recompute_flops: float = 0.0
 
     def __post_init__(self):
         self.n_remat = int(sum(self.remat))
 
     def as_tuple(self) -> Tuple[bool, ...]:
         return tuple(self.remat)
+
+    def with_flops(self, flops) -> "Plan":
+        """Fill ``recompute_flops`` from a per-unit FLOPs vector."""
+        f = np.asarray(flops, dtype=np.float64)
+        self.recompute_flops = float(f[np.asarray(self.remat, bool)].sum())
+        return self
 
 
 def _bucket_bounds(desc: np.ndarray, tol: float) -> np.ndarray:
@@ -86,8 +106,81 @@ def build_buckets(est_mem: Sequence[float], tol: float = 0.10
 
 
 def greedy_plan(est_mem: Sequence[float], budget_bytes: float,
-                fixed_bytes: float = 0.0, tol: float = 0.10) -> Plan:
-    """Algorithm 1.  est_mem[i] = predicted activation bytes of unit i."""
+                fixed_bytes: float = 0.0, tol: float = 0.10, *,
+                flops: Sequence[float] | None = None,
+                byte_only: bool = False) -> Plan:
+    """Plan which units to rematerialise under ``budget_bytes``.
+
+    est_mem[i] = predicted activation bytes of unit i.  With ``flops``
+    (per-unit forward FLOPs, e.g. ``roofline.plan_unit_flops``) the
+    selection is cost-aware — maximise bytes freed per recompute-FLOP —
+    and provably no worse than Algorithm 1 on recompute FLOPs at equal
+    budget.  ``byte_only=True`` (or ``flops=None``) runs the paper's
+    byte-only Algorithm 1 unchanged (the oracle the benchmark compares
+    against); when ``flops`` is also given the oracle plan's
+    ``recompute_flops`` is still filled in for comparison.
+    """
+    if flops is not None and not byte_only:
+        return _cost_aware_plan(est_mem, flops, budget_bytes, fixed_bytes,
+                                tol)
+    plan = _byte_greedy_plan(est_mem, budget_bytes, fixed_bytes, tol)
+    return plan.with_flops(flops) if flops is not None else plan
+
+
+def _cost_aware_plan(est_mem: Sequence[float], flops: Sequence[float],
+                     budget_bytes: float, fixed_bytes: float,
+                     tol: float) -> Plan:
+    """Bytes-per-recompute-FLOP greedy with a trim pass, floored by the
+    byte-only oracle (whichever plan recomputes fewer FLOPs wins)."""
+    est = np.asarray(est_mem, dtype=np.float64)
+    fl = np.asarray(flops, dtype=np.float64)
+    assert est.shape == fl.shape, (est.shape, fl.shape)
+    n = est.size
+    total = float(est.sum())
+    excess = total + float(fixed_bytes) - float(budget_bytes)
+    if excess <= 0 or n == 0:
+        return Plan([False] * n, excess, 0.0, total)
+
+    # 1. pick in descending bytes-per-FLOP density until the excess is
+    # covered (ties: earlier timestamp first, matching the paper's
+    # earlier-is-cheaper-at-backward-tail preference)
+    density = est / np.maximum(fl, 1.0)
+    order = np.argsort(-density, kind="stable")
+    csum = np.cumsum(est[order])
+    k = int(np.searchsorted(csum, excess, side="left")) + 1
+    k = min(k, n)
+    picked = order[:k]
+    covered = float(csum[k - 1])
+
+    # 2. trim: coverage is often overshot — drop the worst-density picks
+    # whose bytes the plan does not need, cheapest-to-keep last
+    keep = np.ones(k, dtype=bool)
+    for j in range(k - 1, -1, -1):          # order[:k] is best->worst
+        b = est[picked[j]]
+        if covered - b >= excess:
+            keep[j] = False
+            covered -= b
+    picked = picked[keep]
+
+    plan = [False] * n
+    for i in picked:
+        plan[int(i)] = True
+    cost = Plan(plan, excess, covered, total)
+    cost.recompute_flops = float(fl[picked].sum())
+
+    # 3. the byte-only oracle floor: never return a plan that recomputes
+    # more FLOPs than Algorithm 1 would at the same budget
+    byte = _byte_greedy_plan(est, budget_bytes, fixed_bytes,
+                             tol).with_flops(fl)
+    if (byte.covered_bytes >= excess) == (cost.covered_bytes >= excess) \
+            and byte.recompute_flops < cost.recompute_flops:
+        return byte
+    return cost
+
+
+def _byte_greedy_plan(est_mem: Sequence[float], budget_bytes: float,
+                      fixed_bytes: float = 0.0, tol: float = 0.10) -> Plan:
+    """Algorithm 1 (byte-only).  est_mem[i] = predicted bytes of unit i."""
     est = np.asarray(est_mem, dtype=np.float64)
     n = est.size
     total = float(est.sum())
@@ -149,8 +242,10 @@ def greedy_plan(est_mem: Sequence[float], budget_bytes: float,
 
 def greedy_plan_sharded(device_est_mem: Sequence[float], mesh_budget,
                         fixed_device_bytes: float = 0.0,
-                        tol: float = 0.10) -> Plan:
-    """Algorithm 1 against a *per-device* budget.
+                        tol: float = 0.10, *,
+                        flops: Sequence[float] | None = None,
+                        byte_only: bool = False) -> Plan:
+    """``greedy_plan`` against a *per-device* budget.
 
     ``device_est_mem[i]`` must be the bytes unit i lands on ONE device
     (``CollectionResult.device_activation_vector`` or a per-device
@@ -160,9 +255,13 @@ def greedy_plan_sharded(device_est_mem: Sequence[float], mesh_budget,
     runs the same plan over its shard, so one per-device schedule covers
     the whole mesh.  ``mesh_budget`` is duck-typed (anything with an
     ``hbm_per_device_bytes`` attribute) to keep this module numpy-only.
+    ``flops`` may stay the *global* per-unit FLOPs vector: SPMD divides
+    every unit's recompute by the same device count, so relative
+    densities — and therefore the selection — are unchanged.
     """
     return greedy_plan(device_est_mem, mesh_budget.hbm_per_device_bytes,
-                       fixed_device_bytes, tol=tol)
+                       fixed_device_bytes, tol=tol, flops=flops,
+                       byte_only=byte_only)
 
 
 def greedy_plan_reference(est_mem: Sequence[float], budget_bytes: float,

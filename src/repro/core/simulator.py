@@ -20,6 +20,8 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
+from repro.launch.roofline import PEAK_FLOPS
+
 
 @dataclasses.dataclass
 class SimResult:
@@ -27,6 +29,14 @@ class SimResult:
     recompute_bytes: float            # total bytes rematerialised
     recompute_units: int
     timeline: List[Tuple[str, float]]  # (event, live_bytes)
+    # forward FLOPs re-executed by the plan (0.0 without a cost model)
+    recompute_flops: float = 0.0
+
+    @property
+    def recompute_time_s(self) -> float:
+        """Recompute overhead at the roofline compute bound — the number
+        the cost-aware scheduler minimises at equal budget."""
+        return self.recompute_flops / PEAK_FLOPS
 
     def fits(self, budget: float) -> bool:
         return self.peak_bytes <= budget
@@ -34,11 +44,13 @@ class SimResult:
 
 def simulate(act_bytes: Sequence[float], remat: Sequence[bool],
              fixed_bytes: float = 0.0,
-             output_bytes: Sequence[float] | None = None) -> SimResult:
+             output_bytes: Sequence[float] | None = None,
+             flops: Sequence[float] | None = None) -> SimResult:
     n = len(act_bytes)
     act = [float(a) for a in act_bytes]
     out = ([float(o) for o in output_bytes] if output_bytes is not None
            else [0.0] * n)
+    fl = ([float(f) for f in flops] if flops is not None else [0.0] * n)
     live = fixed_bytes
     peak = live
     timeline: List[Tuple[str, float]] = []
@@ -58,18 +70,20 @@ def simulate(act_bytes: Sequence[float], remat: Sequence[bool],
 
     # ---- backward ---------------------------------------------------------
     recompute = 0.0
+    recompute_fl = 0.0
     n_re = 0
     for i in reversed(range(n)):
         if remat[i]:
             # replay forward of unit i: its residuals come back to life
             saved += act[i]
             recompute += act[i]
+            recompute_fl += fl[i]
             n_re += 1
         peak = max(peak, live + saved + act[i])   # grad working set ~ act_i
         saved -= act[i]
         timeline.append((f"bwd{i}", live + saved))
 
-    return SimResult(peak, recompute, n_re, timeline)
+    return SimResult(peak, recompute, n_re, timeline, recompute_fl)
 
 
 @dataclasses.dataclass
@@ -93,6 +107,12 @@ class ShardedSimResult:
     def global_peak_bytes(self) -> float:
         return self.per_device.peak_bytes * self.n_devices
 
+    @property
+    def recompute_time_s(self) -> float:
+        """Per-device recompute overhead (SPMD: every device replays its
+        shard of each rematted unit concurrently)."""
+        return self.per_device.recompute_time_s
+
     def fits(self, budget_per_device: float) -> bool:
         return self.per_device.peak_bytes <= budget_per_device
 
@@ -101,7 +121,8 @@ def simulate_sharded(device_act_bytes: Sequence[float],
                      remat: Sequence[bool],
                      fixed_device_bytes: float = 0.0,
                      n_devices: int = 1,
-                     output_bytes: Sequence[float] | None = None
+                     output_bytes: Sequence[float] | None = None,
+                     flops: Sequence[float] | None = None
                      ) -> ShardedSimResult:
     """Replay the training step's per-device memory timeline.
 
@@ -111,9 +132,11 @@ def simulate_sharded(device_act_bytes: Sequence[float],
     (``budget.fixed_train_bytes_per_device``).  Validates a
     sharding-aware plan against ``MeshBudget.hbm_per_device_bytes``
     without hardware — the multi-device analogue of ``simulate``.
+    ``flops`` should be the *per-device* per-unit recompute FLOPs
+    (global FLOPs / n_devices under SPMD).
     """
     base = simulate(device_act_bytes, remat, fixed_device_bytes,
-                    output_bytes)
+                    output_bytes, flops)
     return ShardedSimResult(base, int(n_devices))
 
 

@@ -14,6 +14,14 @@ materialised.
 
 Grid: (B, H, S // block_q); the k loop runs inside the kernel over
 block_k-sized VMEM slices.
+
+Ragged execution: every kernel takes a per-sequence ``kv_len`` operand
+(true lengths of a bucket-padded batch).  Padded keys are masked out of
+the online softmax, and the inner fori_loop trip counts are clamped so
+k-blocks entirely past the true length — and q-blocks entirely inside
+the padding — are never executed.  Shapes stay bucket-static (the
+compile-once property is untouched); only runtime trip counts and masks
+depend on the lengths, so one executable serves every raggedness.
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 NEG_INF = float(jnp.finfo(jnp.float32).min)
@@ -45,11 +54,12 @@ def _load_row(ref, start, size):
     return pl.load(ref, _LEAD + (pl.dslice(start, size),))[0, 0]
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int,
-                  causal: bool, window: int, sm_scale: float):
+def _flash_kernel(q_ref, k_ref, v_ref, kvl_ref, o_ref, lse_ref, *,
+                  block_k: int, causal: bool, window: int, sm_scale: float):
     bq, hd = q_ref.shape[-2], q_ref.shape[-1]
     Sk = k_ref.shape[-2]
     qi = pl.program_id(2)
+    kvl = kvl_ref[0]                                         # true length
 
     q = q_ref[0, 0].astype(jnp.float32) * sm_scale           # (bq, hd)
     q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
@@ -64,7 +74,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int,
                                 preferred_element_type=jnp.float32)  # (bq, bk)
         k_pos = j * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (bq, block_k), 1)
-        mask = k_pos < Sk
+        mask = k_pos < kvl
         if causal:
             mask &= q_pos >= k_pos
         if window > 0:
@@ -80,9 +90,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int,
             preferred_element_type=jnp.float32)
         return acc, m_cur, l_cur
 
-    # with causal masking, key blocks past this query block contribute nothing
+    # with causal masking, key blocks past this query block contribute
+    # nothing; key blocks entirely past the true length likewise, and a
+    # query block entirely inside the padding skips the loop outright
     upper = nkb if not causal else jnp.minimum(
         nkb, pl.cdiv((qi + 1) * bq, block_k))
+    upper = jnp.minimum(upper, pl.cdiv(kvl, block_k))
+    upper = jnp.where(qi * bq >= kvl, 0, upper)
     acc0 = jnp.zeros((bq, hd), jnp.float32)
     m0 = jnp.full((bq,), NEG_INF, jnp.float32)
     l0 = jnp.zeros((bq,), jnp.float32)
@@ -91,10 +105,22 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int,
     lse_ref[0, 0] = m + jnp.log(jnp.maximum(l, 1e-30))
 
 
-def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+def _resolve_kv_len(kv_len, B: int, S: int):
+    """Normalise ``kv_len`` to a clamped (B,) int32 vector (None -> S)."""
+    if kv_len is None:
+        return jnp.full((B,), S, jnp.int32)
+    return jnp.clip(jnp.asarray(kv_len, jnp.int32), 0, S)
+
+
+def flash_attention_fwd(q, k, v, kv_len=None, *, causal: bool = True,
+                        window: int = 0,
                         block_q: int = 128, block_k: int = 128,
                         interpret: bool = False, return_lse: bool = False):
-    """q: (B, H, S, hd); k, v: (B, Hkv, S, hd) -> (B, H, S, hd) [, lse]."""
+    """q: (B, H, S, hd); k, v: (B, Hkv, S, hd) -> (B, H, S, hd) [, lse].
+
+    ``kv_len``: optional (B,) int32 true sequence lengths — positions at
+    or past a sequence's length are masked out and skipped blockwise.
+    """
     B, H, S, hd = q.shape
     Hkv = k.shape[1]
     group = H // Hkv
@@ -102,6 +128,7 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
     block_k = min(block_k, S)
     sm_scale = 1.0 / math.sqrt(hd)
     grid = (B, H, pl.cdiv(S, block_q))
+    kvl = _resolve_kv_len(kv_len, B, S)
 
     o, lse = pl.pallas_call(
         functools.partial(_flash_kernel, block_k=block_k, causal=causal,
@@ -111,6 +138,7 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
             pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
             pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // group, 0, 0)),
             pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1,), lambda b, h, i: (b,)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
@@ -121,7 +149,7 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
             jax.ShapeDtypeStruct((B, H, S), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(q, k, v, kvl)
     return (o, lse) if return_lse else o
 
 
@@ -133,11 +161,12 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
 # ---------------------------------------------------------------------------
 
 def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                         dq_ref, *, block_k: int, causal: bool, window: int,
-                         sm_scale: float):
+                         kvl_ref, dq_ref, *, block_k: int, causal: bool,
+                         window: int, sm_scale: float):
     bq, hd = q_ref.shape[-2], q_ref.shape[-1]
     Sk = k_ref.shape[-2]
     qi = pl.program_id(2)
+    kvl = kvl_ref[0]
     q = q_ref[0, 0].astype(jnp.float32)                       # (bq, hd)
     do = do_ref[0, 0].astype(jnp.float32)
     lse = lse_ref[0, 0]                                       # (bq,)
@@ -146,6 +175,8 @@ def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
     nkb = pl.cdiv(Sk, block_k)
     upper = nkb if not causal else jnp.minimum(
         nkb, pl.cdiv((qi + 1) * bq, block_k))
+    upper = jnp.minimum(upper, pl.cdiv(kvl, block_k))
+    upper = jnp.where(qi * bq >= kvl, 0, upper)
 
     def body(j, dq):
         k = _load_seq(k_ref, j * block_k, block_k).astype(jnp.float32)
@@ -155,7 +186,7 @@ def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
             preferred_element_type=jnp.float32)
         k_pos = j * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (bq, block_k), 1)
-        mask = k_pos < Sk
+        mask = k_pos < kvl
         if causal:
             mask &= q_pos >= k_pos
         if window > 0:
@@ -172,16 +203,21 @@ def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
 
 def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                          dk_ref, dv_ref, *, block_q: int, causal: bool,
-                          window: int, sm_scale: float):
+                          kvl_ref, dk_ref, dv_ref, *, block_q: int,
+                          causal: bool, window: int, sm_scale: float):
     bk, hd = k_ref.shape[-2], k_ref.shape[-1]
     Sq = q_ref.shape[-2]
     ki = pl.program_id(2)
+    kvl = kvl_ref[0]
     k = k_ref[0, 0].astype(jnp.float32)                       # (bk, hd)
     v = v_ref[0, 0].astype(jnp.float32)
     k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (block_q, bk), 1)
     nqb = pl.cdiv(Sq, block_q)
     lower = 0 if not causal else ki * bk // block_q
+    # query blocks past the true length contribute nothing to dk/dv; a
+    # key block entirely inside the padding skips the loop outright
+    upper = jnp.minimum(nqb, pl.cdiv(kvl, block_q))
+    upper = jnp.where(ki * bk >= kvl, 0, upper)
 
     def body(i, carry):
         dk, dv = carry
@@ -194,7 +230,7 @@ def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
             preferred_element_type=jnp.float32)               # (bq, bk)
         q_pos = i * block_q + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, bk), 0)
-        mask = q_pos < Sq
+        mask = (q_pos < kvl) & (k_pos < kvl)
         if causal:
             mask &= q_pos >= k_pos
         if window > 0:
@@ -210,13 +246,13 @@ def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         return dk, dv
 
     dk0 = jnp.zeros((bk, hd), jnp.float32)
-    dk, dv = jax.lax.fori_loop(lower, nqb, body, (dk0, dk0))
+    dk, dv = jax.lax.fori_loop(lower, upper, body, (dk0, dk0))
     dk_ref[0, 0] = dk.astype(dk_ref.dtype)
     dv_ref[0, 0] = dv.astype(dv_ref.dtype)
 
 
-def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool, window: int,
-                        block_q: int = 128, block_k: int = 128,
+def flash_attention_bwd(q, k, v, o, lse, do, kv_len=None, *, causal: bool,
+                        window: int, block_q: int = 128, block_k: int = 128,
                         interpret: bool = False):
     """Blockwise backward.  Returns (dq, dk, dv) with dk/dv group-reduced."""
     B, H, S, hd = q.shape
@@ -225,12 +261,14 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool, window: int,
     block_q = min(block_q, S)
     block_k = min(block_k, S)
     sm_scale = 1.0 / math.sqrt(hd)
+    kvl = _resolve_kv_len(kv_len, B, S)
     delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
                     axis=-1)                                   # (B, H, S)
 
     kv_spec = pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // group, 0, 0))
     q_full = pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h, 0, 0))
     row_full = pl.BlockSpec((1, 1, S), lambda b, h, i: (b, h, 0))
+    len_spec = pl.BlockSpec((1,), lambda b, h, i: (b,))
 
     dq = pl.pallas_call(
         functools.partial(_flash_bwd_dq_kernel, block_k=block_k,
@@ -242,12 +280,13 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool, window: int,
             pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
             pl.BlockSpec((1, 1, block_q), lambda b, h, i: (b, h, i)),
             pl.BlockSpec((1, 1, block_q), lambda b, h, i: (b, h, i)),
+            len_spec,
         ],
         out_specs=pl.BlockSpec((1, 1, block_q, hd),
                                lambda b, h, i: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
         interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    )(q, k, v, do, lse, delta, kvl)
 
     # dk/dv per query head, reduced over the GQA group afterwards
     dk_h, dv_h = pl.pallas_call(
@@ -255,7 +294,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool, window: int,
                           causal=causal, window=window, sm_scale=sm_scale),
         grid=(B, H, pl.cdiv(S, block_k)),
         in_specs=[
-            q_full, kv_spec, kv_spec, q_full, row_full, row_full,
+            q_full, kv_spec, kv_spec, q_full, row_full, row_full, len_spec,
         ],
         out_specs=[
             pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i: (b, h, i, 0)),
@@ -266,7 +305,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool, window: int,
             jax.ShapeDtypeStruct((B, H, S, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    )(q, k, v, do, lse, delta, kvl)
     dk = dk_h.reshape(B, Hkv, group, S, hd).sum(axis=2).astype(k.dtype)
     dv = dv_h.reshape(B, Hkv, group, S, hd).sum(axis=2).astype(v.dtype)
     return dq, dk, dv
@@ -278,23 +317,29 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool, window: int,
 # (FlashAttention-2 backward, Pallas kernels above).
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def flash_attention(q, k, v, causal: bool = True, window: int = 0,
-                    interpret: bool = False):
-    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def flash_attention(q, k, v, kv_len=None, causal: bool = True,
+                    window: int = 0, interpret: bool = False):
+    return flash_attention_fwd(q, k, v, kv_len, causal=causal, window=window,
                                interpret=interpret)
 
 
-def _fwd(q, k, v, causal, window, interpret):
-    o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
-                                 interpret=interpret, return_lse=True)
-    return o, (q, k, v, o, lse)
+def _fwd(q, k, v, kv_len, causal, window, interpret):
+    o, lse = flash_attention_fwd(q, k, v, kv_len, causal=causal,
+                                 window=window, interpret=interpret,
+                                 return_lse=True)
+    return o, (q, k, v, o, lse, kv_len)
 
 
 def _bwd(causal, window, interpret, res, do):
-    q, k, v, o, lse = res
-    return flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
-                               window=window, interpret=interpret)
+    q, k, v, o, lse, kv_len = res
+    dq, dk, dv = flash_attention_bwd(q, k, v, o, lse, do, kv_len,
+                                     causal=causal, window=window,
+                                     interpret=interpret)
+    # int32 lengths are non-differentiable: their cotangent type is float0
+    dlen = (None if kv_len is None
+            else np.zeros(np.shape(kv_len), jax.dtypes.float0))
+    return dq, dk, dv, dlen
 
 
 flash_attention.defvjp(_fwd, _bwd)

@@ -21,27 +21,45 @@ def _on_tpu() -> bool:
 
 
 @partial(jax.jit, static_argnames=("causal", "window"))
-def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+def flash_attention(q, k, v, kv_len=None, *, causal: bool = True,
+                    window: int = 0):
     """q: (B, S, H, hd); k, v: (B, S, Hkv, hd) -> (B, S, H, hd).
 
     (Model layout; transposed to the kernel's (B, H, S, hd) internally.)
+    ``kv_len``: optional (B,) int32 true lengths of a bucket-padded batch
+    — padded keys are masked and fully-padded blocks skipped, so the
+    kernel does work proportional to the *effective* tokens while the
+    compiled shape stays the bucket shape.
     """
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    o = _fa.flash_attention(qt, kt, vt, causal, window, not _on_tpu())
+    o = _fa.flash_attention(qt, kt, vt, kv_len, causal, window, not _on_tpu())
     return o.transpose(0, 2, 1, 3)
 
 
-@partial(jax.jit, static_argnames=("chunk",))
-def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64):
-    """Pads S to a chunk multiple and runs the Pallas SSD scan."""
+@partial(jax.jit, static_argnames=("chunk", "chunks_per_block"))
+def ssd_scan(x, dt, A, Bm, Cm, kv_len=None, *, chunk: int = 64,
+             chunks_per_block: int = 1):
+    """Pads S to a ``chunk * chunks_per_block`` multiple and runs the
+    Pallas SSD scan.
+
+    ``kv_len``: optional (B,) int32 true lengths — contributions past a
+    sequence's length never enter the recurrent state, and chunks fully
+    inside the padding are never executed.  ``chunks_per_block``
+    amortises grid dispatch over several chunks per cell.
+    """
     B, S, H, P = x.shape
-    pad = (-S) % chunk
+    span = chunk * chunks_per_block
+    pad = (-S) % span
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
         Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
-    y = _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=not _on_tpu())
+    if kv_len is None and pad:
+        kv_len = jnp.full((B,), S, jnp.int32)
+    y = _ssd.ssd_scan(x, dt, A, Bm, Cm, kv_len=kv_len, chunk=chunk,
+                      chunks_per_block=chunks_per_block,
+                      interpret=not _on_tpu())
     return y[:, :S]

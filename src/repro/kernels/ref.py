@@ -14,11 +14,13 @@ import jax.numpy as jnp
 
 
 def flash_attention_reference(q, k, v, *, causal: bool = True,
-                              window: int = 0):
+                              window: int = 0, kv_len=None):
     """q: (B, H, Sq, hd); k, v: (B, Hkv, Sk, hd).  GQA via head grouping.
 
     Returns (B, H, Sq, hd).  window > 0 limits attention to the last
     ``window`` positions (sliding window); causal masks the future.
+    ``kv_len``: optional (B,) int32 true lengths — keys at or past a
+    sequence's length are masked out (ragged-batch oracle).
     """
     B, H, Sq, hd = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
@@ -34,13 +36,19 @@ def flash_attention_reference(q, k, v, *, causal: bool = True,
         mask &= qpos >= kpos
     if window > 0:
         mask &= (qpos - kpos) < window
-    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    mask = jnp.broadcast_to(mask[None], (B, Sq, Sk))
+    if kv_len is not None:
+        mask = mask & (kpos[None] < jnp.asarray(kv_len)[:, None, None])
+    logits = jnp.where(mask[:, None], logits, -jnp.inf)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, vq.astype(jnp.float32))
+    # rows with no visible key (padded queries under kv_len) are 0/0:
+    # return exact zeros there instead of NaN
+    out = jnp.where(jnp.any(mask, axis=-1)[:, None, :, None], out, 0.0)
     return out.astype(q.dtype)
 
 
-def ssd_reference(x, dt, A, B, C, initial_state=None):
+def ssd_reference(x, dt, A, B, C, initial_state=None, kv_len=None):
     """Naive O(S) sequential SSD recurrence (the definition).
 
     x: (Bt, S, H, P); dt: (Bt, S, H); A: (H,); B, C: (Bt, S, N).
@@ -48,9 +56,15 @@ def ssd_reference(x, dt, A, B, C, initial_state=None):
 
       state_t = exp(dt_t * A) * state_{t-1} + dt_t * B_t x_t
       y_t     = C_t . state_t
+
+    ``kv_len``: optional (Bt,) true lengths — dt is zeroed past a
+    sequence's length, so padding never enters the state (ragged oracle).
     """
     Bt, S, H, P = x.shape
     N = B.shape[-1]
+    if kv_len is not None:
+        valid = jnp.arange(S)[None, :, None] < jnp.asarray(kv_len)[:, None, None]
+        dt = jnp.where(valid, dt, 0.0).astype(dt.dtype)
     state = (jnp.zeros((Bt, H, P, N), jnp.float32) if initial_state is None
              else initial_state.astype(jnp.float32))
     ys = []

@@ -9,6 +9,17 @@ recurrence touches only the (P, N) state.
 
 Layout: x (B, H, NC, Q, P); dt (B, H, NC, Q); Bm/Cm (B, NC, Q, N);
 A (H,).  Grid: (B, H, NC) with NC sequential.
+
+Ragged execution: a per-sequence ``kv_len`` operand marks the true
+length of a bucket-padded batch.  Positions past the length contribute
+nothing to the recurrent state (their dt is zeroed, so decay is exp(0)
+and the update term vanishes), and chunks that lie entirely inside the
+padding are never executed: each grid cell owns ``chunks_per_block``
+chunks and walks them with a ``fori_loop`` whose trip count is the
+number of *valid* chunks in the cell — shapes stay bucket-static, only
+runtime trip counts depend on the lengths.  ``chunks_per_block > 1``
+also amortises grid dispatch over several chunks (fewer, fatter cells),
+at the price of a K*Q-position VMEM block per operand.
 """
 from __future__ import annotations
 
@@ -20,63 +31,98 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref, *,
-                chunk: int):
-    c_idx = pl.program_id(2)
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, kvl_ref, y_ref,
+                state_ref, *, chunk: int, chunks_per_block: int):
+    g_idx = pl.program_id(2)
     Q = chunk
+    K = chunks_per_block
     P = x_ref.shape[-1]
     N = b_ref.shape[-1]
+    kvl = kvl_ref[0]                                        # true length
+    base = g_idx * K                                        # first chunk here
 
-    @pl.when(c_idx == 0)
+    @pl.when(g_idx == 0)
     def _init():
         state_ref[...] = jnp.zeros_like(state_ref)
 
+    # chunks at or past the true length are skipped by trip count (their
+    # outputs are padding); their y rows are pre-zeroed here
+    valid = jnp.clip(pl.cdiv(kvl - base * Q, Q), 0, K)
+    y_ref[...] = jnp.zeros_like(y_ref)
+
     A = a_ref[0]                                            # scalar decay rate
-    x = x_ref[0, 0, 0].astype(jnp.float32)                  # (Q, P)
-    dt = dt_ref[0, 0, 0].astype(jnp.float32)                # (Q,)
-    Bm = b_ref[0, 0].astype(jnp.float32)                    # (Q, N)
-    Cm = c_ref[0, 0].astype(jnp.float32)                    # (Q, N)
 
-    dA = dt * A                                             # (Q,) log decay
-    la = jnp.cumsum(dA)                                     # (Q,)
+    def body(j, state):
+        cs = (pl.dslice(0, 1), pl.dslice(0, 1), pl.dslice(j, 1))
+        x = pl.load(x_ref, cs + (slice(None), slice(None)))[0, 0, 0]
+        x = x.astype(jnp.float32)                           # (Q, P)
+        dt = pl.load(dt_ref, cs + (slice(None),))[0, 0, 0]
+        dt = dt.astype(jnp.float32)                         # (Q,)
+        bc = (pl.dslice(0, 1), pl.dslice(j, 1))
+        Bm = pl.load(b_ref, bc + (slice(None), slice(None)))[0, 0]
+        Bm = Bm.astype(jnp.float32)                         # (Q, N)
+        Cm = pl.load(c_ref, bc + (slice(None), slice(None)))[0, 0]
+        Cm = Cm.astype(jnp.float32)                         # (Q, N)
 
-    # intra-chunk: L[i,j] = exp(la_i - la_j) * [i >= j]
-    rel = la[:, None] - la[None, :]
-    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
-    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
-    L = jnp.exp(jnp.where(ii >= jj, rel, -jnp.inf))         # (Q, Q)
-    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)  # (Q, Q)
-    w = cb * L * dt[None, :]
-    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
-                            preferred_element_type=jnp.float32)   # (Q, P)
+        # zero the padded tail's dt: decay becomes exp(0)=1 and the state
+        # update term dt*x*B vanishes, so padding never enters the state
+        pos = ((base + j) * Q
+               + jax.lax.broadcasted_iota(jnp.int32, (Q, 1), 0)[:, 0])
+        dt = jnp.where(pos < kvl, dt, 0.0)
 
-    # inter-chunk: contribution of the carried state
-    state = state_ref[...].astype(jnp.float32)              # (P, N)
-    y += jnp.exp(la)[:, None] * jax.lax.dot_general(
-        Cm, state, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)                 # (Q, P)
+        dA = dt * A                                         # (Q,) log decay
+        la = jnp.cumsum(dA)                                 # (Q,)
 
-    # state update: S' = exp(sum dA) * S + sum_j exp(la_Q - la_j) dt_j x_j B_j^T
-    decay_to_end = jnp.exp(la[-1] - la)                     # (Q,)
-    xb = jax.lax.dot_general(x * (decay_to_end * dt)[:, None], Bm,
-                             (((0,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)  # (P, N)
-    state_ref[...] = jnp.exp(la[-1]) * state + xb
+        # intra-chunk: L[i,j] = exp(la_i - la_j) * [i >= j]
+        rel = la[:, None] - la[None, :]
+        ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+        L = jnp.exp(jnp.where(ii >= jj, rel, -jnp.inf))     # (Q, Q)
+        cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q, Q)
+        w = cb * L * dt[None, :]
+        y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)   # (Q, P)
 
-    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+        # inter-chunk: contribution of the carried state
+        y += jnp.exp(la)[:, None] * jax.lax.dot_general(
+            Cm, state, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)             # (Q, P)
+
+        pl.store(y_ref, cs + (slice(None), slice(None)),
+                 y.astype(y_ref.dtype)[None, None, None])
+
+        # state update: S' = exp(sum dA) S + sum_j exp(la_Q - la_j) dt_j x_j B_j^T
+        decay_to_end = jnp.exp(la[-1] - la)                 # (Q,)
+        xb = jax.lax.dot_general(x * (decay_to_end * dt)[:, None], Bm,
+                                 (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (P, N)
+        return jnp.exp(la[-1]) * state + xb
+
+    state0 = state_ref[...].astype(jnp.float32)             # (P, N)
+    state_ref[...] = jax.lax.fori_loop(0, valid, body, state0)
 
 
-def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, interpret: bool = False):
+def ssd_scan(x, dt, A, Bm, Cm, *, kv_len=None, chunk: int = 64,
+             chunks_per_block: int = 1, interpret: bool = False):
     """x: (B, S, H, P); dt: (B, S, H); A: (H,); Bm, Cm: (B, S, N).
 
-    Returns y: (B, S, H, P).  S must be a multiple of ``chunk`` (the ops
-    wrapper pads).
+    Returns y: (B, S, H, P).  S must be a multiple of ``chunk *
+    chunks_per_block`` (the ops wrapper pads to a chunk multiple and
+    keeps ``chunks_per_block=1`` unless told otherwise).  ``kv_len``:
+    optional (B,) int32 true lengths — state contributions past a
+    sequence's length are zeroed and fully-padded chunks are never
+    executed (dynamic trip counts).
     """
     B, S, H, P = x.shape
     N = Bm.shape[-1]
-    assert S % chunk == 0, (S, chunk)
+    K = int(chunks_per_block)
+    assert S % (chunk * K) == 0, (S, chunk, K)
     NC = S // chunk
+    if kv_len is None:
+        kvl = jnp.full((B,), S, jnp.int32)
+    else:
+        kvl = jnp.clip(jnp.asarray(kv_len, jnp.int32), 0, S)
 
     xg = x.transpose(0, 2, 1, 3).reshape(B, H, NC, chunk, P)
     dtg = dt.transpose(0, 2, 1).reshape(B, H, NC, chunk)
@@ -84,19 +130,20 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, interpret: bool = False):
     cg = Cm.reshape(B, NC, chunk, N)
 
     y = pl.pallas_call(
-        functools.partial(_ssd_kernel, chunk=chunk),
-        grid=(B, H, NC),
+        functools.partial(_ssd_kernel, chunk=chunk, chunks_per_block=K),
+        grid=(B, H, NC // K),
         in_specs=[
             pl.BlockSpec((1,), lambda b, h, c: (h,)),
-            pl.BlockSpec((1, 1, 1, chunk, P), lambda b, h, c: (b, h, c, 0, 0)),
-            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, c, 0)),
-            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
-            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, K, chunk, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, K, chunk), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, K, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, K, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (b,)),
         ],
-        out_specs=pl.BlockSpec((1, 1, 1, chunk, P),
+        out_specs=pl.BlockSpec((1, 1, K, chunk, P),
                                lambda b, h, c: (b, h, c, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, NC, chunk, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
         interpret=interpret,
-    )(A, xg, dtg, bg, cg)
+    )(A, xg, dtg, bg, cg, kvl)
     return y.reshape(B, H, S, P).transpose(0, 2, 1, 3)

@@ -1,13 +1,52 @@
-"""Render EXPERIMENTS.md tables from the dry-run / roofline JSONL records.
+"""Render EXPERIMENTS.md tables from the dry-run / roofline JSONL records,
+plus the live engine report a training run prints at exit.
 
     PYTHONPATH=src python -m repro.launch.report dryrun_scan.jsonl --kind dryrun
     PYTHONPATH=src python -m repro.launch.report roofline.jsonl --kind roofline
+
+``engine_report(trainer, planner)`` turns the trainer's cache stats into
+a per-bucket table — steps, padded vs effective tokens, pad fraction —
+so a run shows exactly where padding waste went, alongside the plan
+cache and jit cache hit rates (``launch/train.py`` prints it).
 """
 from __future__ import annotations
 
 import argparse
 import json
 from collections import OrderedDict
+
+
+def engine_report(trainer, planner=None) -> str:
+    """Markdown report of the compile-once engine's caches and padding.
+
+    ``trainer``: a ``repro.train.trainer.Trainer`` after some steps.
+    ``planner``: optionally the planner, for plan-cache hit rates.
+    """
+    cs = trainer.cache_stats
+    lines = ["| bucket S | steps | padded tok | effective tok | pad % |",
+             "|---|---|---|---|---|"]
+    tot_pad = tot_eff = 0
+    for bucket in sorted(cs["bucket_steps"]):
+        steps = cs["bucket_steps"][bucket]
+        padded, eff = cs.get("bucket_tokens", {}).get(bucket, (0, 0))
+        tot_pad += padded
+        tot_eff += eff
+        frac = 100.0 * (1.0 - eff / padded) if padded else 0.0
+        lines.append(f"| {bucket} | {steps} | {padded} | {eff} "
+                     f"| {frac:.1f} |")
+    tot_frac = 100.0 * (1.0 - tot_eff / tot_pad) if tot_pad else 0.0
+    lines.append(f"| **total** | {sum(cs['bucket_steps'].values())} "
+                 f"| {tot_pad} | {tot_eff} | {tot_frac:.1f} |")
+    lines.append("")
+    lines.append(f"jit cache: {cs['compiles']} compiles "
+                 f"(+{cs['prewarm_compiles']} prewarmed), "
+                 f"{cs['jit_hits']} hits")
+    stats = getattr(planner, "stats", None) if planner is not None else None
+    if stats and "cache_hits" in stats:
+        lines.append(f"plan cache: {stats['cache_hits']} hits, "
+                     f"{stats['cache_misses']} misses, "
+                     f"{stats['collections']} collections")
+    return "\n".join(lines)
 
 
 def load(path):

@@ -19,6 +19,8 @@ import dataclasses
 import re
 from typing import Dict, Optional
 
+import numpy as np
+
 # ---- TPU v5e constants (per task spec) ------------------------------------
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
@@ -130,6 +132,114 @@ class Roofline:
             "temp_gib_per_dev": round(self.temp_bytes_per_dev / 2**30, 2),
             "arg_gib_per_dev": round(self.arg_bytes_per_dev / 2**30, 2),
         }
+
+
+# ---------------------------------------------------------------------------
+# per-plan-unit analytic cost model
+#
+# Forward FLOPs of one schedulable unit (a block, or a layer chunk in
+# scan mode) at a given batch geometry.  Rematerialising a unit re-runs
+# exactly this forward, so these numbers ARE the recompute cost the
+# cost-aware scheduler scores against (bytes freed per recompute-FLOP)
+# and the simulator converts to seconds via PEAK_FLOPS.  Pure python
+# math — no tracing, so the planner can evaluate it per bucket in
+# microseconds.
+# ---------------------------------------------------------------------------
+
+def _attention_flops(cfg, B: int, S: int, *, causal: bool = True,
+                     is_global: bool = True, kv_seq: int = 0) -> float:
+    """QKVO projections + score/value matmuls for one attention layer.
+
+    ``kv_seq`` > 0 switches to cross attention over that many keys
+    (k/v projected from the encoder stream of length kv_seq).
+    """
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    Sk = kv_seq or S
+    proj = 2.0 * B * S * d * cfg.attn_dim()            # q
+    proj += 2.0 * 2.0 * B * Sk * d * cfg.kv_dim()      # k, v
+    proj += 2.0 * B * S * cfg.attn_dim() * d           # o
+    W = cfg.sliding_window
+    if kv_seq:
+        pairs = float(S) * Sk                          # cross: full
+    elif not is_global and W > 0:
+        pairs = float(S) * min(W, S)                   # banded
+    elif causal:
+        pairs = float(S) * S / 2.0
+    else:
+        pairs = float(S) * S                           # bidirectional
+    score = 4.0 * B * cfg.num_heads * hd * pairs       # qk^T and p@v
+    return proj + score
+
+
+def _mlp_flops(cfg, B: int, S: int, d_ff: int = 0) -> float:
+    ff = d_ff or cfg.d_ff
+    if not ff:
+        return 0.0
+    mult = 3.0 if cfg.mlp_act == "swiglu" else 2.0
+    return 2.0 * B * S * cfg.d_model * ff * mult
+
+
+def _moe_flops(cfg, B: int, S: int) -> float:
+    router = 2.0 * B * S * cfg.d_model * cfg.num_experts
+    experts = cfg.experts_per_token * _mlp_flops(cfg, B, S, cfg.moe_d_ff)
+    shared = (_mlp_flops(cfg, B, S, cfg.shared_expert_d_ff)
+              if cfg.shared_expert_d_ff else 0.0)
+    return router + experts + shared
+
+
+def _ssm_flops(cfg, B: int, S: int) -> float:
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    P = cfg.ssm_head_dim
+    Q = cfg.ssm_chunk
+    conv_dim = d_inner + 2 * N
+    proj_out = 2 * d_inner + 2 * N + H
+    proj = 2.0 * B * S * d * proj_out + 2.0 * B * S * d_inner * d
+    conv = 2.0 * B * S * cfg.conv_kernel * conv_dim
+    # chunked SSD: intra-chunk (Q,Q) matmuls + inter-chunk state terms
+    scan = B * S * (2.0 * Q * N + H * (2.0 * Q * P + 4.0 * P * N))
+    return proj + conv + scan
+
+
+def unit_fwd_flops(cfg, kind: str, *, batch: int, seq: int, layers: int = 1,
+                   is_global: bool = True, enc_frames: int = 0) -> float:
+    """Analytic forward FLOPs of one plan unit (= ``layers`` blocks of
+    ``kind`` at geometry (batch, seq)).  This is the recompute cost of
+    rematerialising the unit."""
+    B, S = int(batch), int(seq)
+    if kind == "enc":
+        per = _attention_flops(cfg, B, S, causal=False) + _mlp_flops(cfg, B, S)
+    elif kind == "moe":
+        per = (_attention_flops(cfg, B, S, is_global=is_global)
+               + _moe_flops(cfg, B, S))
+    elif kind == "ssm":
+        per = _ssm_flops(cfg, B, S) + _mlp_flops(cfg, B, S)
+    elif kind == "hybrid":
+        per = (_attention_flops(cfg, B, S, is_global=is_global)
+               + _ssm_flops(cfg, B, S) + _mlp_flops(cfg, B, S))
+    elif kind == "dec":
+        per = (_attention_flops(cfg, B, S, is_global=is_global)
+               + _attention_flops(cfg, B, S, kv_seq=enc_frames or S)
+               + _mlp_flops(cfg, B, S))
+    else:                                              # dense
+        per = (_attention_flops(cfg, B, S, is_global=is_global)
+               + _mlp_flops(cfg, B, S))
+    return float(layers) * per
+
+
+def plan_unit_flops(lm, batch):
+    """Per-plan-unit forward FLOPs vector for ``lm`` at this batch's
+    geometry (``LM.plan_unit_meta`` supplies the static per-unit facts).
+    Returns a float64 numpy array aligned with the planner's byte
+    vectors — the ``flops`` argument of ``greedy_plan``/``simulate``."""
+    return np.array([unit_fwd_flops(lm.cfg, m["kind"], batch=m["batch"],
+                                    seq=m["seq"], layers=m["layers"],
+                                    is_global=m["is_global"],
+                                    enc_frames=m.get("enc_frames", 0))
+                     for m in lm.plan_unit_meta(batch)], dtype=np.float64)
 
 
 def model_flops_for(cfg, shape) -> float:

@@ -58,6 +58,9 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
     if shape.kind == "train":
         batch["labels"] = _struct((B, text_len), jnp.int32)
         batch["weights"] = _struct((B, text_len), jnp.float32)
+        # true per-sequence lengths: the ragged-execution operand the
+        # length-aware kernels mask/skip on (full length in a dry run)
+        batch["lengths"] = _struct((B,), jnp.int32)
     return batch
 
 
@@ -71,7 +74,8 @@ def plan_remat_mask(lm: LM, params_struct, batch_struct, *,
                     zero1: bool = False,
                     seq_parallel: bool = False,
                     attn_replicated: bool = False,
-                    expert_2d: bool = False) -> Tuple[bool, ...]:
+                    expert_2d: bool = False,
+                    cost_aware: bool = True) -> Tuple[bool, ...]:
     n = lm.num_plan_units()
     if mode == "none":
         return tuple([False] * n)
@@ -82,6 +86,7 @@ def plan_remat_mask(lm: LM, params_struct, batch_struct, *,
     # PartitionSpec divisors, fixed bytes as the param/opt shards.  The
     # policy flags must match what params_shardings is called with, or
     # the fixed bytes diverge from the real per-chip residency.
+    # ``cost_aware=False`` restores the paper's byte-only Algorithm 1.
     from repro.core.planner import MimosePlanner
     from repro.sharding.budget import MeshBudget
     budget = MeshBudget.from_mesh(mesh, hbm_per_chip, zero1=zero1,
@@ -89,7 +94,8 @@ def plan_remat_mask(lm: LM, params_struct, batch_struct, *,
                                   attn_replicated=attn_replicated,
                                   expert_2d=expert_2d)
     planner = MimosePlanner(lm, mesh_budget=budget,
-                            warmup_samples=1, quantum=1)
+                            warmup_samples=1, quantum=1,
+                            cost_aware=cost_aware)
     mask, _ = planner.plan(params_struct, batch_struct)
     return mask
 

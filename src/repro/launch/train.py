@@ -25,6 +25,7 @@ import numpy as np
 from repro.core import (DTRSimPlanner, MeshBudget, MimosePlanner,
                         NonePlanner, SublinearPlanner)
 from repro.launch.mesh import make_production_mesh, parse_mesh_shape
+from repro.launch.report import engine_report
 from repro.data.pipeline import (DISTRIBUTIONS, bucket_length, make_batches,
                                  top_buckets)
 from repro.models.lm import build_model
@@ -49,6 +50,9 @@ def main(argv=None):
                     help="per-device HBM for --mesh-shape planning")
     ap.add_argument("--zero1", action="store_true",
                     help="ZeRO-1 optimizer-state sharding in the budget")
+    ap.add_argument("--byte-only-remat", action="store_true",
+                    help="paper's byte-only Algorithm 1 instead of "
+                         "cost-aware (bytes per recompute-FLOP) selection")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -100,10 +104,12 @@ def main(argv=None):
     planner = {
         "mimose": lambda: MimosePlanner(lm, budget, quantum=args.quantum,
                                         mesh_budget=mesh_budget,
-                                        warmup_samples=3),
+                                        warmup_samples=3,
+                                        cost_aware=not args.byte_only_remat),
         "sublinear": lambda: SublinearPlanner(lm, budget,
                                               max_input_size=max_size,
-                                              mesh_budget=mesh_budget),
+                                              mesh_budget=mesh_budget,
+                                              cost_aware=not args.byte_only_remat),
         "dtr": lambda: DTRSimPlanner(lm, budget, mesh_budget=mesh_budget),
         "none": lambda: NonePlanner(lm),
     }[args.planner]()
@@ -134,7 +140,8 @@ def main(argv=None):
                   f" remat={st.remat_units} step_s={st.step_time_s:.3f}")
     print(f"done in {time.time() - t0:.1f}s")
     print("summary:", trainer.summary())
-    print("engine:", trainer.cache_stats)
+    print("\nengine report (where the padding went):")
+    print(engine_report(trainer, planner))
     if hasattr(planner, "stats"):
         print("planner:", planner.stats, "plans cached:",
               len(getattr(planner, "cache", {})))

@@ -33,15 +33,20 @@ def hymba_apply(params: dict, cfg: ModelConfig, x: Array, *,
                 positions: Array, layer_is_global=False,
                 kv_cache=None, cache_index=None,
                 ssm_state=None, conv_state=None,
-                decode: bool = False, impl: str = "xla"):
-    """Returns (out, new_kv_cache, (new_ssm_state, new_conv_state))."""
+                decode: bool = False, impl: str = "xla",
+                seq_lens=None):
+    """Returns (out, new_kv_cache, (new_ssm_state, new_conv_state)).
+
+    ``seq_lens``: optional (B,) true lengths of a bucket-padded batch,
+    threaded into both the attention (key mask) and SSD (state mask)
+    paths."""
     attn_out, new_kv = L.attention_apply(
         params["attn"], cfg, x, positions=positions,
         layer_is_global=layer_is_global, kv_cache=kv_cache,
-        cache_index=cache_index, impl=impl)
+        cache_index=cache_index, impl=impl, kv_len=seq_lens)
     ssm_out, (new_ssm, new_conv) = M.mamba2_apply(
         params["ssm"], cfg, x, ssm_state=ssm_state, conv_state=conv_state,
-        decode=decode)
+        decode=decode, seq_lens=seq_lens)
     out = (params["attn_scale"] * attn_out.astype(jnp.float32)
            + params["ssm_scale"] * ssm_out.astype(jnp.float32)) * 0.5
     return out.astype(x.dtype), new_kv, (new_ssm, new_conv)

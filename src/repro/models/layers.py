@@ -200,13 +200,18 @@ def attention_apply(params: dict, cfg: ModelConfig, x: Array, *,
                     impl: str = "xla",
                     mrope_positions: Optional[Array] = None,
                     cross_kv: Optional[tuple] = None,
-                    causal: bool = True):
+                    causal: bool = True,
+                    kv_len: Optional[Array] = None):
     """Returns (out, new_kv_cache).
 
     * training / prefill: kv_cache is None -> full self attention.
     * decode: kv_cache = {'k': (B,Smax,Hkv,hd), 'v': ...}, cache_index is the
       current length; x has Sq==1.
     * cross attention: cross_kv = (k, v) precomputed from the encoder.
+    * ragged training: kv_len = (B,) int32 true lengths of a bucket-padded
+      batch — padded keys are masked out of self attention (and skipped
+      blockwise by the flash kernel), so per-sequence work tracks the
+      effective tokens while shapes stay bucket-static.
     """
     B, Sq, _ = x.shape
     hd = cfg.resolved_head_dim()
@@ -247,18 +252,34 @@ def attention_apply(params: dict, cfg: ModelConfig, x: Array, *,
     elif cross_kv is not None or not causal:
         Sk = k.shape[1]
         mask = jnp.ones((B, Sq, Sk), dtype=bool)
+        if kv_len is not None and cross_kv is None:
+            # bidirectional self attention: padded keys pollute every
+            # valid query, so the length mask is load-bearing here
+            mask = mask & (jnp.arange(Sk)[None, :] < kv_len[:, None])[:, None, :]
     else:
         mask = _build_mask(positions, positions, cfg.sliding_window, layer_is_global)
+        if kv_len is not None:
+            Sk = k.shape[1]
+            key_valid = (jnp.arange(Sk)[None, :] < kv_len[:, None])  # (B, Sk)
+            if mask.ndim == 2:
+                mask = mask[None]
+            mask = mask & key_valid[:, None, :]
 
     W = cfg.sliding_window
     is_local = (isinstance(layer_is_global, bool) and not layer_is_global
                 and W > 0)
-    if impl == "flash" and kv_cache is None and cross_kv is None:
+    if impl == "flash" and kv_cache is None and cross_kv is None and causal:
         from repro.kernels import ops as kernel_ops
-        out = kernel_ops.flash_attention(q, k, v, causal=True,
+        out = kernel_ops.flash_attention(q, k, v, kv_len, causal=True,
                                          window=W if is_local else 0)
     elif (is_local and kv_cache is None and cross_kv is None and causal
           and Sq % W == 0 and Sq >= 2 * W):
+        # taken with or without kv_len: the band is causal, so a valid
+        # query (pos < length) only ever attends keys at its own or
+        # earlier positions — all valid, because padding is a suffix.
+        # Padded-position outputs are garbage either way and carry zero
+        # loss weight (and zero incoming gradient), so the length mask
+        # adds nothing here and the O(S*2W) path stays live.
         out = sdpa_banded_local(q, k, v, W)    # O(S*2W) instead of O(S^2)
     else:
         out = sdpa_reference(q, k, v, mask)

@@ -89,8 +89,14 @@ def block_apply(params: dict, cfg: ModelConfig, x: Array, kind: str, *,
                 enc_out: Optional[Array] = None,
                 mrope_positions: Optional[Array] = None,
                 impl: str = "xla",
+                seq_lens: Optional[Array] = None,
                 ) -> Tuple[Array, Optional[dict], Array]:
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss).
+
+    ``seq_lens``: optional (B,) true sequence lengths of a bucket-padded
+    batch — threaded into the attention key masks and the SSD state
+    masks so padded positions do no work and leak nothing.
+    """
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, Array] = {}
     eps = cfg.norm_eps
@@ -100,7 +106,7 @@ def block_apply(params: dict, cfg: ModelConfig, x: Array, kind: str, *,
             params["ssm"], cfg, L.rmsnorm_apply(params["norm1"], x, eps),
             ssm_state=None if cache is None else cache["ssm"],
             conv_state=None if cache is None else cache["conv"],
-            decode=decode)
+            decode=decode, seq_lens=seq_lens)
         x = x + h
         if cache is not None:
             new_cache.update(ssm=new_ssm, conv=new_conv)
@@ -118,7 +124,7 @@ def block_apply(params: dict, cfg: ModelConfig, x: Array, kind: str, *,
             cache_index=cache_index,
             ssm_state=None if cache is None else cache["ssm"],
             conv_state=None if cache is None else cache["conv"],
-            decode=decode, impl=impl)
+            decode=decode, impl=impl, seq_lens=seq_lens)
         x = x + h
         if cache is not None:
             new_cache.update(k=new_kv["k"], v=new_kv["v"], ssm=new_ssm, conv=new_conv)
@@ -133,7 +139,7 @@ def block_apply(params: dict, cfg: ModelConfig, x: Array, kind: str, *,
         kv_cache=None if cache is None else {"k": cache["k"], "v": cache["v"]},
         cache_index=cache_index, impl=impl,
         mrope_positions=mrope_positions,
-        causal=(kind != "enc"))
+        causal=(kind != "enc"), kv_len=seq_lens)
     x = x + h
     if new_kv is not None:
         new_cache.update(k=new_kv["k"], v=new_kv["v"])
@@ -301,10 +307,21 @@ class LM:
     # -- forward -----------------------------------------------------------
     def forward(self, params, batch, remat_mask=None,
                 remat_policy=None) -> Tuple[Array, Array]:
-        """remat_mask: bool sequence over plan units (blocks or chunks)."""
+        """remat_mask: bool sequence over plan units (blocks or chunks).
+
+        When the batch carries ``lengths`` ((B,) true sequence lengths of
+        a bucket-padded batch), they are threaded into every block so the
+        kernels mask — and, where blockwise, skip — the padded tail.
+        """
         cfg = self.cfg
         x, positions, mrope_positions = self._embed_inputs(params, batch)
         aux = jnp.zeros((), jnp.float32)
+        seq_lens = batch.get("lengths")
+        if seq_lens is not None:
+            seq_lens = jnp.asarray(seq_lens, jnp.int32)
+            if cfg.family == "vlm" and cfg.vision_tokens:
+                # vision patches are prepended and always real tokens
+                seq_lens = seq_lens + cfg.vision_tokens
 
         n_units = self.num_plan_units()
         if remat_mask is None:
@@ -320,7 +337,8 @@ class LM:
 
         if cfg.remat_mode == "scan":
             x, aux = self._forward_scan(params, x, positions, dec_mask,
-                                        enc_out, mrope_positions, remat_policy)
+                                        enc_out, mrope_positions,
+                                        remat_policy, seq_lens)
         else:
             for i, bp in enumerate(params["blocks"]):
                 def one(p, xx):
@@ -328,7 +346,7 @@ class LM:
                         p, cfg, xx, self.kind, positions=positions,
                         layer_is_global=self._is_global(i),
                         enc_out=enc_out, mrope_positions=mrope_positions,
-                        impl=self.attn_impl)
+                        impl=self.attn_impl, seq_lens=seq_lens)
                     return y, a
                 if dec_mask[i]:
                     one = jax.checkpoint(one, policy=remat_policy)
@@ -346,7 +364,7 @@ class LM:
         return logits, aux
 
     def _forward_scan(self, params, x, positions, chunk_mask, enc_out,
-                      mrope_positions, remat_policy):
+                      mrope_positions, remat_policy, seq_lens=None):
         cfg = self.cfg
         bounds = self._chunk_bounds()
         aux = jnp.zeros((), jnp.float32)
@@ -361,7 +379,8 @@ class LM:
                                       layer_is_global=flag,
                                       enc_out=enc_out,
                                       mrope_positions=mrope_positions,
-                                      impl=self.attn_impl)
+                                      impl=self.attn_impl,
+                                      seq_lens=seq_lens)
                 y = self._constrain(y)
                 return (y, ax + a), None
             return body
@@ -403,6 +422,34 @@ class LM:
 
     def _num_enc_units(self) -> int:
         return self.cfg.encoder_layers
+
+    # -- static per-unit facts for the analytic cost model -------------------
+    def plan_unit_meta(self, batch) -> List[Dict[str, Any]]:
+        """One dict per plan unit, timestamp order: the static facts the
+        ``launch/roofline.py`` cost model needs to price a unit's forward
+        (= its recompute cost) at this batch's geometry.  Works on arrays
+        and ``ShapeDtypeStruct`` batches alike — no tracing, so the
+        planner can call it per bucket for free."""
+        cfg = self.cfg
+        B, St = batch["tokens"].shape
+        S = St + (cfg.vision_tokens
+                  if cfg.family == "vlm" and cfg.vision_tokens else 0)
+        F = batch["frames"].shape[1] if "frames" in batch else 0
+        metas: List[Dict[str, Any]] = []
+        for i in range(cfg.encoder_layers):
+            metas.append({"kind": "enc", "layers": 1, "batch": B, "seq": F,
+                          "is_global": True})
+        if cfg.remat_mode == "scan":
+            for s, e in self._chunk_bounds():
+                metas.append({"kind": self.kind, "layers": e - s, "batch": B,
+                              "seq": S, "is_global": self._chunk_flag(s, e),
+                              "enc_frames": F})
+        else:
+            for i in range(cfg.num_layers):
+                metas.append({"kind": self.kind, "layers": 1, "batch": B,
+                              "seq": S, "is_global": self._is_global(i),
+                              "enc_frames": F})
+        return metas
 
     def num_plan_units(self) -> int:
         if self.cfg.remat_mode == "scan":

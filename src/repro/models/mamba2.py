@@ -143,8 +143,14 @@ def _causal_conv(seq: Array, w: Array, b: Array) -> Array:
 def mamba2_apply(params: dict, cfg: ModelConfig, u: Array,
                  ssm_state: Array | None = None,
                  conv_state: Array | None = None,
-                 decode: bool = False):
-    """u: (B, S, d_model).  Returns (out, (ssm_state, conv_state))."""
+                 decode: bool = False,
+                 seq_lens: Array | None = None):
+    """u: (B, S, d_model).  Returns (out, (ssm_state, conv_state)).
+
+    ``seq_lens``: optional (B,) int32 true lengths of a bucket-padded
+    batch — dt is zeroed past each sequence's length, so padding never
+    enters the recurrent state (decay exp(0)=1, update dt*x*B = 0).
+    """
     Bt, S, d = u.shape
     d_inner, H, N, conv_dim = mamba2_dims(cfg)
 
@@ -166,6 +172,9 @@ def mamba2_apply(params: dict, cfg: ModelConfig, u: Array,
     x, B_, C_ = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
     x = x.reshape(Bt, -1, H, cfg.ssm_head_dim)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    if seq_lens is not None and not decode:
+        valid = jnp.arange(S)[None, :, None] < seq_lens[:, None, None]
+        dt = jnp.where(valid, dt, 0.0)
     A = -jnp.exp(params["A_log"])
 
     if decode:

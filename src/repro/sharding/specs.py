@@ -137,6 +137,8 @@ def batch_spec(name: str, shape: tuple, mesh: Mesh,
     shape (batch=1) shards the *sequence* axis over data instead."""
     data = _data_axes(mesh)
     data = data if len(data) > 1 else data[0]
+    if name == "lengths":                 # (B,) per-sequence true lengths
+        return P(data)
     if name in ("tokens", "labels", "weights", "positions"):
         if shard_sequence:
             return P(None, data)

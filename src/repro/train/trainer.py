@@ -49,8 +49,9 @@ class StepStats:
     plan_time_s: float
     compile: bool
     remat_units: int
-    tokens: int
+    tokens: int                # effective (unpadded) tokens in the step
     bucket: int = 0
+    padded_tokens: int = 0     # bucket-shape tokens actually computed over
 
 
 class Trainer:
@@ -68,24 +69,43 @@ class Trainer:
         self._step_cache: Dict[Any, Any] = {}
         self.history: list[StepStats] = []
         self.cache_stats = {"compiles": 0, "prewarm_compiles": 0,
-                            "jit_hits": 0, "bucket_steps": {}}
+                            "jit_hits": 0, "bucket_steps": {},
+                            # per bucket: [padded_tokens, effective_tokens]
+                            # (where the padding waste went — see
+                            # launch/report.engine_report)
+                            "bucket_tokens": {}}
 
     # ------------------------------------------------------------------
     def _batch_key(self, batch) -> tuple:
         # dtypes matter, not just shapes: prewarmed entries are AOT
         # Compiled executables fixed to the exact avals they were lowered
         # with — a same-shape/different-dtype batch must miss the cache
-        # and compile, not crash inside a Compiled call
+        # and compile, not crash inside a Compiled call.  ``lengths`` is
+        # excluded: _prepare always materialises it as (B,) int32, whose
+        # aval is implied by the tokens shape already in the key — its
+        # *values* are runtime operands of the length-aware kernels, so
+        # raggedness never forces a recompile.
         return tuple(sorted((k, tuple(np.shape(v)),
                              str(getattr(v, "dtype", "")))
                             for k, v in batch.items() if k != "lengths"))
 
     def _prepare(self, batch) -> dict:
-        """Bucket-pad and device-put one batch (drops the host-side
-        ``lengths`` after the exact loss weights are materialised)."""
+        """Bucket-pad and device-put one batch.
+
+        The true ``lengths`` stay in the batch (defaulted to the full
+        sequence when absent) so the model can thread them into the
+        length-aware kernels — padded positions are masked out of
+        attention/SSD and skipped blockwise, not just zero-weighted in
+        the loss."""
         if self.bucket_pad:
             batch = pad_batch(batch, getattr(self.planner, "quantum", 1))
-        return {k: jnp.asarray(v) for k, v in batch.items() if k != "lengths"}
+        B, S = np.shape(batch["tokens"])
+        if "lengths" not in batch:
+            batch = dict(batch)
+            batch["lengths"] = np.full((B,), S, np.int32)
+        return {k: jnp.asarray(np.asarray(v, np.int32) if k == "lengths"
+                               else v)
+                for k, v in batch.items()}
 
     def _build_step(self, mask: Tuple[bool, ...]):
         opt = self.optimizer
@@ -179,11 +199,16 @@ class Trainer:
             params, opt_state, loss, metrics = fn(params, opt_state, batch)
         loss = float(loss)
         t_step = time.perf_counter() - t1
+        eff_tokens = int(metrics["tokens"])
+        padded_tokens = int(np.prod(np.shape(batch["tokens"])))
         bs = self.cache_stats["bucket_steps"]
         bs[bucket] = bs.get(bucket, 0) + 1
+        bt = self.cache_stats["bucket_tokens"].setdefault(bucket, [0, 0])
+        bt[0] += padded_tokens
+        bt[1] += eff_tokens
         self.history.append(StepStats(loss, t_step, t_plan, is_new,
-                                      int(sum(mask)),
-                                      int(metrics["tokens"]), bucket))
+                                      int(sum(mask)), eff_tokens, bucket,
+                                      padded_tokens))
         return params, opt_state, loss
 
     def run(self, params, batches, opt_state: Optional[AdamWState] = None):
@@ -199,6 +224,9 @@ class Trainer:
         if not h:
             return {}
         warm = [s for s in h if not s.compile] or h
+        warm_s = max(float(np.sum([s.step_time_s for s in warm])), 1e-9)
+        eff = float(np.sum([s.tokens for s in warm]))
+        padded = float(np.sum([s.padded_tokens for s in warm]))
         return {
             "steps": len(h),
             "mean_step_s": float(np.mean([s.step_time_s for s in warm])),
@@ -208,8 +236,11 @@ class Trainer:
             "jit_hits": int(self.cache_stats["jit_hits"]),
             "buckets": len(self.cache_stats["bucket_steps"]),
             "mean_remat_units": float(np.mean([s.remat_units for s in h])),
-            "tokens_per_s": float(np.sum([s.tokens for s in warm])
-                                  / max(np.sum([s.step_time_s for s in warm]),
-                                        1e-9)),
+            # throughput over *effective* (unpadded) tokens — the number
+            # padded and ragged runs are comparable on; the raw padded
+            # rate rides along as a secondary diagnostic
+            "tokens_per_s": eff / warm_s,
+            "padded_tokens_per_s": padded / warm_s,
+            "pad_fraction": 1.0 - eff / max(padded, 1.0),
             "final_loss": h[-1].loss,
         }

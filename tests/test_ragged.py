@@ -1,0 +1,256 @@
+"""Ragged execution + cost-aware remat selection (ISSUE 3).
+
+Equivalence: the length-aware kernels on a bucket-padded batch must
+reproduce the reference kernels run on the unpadded lengths — bitwise
+against the same Pallas kernel at the unpadded shape (same blocking),
+allclose against the naive ``ref.py`` oracles (causal / window / GQA /
+bidirectional variants, interpret mode).
+
+Scheduler property: at equal budget a cost-aware plan never exceeds the
+byte-only plan's simulated recompute time, and stays feasible.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scheduler import greedy_plan
+from repro.core.simulator import simulate
+from repro.data.pipeline import pad_batch
+from repro.kernels import flash_attention as fa
+from repro.kernels import ops
+from repro.kernels import ssd_scan as ssd_mod
+from repro.kernels.ref import flash_attention_reference, ssd_reference
+from repro.launch.roofline import plan_unit_flops, unit_fwd_flops
+from repro.models.lm import build_model
+from repro.models.registry import get_config
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _qkv(B, S, H, Hkv, hd, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# flash attention: masked padded bucket == reference at the true lengths
+# ---------------------------------------------------------------------------
+
+RAGGED_FLASH_CASES = [
+    # (B, S, H, Hkv, hd, causal, window)
+    (2, 96, 4, 2, 32, True, 0),        # GQA causal
+    (2, 96, 4, 4, 32, True, 32),       # sliding window
+    (2, 128, 8, 1, 16, True, 0),       # extreme GQA
+    (2, 96, 2, 2, 32, False, 0),       # bidirectional (encoder-style)
+]
+
+
+@pytest.mark.parametrize("case", RAGGED_FLASH_CASES)
+def test_flash_ragged_matches_reference_at_true_lengths(case):
+    B, S, H, Hkv, hd, causal, window = case
+    q, k, v = _qkv(B, S, H, Hkv, hd)
+    rng = np.random.default_rng(0)
+    lens = jnp.asarray(rng.integers(S // 3, S + 1, B), jnp.int32)
+    out = ops.flash_attention(q, k, v, lens, causal=causal, window=window)
+    for b in range(B):
+        L = int(lens[b])
+        ref = flash_attention_reference(
+            q[b:b + 1, :L].transpose(0, 2, 1, 3),
+            k[b:b + 1, :L].transpose(0, 2, 1, 3),
+            v[b:b + 1, :L].transpose(0, 2, 1, 3),
+            causal=causal, window=window).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out[b:b + 1, :L]),
+                                   np.asarray(ref), rtol=2e-4, atol=2e-5,
+                                   err_msg=f"case={case} b={b} L={L}")
+
+
+def test_flash_ragged_bitwise_matches_unpadded_kernel():
+    """Same kernel, same blocking: the masked run over the padded bucket
+    must produce bit-identical outputs to the kernel run at the true
+    (block-aligned) length — masking changes nothing but trip counts."""
+    B, S, H, hd, blk = 2, 128, 2, 32, 32
+    L = 64                                  # block-aligned true length
+    q, k, v = _qkv(B, S, H, H, hd)
+    lens = jnp.full((B,), L, jnp.int32)
+    padded = fa.flash_attention_fwd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), lens, causal=True,
+        block_q=blk, block_k=blk, interpret=True)
+    exact = fa.flash_attention_fwd(
+        q[:, :L].transpose(0, 2, 1, 3), k[:, :L].transpose(0, 2, 1, 3),
+        v[:, :L].transpose(0, 2, 1, 3), None, causal=True,
+        block_q=blk, block_k=blk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(padded[:, :, :L]),
+                                  np.asarray(exact))
+
+
+def test_flash_ragged_backward_matches_reference():
+    """Grads through the masked kernel == grads of the length-masked
+    reference; dk/dv vanish at padded positions."""
+    B, S, H, Hkv, hd = 2, 96, 4, 2, 32
+    q, k, v = _qkv(B, S, H, Hkv, hd)
+    lens = jnp.array([50, 77], jnp.int32)
+    wm = (jnp.arange(S)[None, :] < lens[:, None]).astype(jnp.float32)
+
+    def f_kernel(q, k, v):
+        o = ops.flash_attention(q, k, v, lens, causal=True)
+        return ((o * wm[:, :, None, None]) ** 2).sum()
+
+    def f_ref(q, k, v):
+        o = flash_attention_reference(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True,
+            kv_len=lens).transpose(0, 2, 1, 3)
+        return ((o * wm[:, :, None, None]) ** 2).sum()
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4,
+                                   err_msg=f"d{name}")
+    # keys/values past the true length receive exactly zero gradient
+    assert float(np.abs(np.asarray(gk[1])[0, 50:]).max()) == 0.0
+    assert float(np.abs(np.asarray(gk[2])[1, 77:]).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# SSD scan: state contributions stop at the true length
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunks_per_block", [1, 2])
+def test_ssd_ragged_matches_reference_at_true_lengths(chunks_per_block):
+    B, S, H, P, N, chunk = 2, 96, 2, 16, 8, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    lens = jnp.array([40, 77], jnp.int32)
+    y = ops.ssd_scan(x, dt, A, Bm, Cm, lens, chunk=chunk,
+                     chunks_per_block=chunks_per_block)
+    for b in range(B):
+        L = int(lens[b])
+        yr, _ = ssd_reference(x[b:b + 1, :L], dt[b:b + 1, :L], A,
+                              Bm[b:b + 1, :L], Cm[b:b + 1, :L])
+        np.testing.assert_allclose(np.asarray(y[b:b + 1, :L]),
+                                   np.asarray(yr), rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_ragged_bitwise_matches_unpadded_kernel():
+    B, S, L, H, P, N, chunk = 1, 96, 32, 2, 16, 8, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    lens = jnp.full((B,), L, jnp.int32)
+    padded = ssd_mod.ssd_scan(x, dt, A, Bm, Cm, kv_len=lens, chunk=chunk,
+                              interpret=True)
+    exact = ssd_mod.ssd_scan(x[:, :L], dt[:, :L], A, Bm[:, :L], Cm[:, :L],
+                             chunk=chunk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(padded[:, :L]),
+                                  np.asarray(exact))
+
+
+# ---------------------------------------------------------------------------
+# model-level: padded-with-lengths loss == unpadded loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["bert_base_paper", "mamba2_1p3b"])
+def test_padded_loss_with_lengths_equals_unpadded(arch):
+    cfg = get_config(arch).reduced(num_layers=2, d_model=64, d_ff=128,
+                                   vocab_size=128, dtype="float32")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    S = 48
+    lens = rng.integers(S // 2, S + 1, 2)
+    tokens = rng.integers(1, 128, (2, S)).astype(np.int32)
+    weights = (np.arange(S)[None, :] < lens[:, None]).astype(np.float32)
+    tokens = tokens * weights.astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1)
+    labels[:, -1] = 0
+    raw = {"tokens": tokens, "labels": labels, "weights": weights,
+           "lengths": lens}
+    padded = pad_batch(raw, 64)
+    l_raw, m_raw = lm.loss(params, {k: jnp.asarray(v) for k, v in raw.items()
+                                    if k != "lengths"})
+    l_pad, m_pad = lm.loss(params, {k: jnp.asarray(v)
+                                    for k, v in padded.items()})
+    assert float(m_raw["tokens"]) == float(m_pad["tokens"])
+    np.testing.assert_allclose(float(l_raw), float(l_pad),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# cost-aware scheduler vs byte-only oracle
+# ---------------------------------------------------------------------------
+
+def test_cost_aware_never_slower_than_byte_only():
+    """Property: at equal budget, the cost-aware plan's simulated
+    recompute time never exceeds the byte-only plan's, and its coverage
+    is no worse (feasible whenever the byte-only plan is)."""
+    rng = np.random.default_rng(11)
+    for trial in range(300):
+        n = int(rng.integers(1, 64))
+        if trial % 3 == 0:
+            est = rng.uniform(1.0, 1e9, n)
+            fl = rng.uniform(1e9, 1e13, n)
+        elif trial % 3 == 1:
+            # equal bytes, heterogeneous flops — the flash-unit regime
+            est = np.full(n, 1e8)
+            fl = rng.choice([1e10, 4e10], n)
+        else:
+            # correlated bytes/flops with noise
+            fl = rng.uniform(1e9, 1e12, n)
+            est = fl * rng.uniform(0.5, 2.0, n) * 1e-3
+        budget = float(rng.uniform(0, est.sum() * 1.2))
+        fixed = float(rng.choice([0.0, est.sum() * 0.1]))
+        byte = greedy_plan(est, budget, fixed, flops=fl, byte_only=True)
+        cost = greedy_plan(est, budget, fixed, flops=fl)
+        sim_b = simulate(est, byte.remat, fixed, flops=fl)
+        sim_c = simulate(est, cost.remat, fixed, flops=fl)
+        assert sim_c.recompute_time_s <= sim_b.recompute_time_s * (1 + 1e-12)
+        assert cost.recompute_flops == pytest.approx(sim_c.recompute_flops)
+        excess = est.sum() + fixed - budget
+        if excess > 0:
+            assert cost.covered_bytes >= min(excess, byte.covered_bytes) - 1e-6
+
+
+def test_cost_aware_prefers_cheap_units_at_equal_bytes():
+    """Flash-unit regime: equal bytes, 4x flops on every other unit —
+    cost-aware must remat only the cheap ones when they suffice."""
+    est = np.full(8, 100.0)
+    fl = np.array([1., 4., 1., 4., 1., 4., 1., 4.]) * 1e9
+    # excess of 400 => 4 units
+    plan = greedy_plan(est, 400.0, 0.0, flops=fl)
+    assert plan.remat == [True, False, True, False, True, False, True, False]
+    byte = greedy_plan(est, 400.0, 0.0, flops=fl, byte_only=True)
+    assert byte.recompute_flops > plan.recompute_flops
+
+
+def test_plan_unit_flops_matches_unit_meta():
+    """The analytic per-unit vector prices local (windowed) layers below
+    global layers and scales with sequence length."""
+    cfg = get_config("gemma3_12b").reduced(
+        num_layers=4, d_model=64, d_ff=128, vocab_size=128,
+        dtype="float32", sliding_window=32, global_interval=2)
+    lm = build_model(cfg)
+    small = {"tokens": np.zeros((2, 128), np.int32)}
+    big = {"tokens": np.zeros((2, 256), np.int32)}
+    fl_s = plan_unit_flops(lm, small)
+    fl_b = plan_unit_flops(lm, big)
+    assert fl_s.shape == (4,)
+    # layers 0, 2 local; layers 1, 3 global (global_interval=2)
+    assert fl_s[0] < fl_s[1] and fl_s[2] < fl_s[3]
+    assert (fl_b > fl_s).all()
+    # the meta-driven vector agrees with direct cost-model calls
+    direct = unit_fwd_flops(cfg, "dense", batch=2, seq=128, is_global=False)
+    assert fl_s[0] == pytest.approx(direct)
