@@ -1,0 +1,50 @@
+"""Typed per-unit plan actions — the planner/executor contract.
+
+A Mimose plan historically was a boolean remat mask: every plan unit is
+either KEPT (its residuals stay in HBM) or REMATERIALISED (residuals
+dropped in the forward pass and recomputed in the backward).  Growing
+the system past a single reclamation mechanism (MONeT/DTR: jointly
+optimising *across* mechanisms beats any single one) needs a richer
+vocabulary, so a plan is now a tuple of ``Action`` values:
+
+* ``KEEP``    — save the unit's residuals on device (the old ``False``);
+* ``REMAT``   — drop and recompute (the old ``True``), cost = the unit's
+  forward FLOPs at the roofline compute bound;
+* ``OFFLOAD`` — stream the unit's residuals to pinned host memory during
+  the forward pass and fetch them back for the backward, cost = 2 x
+  offloaded bytes over the PCIe link (partially overlappable with
+  compute).
+
+``Action`` is an ``IntEnum`` with ``KEEP == 0`` and ``REMAT == 1`` on
+purpose: a plain bool mask converts value-exactly (``True -> REMAT``),
+so every pre-action call site — and any serialized mask — keeps working
+through ``as_actions``.  This module is intentionally dependency-free
+(stdlib only): it is imported by both ``repro.core`` and
+``repro.models``, which must not import each other at module scope.
+
+Future actions (quantized save, recompute-from-offload) extend the enum
+without another representation change.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Iterable, Tuple
+
+
+class Action(enum.IntEnum):
+    """What to do with one plan unit's saved residuals."""
+    KEEP = 0
+    REMAT = 1
+    OFFLOAD = 2
+
+
+def as_actions(mask: Iterable) -> Tuple[Action, ...]:
+    """Normalise a plan to a tuple of ``Action``.
+
+    Accepts the legacy boolean remat mask (``True -> REMAT``,
+    ``False -> KEEP``), raw ints, or ``Action`` values — mixed freely.
+    This is the single conversion every consumer (model, trainer,
+    simulator, scheduler) delegates to, so bool and typed plans can
+    never diverge in meaning.
+    """
+    return tuple(Action(int(m)) for m in mask)

@@ -1,4 +1,6 @@
 """Mimose core: the paper's primary contribution (input-aware checkpointing)."""
+from repro.actions import Action, as_actions  # noqa: F401
+from repro.core.cache import LRUCache  # noqa: F401
 from repro.core.collector import (CollectionResult, ShuttlingCollector,  # noqa: F401
                                   input_size_of, unit_residual_bytes)
 from repro.core.estimator import (DecisionTreeEstimator, ESTIMATORS,  # noqa: F401
@@ -11,7 +13,7 @@ from repro.core.scheduler import (Plan, build_buckets, greedy_plan,  # noqa: F40
 from repro.core.simulator import (ShardedSimResult, SimResult,  # noqa: F401
                                   dtr_simulate, peak_if_checkpointing_unit,
                                   simulate, simulate_sharded)
-from repro.launch.roofline import (plan_unit_flops,  # noqa: F401
-                                   unit_fwd_flops)
+from repro.launch.roofline import (offload_transfer_s,  # noqa: F401
+                                   plan_unit_flops, unit_fwd_flops)
 from repro.sharding.budget import (MeshBudget,  # noqa: F401
                                    fixed_train_bytes_per_device)

@@ -9,7 +9,12 @@
 
 Both accept the same ``mesh_budget`` as ``MimosePlanner`` so the paper's
 comparisons stay apples-to-apples under a mesh: collection, fixed bytes
-and the budget all switch to per-device quantities.
+and the budget all switch to per-device quantities.  Like every
+planner, both emit typed action plans (``Plan.as_actions()``);
+``SublinearPlanner`` additionally takes the same ``offload=`` /
+``pcie_gbps=`` knobs as ``MimosePlanner`` (its one static plan may then
+OFFLOAD units to host), while DTR's evict-on-OOM semantics are
+remat-only by construction.
 """
 from __future__ import annotations
 
@@ -37,7 +42,10 @@ class SublinearPlanner(PlannerBase):
                  shard_divisor: int = 1,
                  mesh_budget: Optional[MeshBudget] = None,
                  warmup_samples: int = 4,
-                 cost_aware: bool = True):
+                 cost_aware: bool = True,
+                 offload: bool = False,
+                 pcie_gbps: float = 16.0,
+                 offload_overlap: float = 0.5):
         self.lm = lm
         self.mesh_budget = mesh_budget
         if not max_input_size:
@@ -47,6 +55,10 @@ class SublinearPlanner(PlannerBase):
         self.fixed_bytes = fixed_bytes
         self.shard_divisor = shard_divisor
         self.cost_aware = cost_aware
+        self._init_hybrid(offload=offload, pcie_gbps=pcie_gbps,
+                          offload_overlap=offload_overlap,
+                          cost_aware=cost_aware, degree=2,
+                          min_samples=warmup_samples)
         self.collector = ShuttlingCollector(lm, mesh_budget=mesh_budget)
         self.estimator = PolyEstimator(2, min_samples=warmup_samples)
         self._plan: Optional[Plan] = None
@@ -69,6 +81,7 @@ class SublinearPlanner(PlannerBase):
             res = self.collector.collect(params, probe)
             self.estimator.add_sample(res.input_size,
                                       self.collected_vector(res))
+            self._feed_hybrid_estimators(res.input_size, res)
         est = self.estimator.predict(self.max_input_size)
         # recompute cost at the planning geometry (the largest probe):
         # same cost-aware scoring as MimosePlanner, apples-to-apples
@@ -77,14 +90,15 @@ class SublinearPlanner(PlannerBase):
         self._plan = greedy_plan(est / self.activation_divisor_scalar(),
                                  self.budget_bytes,
                                  self.resolve_fixed_bytes(params),
-                                 flops=flops)
+                                 flops=self.planning_flops(flops),
+                                 **self._hybrid_kwargs(self.max_input_size))
 
     def plan(self, params, batch):
         if self._plan is None:
             self._build_static_plan(params, batch)
         s = input_size_of(batch)
-        return self._plan.as_tuple(), PlanInfo(s, self.max_input_size, True,
-                                               False, self._plan)
+        return self._plan.as_actions(), PlanInfo(s, self.bucket_key(batch),
+                                                 True, False, self._plan)
 
 
 class DTRSimPlanner(PlannerBase):
@@ -128,4 +142,5 @@ class DTRSimPlanner(PlannerBase):
                                       + plan_ops * self.plan_op_cost_s)
         p = Plan(list(mask), 0.0, float(act[np.asarray(mask)].sum()),
                  float(act.sum()))
-        return p.as_tuple(), PlanInfo(s, s, False, False, p)
+        return p.as_actions(), PlanInfo(s, self.bucket_key(batch), False,
+                                        False, p)

@@ -1,0 +1,66 @@
+"""Bounded LRU cache for compiled executables and cached plans.
+
+The trainer's jit-step cache and the planners' plan caches were both
+unbounded dicts: under a long-tailed bucket distribution (qqp's
+power-law lengths, or a multi-tenant server seeing many quanta) every
+rare bucket pins a compiled XLA executable forever — a slow leak of
+host *and* device memory.  ``LRUCache`` is the drop-in replacement:
+dict-compatible for the operations those call sites use (``in``,
+``[]``, ``.get``, ``len``, ``.clear``, iteration), evicting the least
+recently *used* entry once ``maxsize`` is exceeded and counting
+evictions so ``Trainer.cache_stats`` / ``planner.stats`` can report
+churn.  Reads refresh recency (a hot bucket is never the victim).
+
+Not thread-safe — the training loop is single-threaded, matching every
+other cache in the engine.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Iterator
+
+
+class LRUCache:
+    """A dict with bounded size and least-recently-used eviction."""
+
+    def __init__(self, maxsize: int):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = int(maxsize)
+        self.evictions = 0
+        self._data: "OrderedDict[Any, Any]" = OrderedDict()
+
+    # -- dict protocol (the subset the engine's call sites use) ---------
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def __getitem__(self, key):
+        self._data.move_to_end(key)          # touch: reads refresh recency
+        return self._data[key]
+
+    def __setitem__(self, key, value):
+        if key in self._data:
+            self._data.move_to_end(key)
+        self._data[key] = value
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)   # least recently used
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __iter__(self) -> Iterator:
+        return iter(self._data)
+
+    def get(self, key, default=None):
+        if key in self._data:
+            return self[key]
+        return default
+
+    def keys(self):
+        return self._data.keys()
+
+    def clear(self) -> None:
+        """Drop every entry (stale-plan flush); evictions keep counting
+        only capacity-driven removals, not explicit invalidation."""
+        self._data.clear()

@@ -58,6 +58,12 @@ class UnitRecord:
     # analytic forward FLOPs at the collection geometry — the recompute
     # cost of rematerialising this unit (launch/roofline.py cost model)
     flops: float = 0.0
+    # residual bytes worth a host DMA (matrix-shaped leaves; scalars and
+    # 1-d leaves stay on device) — what an OFFLOAD action can free
+    offloadable_bytes: int = 0
+    device_offloadable_bytes: int = 0
+    # per-device boundary-tensor bytes (the checkpoint REMAT must keep)
+    device_output_bytes: int = 0
 
 
 @dataclasses.dataclass
@@ -82,6 +88,26 @@ class CollectionResult:
         collection geometry — the scheduler's cost-aware score input."""
         return np.array([r.flops for r in self.records], dtype=np.float64)
 
+    def output_vector(self) -> np.ndarray:
+        """Per-unit boundary (inter-block) tensor bytes — what REMAT
+        keeps on device as its recompute checkpoint."""
+        return np.array([r.output_bytes for r in self.records],
+                        dtype=np.float64)
+
+    def device_output_vector(self) -> np.ndarray:
+        return np.array([r.device_output_bytes for r in self.records],
+                        dtype=np.float64)
+
+    def offloadable_vector(self) -> np.ndarray:
+        """Per-unit residual bytes an OFFLOAD action can stream to host
+        (DMA-worthy matrix leaves; always <= ``activation_vector``)."""
+        return np.array([r.offloadable_bytes for r in self.records],
+                        dtype=np.float64)
+
+    def device_offloadable_vector(self) -> np.ndarray:
+        return np.array([r.device_offloadable_bytes for r in self.records],
+                        dtype=np.float64)
+
     def total_activation_bytes(self) -> int:
         return int(sum(r.activation_bytes for r in self.records))
 
@@ -99,6 +125,11 @@ def unit_residual_bytes(unit: PlanUnit, x_struct,
     closure leaves matching a parameter's (shape, dtype) are excluded
     (they are counted in the fixed per-device bytes instead) and each
     remaining activation leaf is divided by its sharding divisor.
+
+    Offloadable bytes (what an OFFLOAD action can stream to pinned host
+    memory) are the non-param residual leaves with >= 2 dimensions —
+    scalars and 1-d leaves are not worth a DMA descriptor and stay on
+    device — clamped to never exceed the activation bytes.
     """
     def capture(p, x):
         out, vjp_fn = jax.vjp(lambda xx: unit.apply(p, xx), x)
@@ -112,19 +143,23 @@ def unit_residual_bytes(unit: PlanUnit, x_struct,
         "output_bytes": _tree_bytes(out_struct),
         "param_bytes": params,
     }
-    if mesh_budget is None:
-        info["device_activation_bytes"] = info["activation_bytes"]
-        return info
 
     B = int(x_struct.shape[0])
     d_model = int(x_struct.shape[-1])
+
+    def divisor(shape) -> float:
+        if mesh_budget is None:
+            return 1.0
+        return mesh_budget.activation_divisor(shape, batch=B,
+                                              d_model=d_model)
+
     # params appear in the closure at their own (sharded) residency; match
-    # them out by (shape, dtype) multiset so only activations are divided
+    # them out by (shape, dtype) multiset so only activations are counted
     param_sig = collections.Counter(
         (tuple(l.shape), str(jnp.dtype(l.dtype)))
         for l in jax.tree_util.tree_leaves(unit.params)
         if hasattr(l, "shape"))
-    dev = 0.0
+    dev = offl = dev_offl = 0.0
     for leaf in jax.tree_util.tree_leaves(vjp_struct):
         if not hasattr(leaf, "shape"):
             continue
@@ -133,9 +168,23 @@ def unit_residual_bytes(unit: PlanUnit, x_struct,
             param_sig[key] -= 1
             continue
         nbytes = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
-        dev += nbytes / mesh_budget.activation_divisor(
-            leaf.shape, batch=B, d_model=d_model)
-    info["device_activation_bytes"] = int(dev)
+        dev += nbytes / divisor(leaf.shape)
+        if len(leaf.shape) >= 2:
+            offl += nbytes
+            dev_offl += nbytes / divisor(leaf.shape)
+    # global activation bytes keep the seed's aggregate formula (resid -
+    # params) so existing byte accounting is bit-identical; per-device
+    # bytes come from the leaf-wise walk as before
+    info["device_activation_bytes"] = (info["activation_bytes"]
+                                       if mesh_budget is None else int(dev))
+    info["offloadable_bytes"] = int(min(offl, info["activation_bytes"]))
+    info["device_offloadable_bytes"] = int(
+        min(dev_offl, info["device_activation_bytes"]))
+    info["device_output_bytes"] = int(sum(
+        int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+        / divisor(l.shape)
+        for l in jax.tree_util.tree_leaves(out_struct)
+        if hasattr(l, "shape")))
     return info
 
 
@@ -219,7 +268,11 @@ class ShuttlingCollector:
             rec = UnitRecord(u.name, u.index, info["activation_bytes"],
                              info["output_bytes"], info["param_bytes"],
                              t_fwd, info["device_activation_bytes"],
-                             float(unit_flops[u.index]))
+                             float(unit_flops[u.index]),
+                             offloadable_bytes=info["offloadable_bytes"],
+                             device_offloadable_bytes=info[
+                                 "device_offloadable_bytes"],
+                             device_output_bytes=info["device_output_bytes"])
             records.append(rec)
         self.stats["traces"] += traced
         self.stats["dedup_hits"] += hits

@@ -29,17 +29,28 @@ per-device bytes, the fixed bytes are the param/grad/optimizer *shards*
 (ZeRO-1 aware), and the scheduler plans against
 ``mesh_budget.hbm_per_device_bytes``.  Plan-cache keys embed the mesh
 signature so plans never leak across mesh shapes.
+
+Hybrid remat+offload mode (``offload=True``): plans become typed action
+tuples (``repro.actions.Action``) and every unit may also be OFFLOADed
+to pinned host memory — priced at the ``pcie_gbps`` link with
+``offload_overlap`` of the traffic hidden under compute.  Two extra
+estimators (same PolyEstimator machinery) track the per-unit boundary
+and offloadable byte vectors the hybrid scheduler needs.  All planners
+return ``Plan.as_actions()`` now; a plan with no OFFLOAD unit is
+value-identical to the old bool mask (``KEEP == 0 == False``,
+``REMAT == 1 == True``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cache import LRUCache
 from repro.core.collector import ShuttlingCollector, input_size_of, _tree_bytes
 from repro.core.estimator import PolyEstimator
 from repro.core.scheduler import Plan, greedy_plan
@@ -78,8 +89,15 @@ class PlannerBase:
     mesh_budget: Optional[MeshBudget] = None
     fixed_bytes: Optional[float] = None
     shard_divisor: int = 1    # legacy scalar activation ways (global mode)
+    # hybrid remat+offload knobs (set via _init_hybrid; off by default)
+    offload: bool = False
+    pcie_gbps: float = 16.0
+    offload_overlap: float = 0.5
 
-    def plan(self, params, batch) -> Tuple[Tuple[bool, ...], PlanInfo]:
+    def plan(self, params, batch) -> Tuple[tuple, PlanInfo]:
+        """Returns ``(Plan.as_actions(), PlanInfo)`` — a typed action
+        tuple; bool-mask consumers keep working because KEEP/REMAT are
+        value-identical to False/True."""
         raise NotImplementedError
 
     # -- shared mesh-vs-global accounting (one implementation for the
@@ -100,6 +118,69 @@ class PlannerBase:
         return (res.device_activation_vector()
                 if self.mesh_budget is not None
                 else res.activation_vector())
+
+    def collected_output_vector(self, res) -> np.ndarray:
+        """Boundary-tensor bytes per unit, in the same (per-device or
+        global) frame as ``collected_vector``."""
+        return (res.device_output_vector()
+                if self.mesh_budget is not None
+                else res.output_vector())
+
+    def collected_offload_vector(self, res) -> np.ndarray:
+        """Offloadable residual bytes per unit, same frame as above."""
+        return (res.device_offloadable_vector()
+                if self.mesh_budget is not None
+                else res.offloadable_vector())
+
+    def planning_flops(self, flops):
+        """Recompute-cost vector in the SAME frame as the byte vectors:
+        per-device under a mesh budget (SPMD divides every unit's
+        recompute across the chips), global otherwise.  Remat-only
+        selection is scale-invariant so the frame never mattered before,
+        but the hybrid path compares recompute seconds against
+        per-device PCIe transfer seconds — mixed frames would inflate
+        remat cost by n_devices and over-offload."""
+        if flops is None or self.mesh_budget is None:
+            return flops
+        return np.asarray(flops, dtype=np.float64) / self.mesh_budget.n_devices
+
+    # -- shared hybrid remat+offload state (Mimose + Sublinear) ----------
+    def _init_hybrid(self, *, offload: bool, pcie_gbps: float,
+                     offload_overlap: float, cost_aware: bool,
+                     degree: int, min_samples: int) -> None:
+        """One implementation of the offload knobs + the two extra
+        per-unit fits (boundary and offloadable bytes) the hybrid
+        scheduler needs, so the planners cannot drift apart."""
+        if offload and not cost_aware:
+            raise ValueError("offload=True needs cost_aware=True: the "
+                             "hybrid selection compares remat FLOPs "
+                             "against transfer time")
+        self.offload = offload
+        self.pcie_gbps = pcie_gbps
+        self.offload_overlap = offload_overlap
+        self.est_output = PolyEstimator(degree, min_samples=min_samples)
+        self.est_offload = PolyEstimator(degree, min_samples=min_samples)
+
+    def _feed_hybrid_estimators(self, s: int, res) -> None:
+        self.est_output.add_sample(s, self.collected_output_vector(res))
+        self.est_offload.add_sample(s, self.collected_offload_vector(res))
+
+    def _hybrid_kwargs(self, size: int, res=None) -> dict:
+        """The extra ``greedy_plan`` arguments for hybrid selection: the
+        boundary/offloadable byte vectors (exact from a collection when
+        ``res`` is given, predicted otherwise) in the planning frame,
+        plus the link pricing.  Empty when offload is disabled."""
+        if not self.offload:
+            return {}
+        div = self.activation_divisor_scalar()
+        out_v = (self.collected_output_vector(res) if res is not None
+                 else self.est_output.predict(size))
+        off_v = (self.collected_offload_vector(res) if res is not None
+                 else self.est_offload.predict(size))
+        return dict(output_bytes=out_v / div,
+                    offload_bytes=off_v / div,
+                    pcie_bytes_per_s=self.pcie_gbps * 1e9,
+                    offload_overlap=self.offload_overlap)
 
     def resolve_fixed_bytes(self, params) -> float:
         """Resident (input-independent) bytes, resolved lazily from the
@@ -150,7 +231,11 @@ class NonePlanner(PlannerBase):
     def plan(self, params, batch):
         n = self.lm.num_plan_units()
         p = Plan([False] * n, 0.0, 0.0, 0.0)
-        return p.as_tuple(), PlanInfo(input_size_of(batch), 0, True, False, p)
+        s = input_size_of(batch)
+        # report the real bucket id (not a hard-coded 0) so
+        # launch/report.engine_report groups baseline runs by bucket
+        return p.as_actions(), PlanInfo(s, self.bucket_key(batch), True,
+                                        False, p)
 
 
 class MimosePlanner(PlannerBase):
@@ -165,6 +250,10 @@ class MimosePlanner(PlannerBase):
                  warmup_samples: int = 4,
                  bucket_tol: float = 0.10,
                  cost_aware: bool = True,
+                 offload: bool = False,
+                 pcie_gbps: float = 16.0,
+                 offload_overlap: float = 0.5,
+                 max_plans: int = 256,
                  audit_every: int = 0,
                  audit_tol: float = 0.02):
         self.lm = lm
@@ -178,6 +267,13 @@ class MimosePlanner(PlannerBase):
         # cost-aware selection (bytes freed per recompute-FLOP, floored
         # by the byte-only oracle); False = the paper's Algorithm 1
         self.cost_aware = cost_aware
+        # hybrid remat+offload: let the scheduler also stream a unit's
+        # residuals to pinned host memory, priced at the PCIe link (the
+        # shared base helper also builds the two extra per-unit fits)
+        self._init_hybrid(offload=offload, pcie_gbps=pcie_gbps,
+                          offload_overlap=offload_overlap,
+                          cost_aware=cost_aware, degree=degree,
+                          min_samples=warmup_samples)
         # adaptive-estimator extension (the paper's §4.3 future work):
         # every ``audit_every``-th unseen size, re-collect abstractly and
         # re-fit if the prediction drifted beyond ``audit_tol``.
@@ -185,11 +281,14 @@ class MimosePlanner(PlannerBase):
         self.audit_tol = audit_tol
         self.collector = ShuttlingCollector(lm, mesh_budget=mesh_budget)
         self.estimator = PolyEstimator(degree, min_samples=warmup_samples)
-        self.cache: Dict[tuple, Plan] = {}
+        # bounded: a long-tailed bucket distribution must not grow the
+        # plan cache without limit (the jit-step cache is bounded too)
+        self.cache = LRUCache(max_plans)
         # stats (paper Table 2)
         self.stats = {"cache_hits": 0, "cache_misses": 0, "collections": 0,
                       "collect_time_s": 0.0, "estimate_time_s": 0.0,
-                      "schedule_time_s": 0.0, "audits": 0, "refits": 0}
+                      "schedule_time_s": 0.0, "audits": 0, "refits": 0,
+                      "evictions": 0}
 
     # ------------------------------------------------------------------
     def _quantize(self, s: int) -> int:
@@ -198,6 +297,12 @@ class MimosePlanner(PlannerBase):
         # align only because both delegate to the same bucket_length
         return bucket_length(s, self.quantum)
 
+    def _feed_estimators(self, s: int, res) -> None:
+        """One collection feeds all three per-unit fits (activation,
+        boundary, offloadable) so they become ready together."""
+        self.estimator.add_sample(s, self.collected_vector(res))
+        self._feed_hybrid_estimators(s, res)
+
     def plan(self, params, batch):
         s = input_size_of(batch)
         qs = self._quantize(s)
@@ -205,18 +310,19 @@ class MimosePlanner(PlannerBase):
         if key in self.cache:
             self.stats["cache_hits"] += 1
             p = self.cache[key]
-            return p.as_tuple(), PlanInfo(s, qs, True, False, p)
+            return p.as_actions(), PlanInfo(s, qs, True, False, p)
         self.stats["cache_misses"] += 1
 
         collected = False
         flops = None
+        res = None
         t_est = t_col = 0.0
         if not self.estimator.ready:
             # sheltered execution: collect this size online (the
             # collection carries the recompute-cost vector for this
             # geometry, so the scheduler reads it straight off)
             res = self.collector.collect(params, batch)
-            self.estimator.add_sample(s, self.collected_vector(res))
+            self._feed_estimators(s, res)
             est = self.collected_vector(res)
             if self.cost_aware:
                 flops = res.flops_vector()
@@ -233,13 +339,16 @@ class MimosePlanner(PlannerBase):
                     and self.stats["cache_misses"] % self.audit_every == 0):
                 # drift audit: exact abstract re-collection for this size
                 self.stats["audits"] += 1
-                res = self.collector.collect(params, batch)
-                truth = self.collected_vector(res)
+                audit_res = self.collector.collect(params, batch)
+                truth = self.collected_vector(audit_res)
                 err = abs(truth.sum() - est.sum()) / max(truth.sum(), 1.0)
                 if err > self.audit_tol:
-                    self.estimator.add_sample(s, truth)
+                    self._feed_estimators(s, audit_res)
                     self.estimator.fit()
+                    self.est_output.fit()
+                    self.est_offload.fit()
                     est = truth
+                    res = audit_res          # exact vectors for this plan
                     self.stats["refits"] += 1
                     self.cache.clear()      # stale plans out
 
@@ -249,13 +358,17 @@ class MimosePlanner(PlannerBase):
         # are rematerialised before FLOP-heavy ones freeing equal bytes
         if self.cost_aware and flops is None:
             flops = plan_unit_flops(self.lm, batch)
-        plan = greedy_plan(est / self.activation_divisor_scalar(),
+        div = self.activation_divisor_scalar()
+        plan = greedy_plan(est / div,
                            self.budget_bytes,
                            self.resolve_fixed_bytes(params),
-                           tol=self.bucket_tol, flops=flops)
+                           tol=self.bucket_tol,
+                           flops=self.planning_flops(flops),
+                           **self._hybrid_kwargs(s, res))
         t_sch = time.perf_counter() - t0
         self.stats["schedule_time_s"] += t_sch
 
         self.cache[key] = plan
-        return plan.as_tuple(), PlanInfo(s, qs, False, collected, plan,
-                                         t_est, t_sch, t_col)
+        self.stats["evictions"] = self.cache.evictions
+        return plan.as_actions(), PlanInfo(s, qs, False, collected, plan,
+                                           t_est, t_sch, t_col)

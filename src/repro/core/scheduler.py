@@ -39,18 +39,34 @@ Implementations:
 Byte-only ``greedy_plan`` and the reference return bit-identical plans
 (tie-breaks included); see
 ``tests/test_engine.py::test_fast_scheduler_matches_reference``.
+
+Hybrid remat+offload selection: with ``offload_bytes`` (plus
+``output_bytes`` and ``flops``) the plan grows a second reclamation
+action — stream a unit's residuals to pinned host memory instead of
+recomputing them.  Each (unit, action) candidate is scored by bytes
+freed per cost-second, where remat cost = forward FLOPs / PEAK_FLOPS
+and offload cost = the non-overlapped share of 2 x bytes / PCIe
+bandwidth (``launch/roofline.py`` transfer model).  Candidate plans are
+validated with the liveness simulator and the winner is the feasible
+plan with the lowest simulated step overhead — the remat-only plan is
+always among the candidates, so the hybrid result is *never worse at
+equal budget* (and can fit budgets remat-only cannot: REMAT must keep
+every unit's boundary tensor on device, OFFLOAD does not).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.actions import Action, as_actions
+from repro.launch.roofline import PCIE_BW, PEAK_FLOPS
 
 
 @dataclasses.dataclass
 class Plan:
-    remat: List[bool]                 # per plan-unit, timestamp order
+    remat: List[bool]                 # bool view: True == REMAT (legacy)
     excess_bytes: float               # predicted overshoot before planning
     covered_bytes: float              # bytes the plan frees
     est_activation_bytes: float       # predicted total activation bytes
@@ -58,12 +74,32 @@ class Plan:
     # total forward FLOPs the plan re-executes in the backward pass
     # (0.0 when planned without a cost model)
     recompute_flops: float = 0.0
+    # typed per-unit plan; derived from ``remat`` when not given, and
+    # the source of truth when it is (``remat`` then becomes the bool
+    # view with OFFLOAD units reading False — they are not recomputed)
+    actions: Optional[Tuple[Action, ...]] = None
+    # one-way bytes the plan streams to host (0.0 without OFFLOAD units)
+    offload_bytes: float = 0.0
+    n_offload: int = 0
 
     def __post_init__(self):
-        self.n_remat = int(sum(self.remat))
+        if self.actions is None:
+            self.actions = tuple(Action.REMAT if r else Action.KEEP
+                                 for r in self.remat)
+        else:
+            self.actions = as_actions(self.actions)
+            self.remat = [a is Action.REMAT for a in self.actions]
+        self.n_remat = sum(1 for a in self.actions if a is Action.REMAT)
+        self.n_offload = sum(1 for a in self.actions if a is Action.OFFLOAD)
 
     def as_tuple(self) -> Tuple[bool, ...]:
+        """Legacy bool view (True == REMAT).  Equals the old boolean
+        semantics exactly when the plan has no OFFLOAD unit."""
         return tuple(self.remat)
+
+    def as_actions(self) -> Tuple[Action, ...]:
+        """The typed plan — what planners hand to ``lm.loss`` now."""
+        return self.actions
 
     def with_flops(self, flops) -> "Plan":
         """Fill ``recompute_flops`` from a per-unit FLOPs vector."""
@@ -108,8 +144,12 @@ def build_buckets(est_mem: Sequence[float], tol: float = 0.10
 def greedy_plan(est_mem: Sequence[float], budget_bytes: float,
                 fixed_bytes: float = 0.0, tol: float = 0.10, *,
                 flops: Sequence[float] | None = None,
-                byte_only: bool = False) -> Plan:
-    """Plan which units to rematerialise under ``budget_bytes``.
+                byte_only: bool = False,
+                output_bytes: Sequence[float] | None = None,
+                offload_bytes: Sequence[float] | None = None,
+                pcie_bytes_per_s: float = PCIE_BW,
+                offload_overlap: float = 0.5) -> Plan:
+    """Plan which units to rematerialise/offload under ``budget_bytes``.
 
     est_mem[i] = predicted activation bytes of unit i.  With ``flops``
     (per-unit forward FLOPs, e.g. ``roofline.plan_unit_flops``) the
@@ -119,12 +159,147 @@ def greedy_plan(est_mem: Sequence[float], budget_bytes: float,
     byte-only Algorithm 1 unchanged (the oracle the benchmark compares
     against); when ``flops`` is also given the oracle plan's
     ``recompute_flops`` is still filled in for comparison.
+
+    With ``offload_bytes`` (per-unit offloadable residual bytes, e.g.
+    ``CollectionResult.offloadable_vector``) and ``output_bytes``
+    (per-unit boundary-tensor bytes) the plan additionally considers
+    OFFLOAD-to-host per unit, priced at the PCIe link
+    (``pcie_bytes_per_s``, with ``offload_overlap`` of the traffic
+    hidden under compute).  The returned plan is the candidate with the
+    lowest simulated step overhead among those that fit the budget —
+    the remat-only plan always competes, so hybrid is never worse at
+    equal budget.  Requires ``flops`` (and is skipped by
+    ``byte_only=True``).
     """
+    if (offload_bytes is not None and flops is not None
+            and not byte_only):
+        return _hybrid_plan(est_mem, output_bytes, offload_bytes, flops,
+                            budget_bytes, fixed_bytes, tol,
+                            pcie_bytes_per_s, offload_overlap)
     if flops is not None and not byte_only:
         return _cost_aware_plan(est_mem, flops, budget_bytes, fixed_bytes,
                                 tol)
     plan = _byte_greedy_plan(est_mem, budget_bytes, fixed_bytes, tol)
     return plan.with_flops(flops) if flops is not None else plan
+
+
+def _hybrid_plan(est_mem, output_bytes, offload_bytes, flops,
+                 budget_bytes: float, fixed_bytes: float, tol: float,
+                 pcie: float, overlap: float) -> Plan:
+    """Action-aware density greedy: score every (unit, action) candidate
+    by bytes freed per cost-second, validate the resulting plans with
+    the liveness simulator, and return the feasible plan with the
+    lowest simulated step overhead (min peak when nothing fits).
+
+    Freed-byte accounting follows the simulator's liveness model: REMAT
+    frees ``est - out`` (the boundary tensor must stay on device as the
+    recompute checkpoint), OFFLOAD frees the offloadable bytes outright
+    (the residue ``est - off`` stays).  That asymmetry is what lets a
+    hybrid plan fit budgets below the all-remat floor.
+    """
+    from repro.core.simulator import simulate
+
+    est = np.asarray(est_mem, dtype=np.float64)
+    n = est.size
+    out = (np.asarray(output_bytes, dtype=np.float64)
+           if output_bytes is not None else np.zeros(n))
+    fl = np.asarray(flops, dtype=np.float64)
+    off = np.clip(np.asarray(offload_bytes, dtype=np.float64), 0.0, est)
+    assert est.shape == fl.shape == out.shape == off.shape
+    total = float(est.sum())
+    excess = total + float(fixed_bytes) - float(budget_bytes)
+    if n == 0:
+        return Plan([], excess, 0.0, total)
+
+    t_re = fl / PEAK_FLOPS
+    t_off = 2.0 * off / float(pcie) * max(0.0, min(1.0, 1.0 - overlap))
+    freed_re = np.maximum(est - out, 0.0)
+    freed_off = off
+
+    def candidates(allow_offload: bool) -> List[tuple]:
+        """(density, unit, action-code) triples, best density first;
+        ties break to earlier timestamps (the paper's earlier-is-cheaper
+        preference), then REMAT before OFFLOAD."""
+        cand = []
+        for i in range(n):
+            if freed_re[i] > 0:
+                cand.append((freed_re[i] / max(t_re[i], 1e-12), i, 1))
+            if allow_offload and freed_off[i] > 0:
+                cand.append((freed_off[i] / max(t_off[i], 1e-12), i, 2))
+        cand.sort(key=lambda c: (-c[0], c[1], c[2]))
+        return cand
+
+    def density_greedy(allow_offload: bool) -> Plan:
+        actions = [Action.KEEP] * n
+        freed_by = [0.0] * n
+        covered = 0.0
+        picks: List[int] = []
+        for _, i, code in candidates(allow_offload):
+            if covered >= excess:
+                break
+            if actions[i] is not Action.KEEP:
+                continue
+            actions[i] = Action(code)
+            freed_by[i] = freed_re[i] if code == 1 else freed_off[i]
+            covered += freed_by[i]
+            picks.append(i)
+        # trim: drop the worst-density picks the coverage does not need
+        for i in reversed(picks):
+            if covered - freed_by[i] >= excess:
+                covered -= freed_by[i]
+                actions[i] = Action.KEEP
+                freed_by[i] = 0.0
+        return finish(actions)
+
+    def finish(actions) -> Plan:
+        arr = np.array([int(a) for a in actions])
+        covered = float(freed_re[arr == 1].sum()
+                        + freed_off[arr == 2].sum())
+        plan = Plan([], excess, covered, total, actions=tuple(actions))
+        plan.recompute_flops = float(fl[arr == 1].sum())
+        plan.offload_bytes = float(off[arr == 2].sum())
+        return plan
+
+    def replay(plan: Plan):
+        return simulate(est, plan.actions, fixed_bytes, out, fl,
+                        offload_bytes=off, pcie_bytes_per_s=pcie,
+                        overlap=overlap)
+
+    def escalate(plan: Plan) -> Plan:
+        """Repair against the liveness replay: the byte bookkeeping
+        ignores transient working sets, and nothing below the all-remat
+        floor is reachable without OFFLOAD evicting the boundary
+        checkpoints.  Walk the candidate list in density order (cheap
+        remats first) and upgrade each unit's action (KEEP -> REMAT or
+        OFFLOAD, REMAT -> OFFLOAD) until the replayed peak fits."""
+        actions = list(plan.actions)
+        for _, i, code in candidates(True):
+            if replay(finish(actions)).peak_bytes <= budget_bytes:
+                break
+            if code == 1 and actions[i] is Action.KEEP:
+                actions[i] = Action.REMAT
+            elif code == 2 and actions[i] is not Action.OFFLOAD:
+                actions[i] = Action.OFFLOAD
+        return finish(actions)
+
+    # candidates: hybrid density greedy (plus its replay-repaired
+    # escalation), remat-only under the same liveness accounting, and
+    # the legacy cost-aware remat plan (itself floored by the byte-only
+    # oracle).  The winner is the feasible candidate with the lowest
+    # simulated step overhead — remat-only always competes, so hybrid
+    # is never worse at equal budget; ties prefer fewer offloads.
+    hyb = density_greedy(True)
+    cands = [hyb, escalate(hyb), density_greedy(False),
+             _cost_aware_plan(est, fl, budget_bytes, fixed_bytes, tol)]
+    sims = [replay(p) for p in cands]
+    fits = [s.peak_bytes <= budget_bytes + 1e-6 for s in sims]
+    if any(fits):
+        best = min((i for i in range(len(cands)) if fits[i]),
+                   key=lambda i: (sims[i].step_overhead_s,
+                                  cands[i].n_offload))
+    else:
+        best = min(range(len(cands)), key=lambda i: sims[i].peak_bytes)
+    return cands[best]
 
 
 def _cost_aware_plan(est_mem: Sequence[float], flops: Sequence[float],
@@ -244,7 +419,11 @@ def greedy_plan_sharded(device_est_mem: Sequence[float], mesh_budget,
                         fixed_device_bytes: float = 0.0,
                         tol: float = 0.10, *,
                         flops: Sequence[float] | None = None,
-                        byte_only: bool = False) -> Plan:
+                        byte_only: bool = False,
+                        output_bytes: Sequence[float] | None = None,
+                        offload_bytes: Sequence[float] | None = None,
+                        pcie_bytes_per_s: float = PCIE_BW,
+                        offload_overlap: float = 0.5) -> Plan:
     """``greedy_plan`` against a *per-device* budget.
 
     ``device_est_mem[i]`` must be the bytes unit i lands on ONE device
@@ -258,10 +437,15 @@ def greedy_plan_sharded(device_est_mem: Sequence[float], mesh_budget,
     ``flops`` may stay the *global* per-unit FLOPs vector: SPMD divides
     every unit's recompute by the same device count, so relative
     densities — and therefore the selection — are unchanged.
+    ``output_bytes`` / ``offload_bytes`` must be per-device vectors
+    (each chip streams its own shard over its own host link).
     """
     return greedy_plan(device_est_mem, mesh_budget.hbm_per_device_bytes,
                        fixed_device_bytes, tol=tol, flops=flops,
-                       byte_only=byte_only)
+                       byte_only=byte_only, output_bytes=output_bytes,
+                       offload_bytes=offload_bytes,
+                       pcie_bytes_per_s=pcie_bytes_per_s,
+                       offload_overlap=offload_overlap)
 
 
 def greedy_plan_reference(est_mem: Sequence[float], budget_bytes: float,

@@ -1,17 +1,35 @@
 """Forward/backward memory-liveness timeline simulator.
 
-Given per-unit activation bytes and a remat plan, replay the training
-step's liveness and report the peak footprint plus recompute cost.  This
+Given per-unit activation bytes and a plan, replay the training step's
+liveness and report the peak footprint plus the plan's overheads.  This
 is how we (a) validate scheduler plans against the budget without
 hardware, (b) reproduce the paper's Fig. 11 (peak memory vs *which*
 encoder is checkpointed), and (c) drive the DTR-style baseline, whose
 evict-on-OOM behaviour needs a memory timeline to trigger on.
 
-The model: during forward, saved (non-remat) activations accumulate; a
-unit's internal working set is transiently live while it executes whether
-or not it is rematted.  During backward (reverse order), a rematted
-unit's residuals are recomputed right before its gradient and freed right
-after; a saved unit's residuals are freed after its gradient.
+Plans may be the legacy boolean remat mask or a typed ``Action`` tuple
+(``repro.actions``).  The model per action:
+
+* KEEP    — residuals accumulate on device through the forward pass and
+  are freed after the unit's gradient;
+* REMAT   — only the unit's boundary (output) tensor is kept; residuals
+  are recomputed right before the gradient (``recompute_flops`` /
+  ``recompute_time_s`` at the PEAK_FLOPS roofline) and freed after;
+* OFFLOAD — the offloadable residual bytes are streamed to pinned host
+  memory during the forward pass (only the non-offloadable residue
+  stays on device) and fetched back before the gradient.  The traffic
+  is charged at the PCIe link (``offload_time_s`` = 2 x bytes / BW);
+  ``overlap`` models the fraction hidden under compute, leaving
+  ``exposed_transfer_s`` on the critical path.
+
+``SimResult.step_overhead_s`` — recompute time + non-overlapped
+transfer — is the scalar the hybrid scheduler's floor guarantees never
+exceeds the remat-only plan's at equal budget.
+
+A unit's internal working set is transiently live while it executes
+whether or not it is rematted/offloaded; during backward (reverse
+order) the gradient working set of unit i is charged at ~ its
+activation bytes.
 """
 from __future__ import annotations
 
@@ -20,7 +38,8 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from repro.launch.roofline import PEAK_FLOPS
+from repro.actions import Action, as_actions
+from repro.launch.roofline import PCIE_BW, PEAK_FLOPS
 
 
 @dataclasses.dataclass
@@ -31,6 +50,13 @@ class SimResult:
     timeline: List[Tuple[str, float]]  # (event, live_bytes)
     # forward FLOPs re-executed by the plan (0.0 without a cost model)
     recompute_flops: float = 0.0
+    # host-offload traffic: one-way bytes moved, units offloaded, and
+    # the round-trip transfer time at the PCIe link
+    offload_bytes: float = 0.0
+    offload_units: int = 0
+    offload_time_s: float = 0.0
+    # transfer time NOT hidden under compute ((1 - overlap) x round trip)
+    exposed_transfer_s: float = 0.0
 
     @property
     def recompute_time_s(self) -> float:
@@ -38,33 +64,57 @@ class SimResult:
         the cost-aware scheduler minimises at equal budget."""
         return self.recompute_flops / PEAK_FLOPS
 
+    @property
+    def step_overhead_s(self) -> float:
+        """Total plan overhead on the step's critical path: recompute
+        plus the non-overlapped share of the offload traffic.  The
+        hybrid scheduler's floor property is stated on this number."""
+        return self.recompute_time_s + self.exposed_transfer_s
+
     def fits(self, budget: float) -> bool:
         return self.peak_bytes <= budget
 
 
-def simulate(act_bytes: Sequence[float], remat: Sequence[bool],
+def simulate(act_bytes: Sequence[float], remat: Sequence,
              fixed_bytes: float = 0.0,
              output_bytes: Sequence[float] | None = None,
-             flops: Sequence[float] | None = None) -> SimResult:
+             flops: Sequence[float] | None = None, *,
+             offload_bytes: Sequence[float] | None = None,
+             pcie_bytes_per_s: float = PCIE_BW,
+             overlap: float = 0.5) -> SimResult:
+    """Replay one training step's liveness under ``remat`` (a bool mask
+    or an ``Action`` plan).  ``offload_bytes[i]`` is the unit's
+    offloadable residual bytes (defaults to all of ``act_bytes[i]``);
+    only consulted for units the plan marks OFFLOAD."""
+    actions = as_actions(remat)
     n = len(act_bytes)
     act = [float(a) for a in act_bytes]
     out = ([float(o) for o in output_bytes] if output_bytes is not None
            else [0.0] * n)
     fl = ([float(f) for f in flops] if flops is not None else [0.0] * n)
+    off = ([min(float(o), act[i]) for i, o in enumerate(offload_bytes)]
+           if offload_bytes is not None else list(act))
     live = fixed_bytes
     peak = live
     timeline: List[Tuple[str, float]] = []
 
     # ---- forward ----------------------------------------------------------
     saved = 0.0
+    moved = 0.0                          # one-way bytes offloaded to host
+    n_off = 0
     for i in range(n):
         # transient working set while unit i runs
         transient = live + saved + act[i] + out[i]
         peak = max(peak, transient)
-        if not remat[i]:
-            saved += act[i]
-        else:
+        a = actions[i]
+        if a is Action.REMAT:
             saved += out[i]               # only the boundary tensor is kept
+        elif a is Action.OFFLOAD:
+            saved += act[i] - off[i]      # non-offloadable residue stays
+            moved += off[i]
+            n_off += 1
+        else:
+            saved += act[i]
         timeline.append((f"fwd{i}", live + saved))
     peak = max(peak, live + saved)
 
@@ -73,17 +123,24 @@ def simulate(act_bytes: Sequence[float], remat: Sequence[bool],
     recompute_fl = 0.0
     n_re = 0
     for i in reversed(range(n)):
-        if remat[i]:
+        a = actions[i]
+        if a is Action.REMAT:
             # replay forward of unit i: its residuals come back to life
             saved += act[i]
             recompute += act[i]
             recompute_fl += fl[i]
             n_re += 1
+        elif a is Action.OFFLOAD:
+            saved += off[i]               # fetched back from the host
         peak = max(peak, live + saved + act[i])   # grad working set ~ act_i
         saved -= act[i]
         timeline.append((f"bwd{i}", live + saved))
 
-    return SimResult(peak, recompute, n_re, timeline, recompute_fl)
+    t_xfer = 2.0 * moved / float(pcie_bytes_per_s)
+    exposed = t_xfer * max(0.0, min(1.0, 1.0 - overlap))
+    return SimResult(peak, recompute, n_re, timeline, recompute_fl,
+                     offload_bytes=moved, offload_units=n_off,
+                     offload_time_s=t_xfer, exposed_transfer_s=exposed)
 
 
 @dataclasses.dataclass
@@ -113,17 +170,29 @@ class ShardedSimResult:
         shard of each rematted unit concurrently)."""
         return self.per_device.recompute_time_s
 
+    @property
+    def offload_time_s(self) -> float:
+        """Per-device round-trip offload traffic (each chip drives its
+        own host link under SPMD)."""
+        return self.per_device.offload_time_s
+
+    @property
+    def step_overhead_s(self) -> float:
+        return self.per_device.step_overhead_s
+
     def fits(self, budget_per_device: float) -> bool:
         return self.per_device.peak_bytes <= budget_per_device
 
 
 def simulate_sharded(device_act_bytes: Sequence[float],
-                     remat: Sequence[bool],
+                     remat: Sequence,
                      fixed_device_bytes: float = 0.0,
                      n_devices: int = 1,
                      output_bytes: Sequence[float] | None = None,
-                     flops: Sequence[float] | None = None
-                     ) -> ShardedSimResult:
+                     flops: Sequence[float] | None = None, *,
+                     offload_bytes: Sequence[float] | None = None,
+                     pcie_bytes_per_s: float = PCIE_BW,
+                     overlap: float = 0.5) -> ShardedSimResult:
     """Replay the training step's per-device memory timeline.
 
     ``device_act_bytes`` is the per-unit byte vector landing on one
@@ -133,10 +202,12 @@ def simulate_sharded(device_act_bytes: Sequence[float],
     sharding-aware plan against ``MeshBudget.hbm_per_device_bytes``
     without hardware — the multi-device analogue of ``simulate``.
     ``flops`` should be the *per-device* per-unit recompute FLOPs
-    (global FLOPs / n_devices under SPMD).
+    (global FLOPs / n_devices under SPMD); ``offload_bytes`` the
+    per-device offloadable residual bytes.
     """
     base = simulate(device_act_bytes, remat, fixed_device_bytes,
-                    output_bytes, flops)
+                    output_bytes, flops, offload_bytes=offload_bytes,
+                    pcie_bytes_per_s=pcie_bytes_per_s, overlap=overlap)
     return ShardedSimResult(base, int(n_devices))
 
 

@@ -37,7 +37,8 @@ ASSIGNED = [a for a in ARCH_IDS if a != "bert_base_paper"]
 def run_one(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
             zero1: bool, seq_parallel: bool, logits_f32: bool,
             unroll: bool = False, verbose: bool = True,
-            mesh_shape=None) -> dict:
+            mesh_shape=None, offload: bool = False,
+            pcie_gbps: float = 16.0) -> dict:
     import dataclasses
     cfg = get_config(arch)
     if unroll:
@@ -56,7 +57,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
         chips = 512 if multi_pod else 256
     rec = {"arch": canonical(arch), "shape": shape_name, "mesh": mesh_name,
            "remat": remat, "zero1": zero1, "seq_parallel": seq_parallel,
-           "logits_f32": logits_f32, "unroll": unroll}
+           "logits_f32": logits_f32, "unroll": unroll, "offload": offload}
 
     ok, why = shape_applicable(cfg, shape)
     if not ok:
@@ -67,7 +68,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
         mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
         t0 = time.time()
         setup = build_setup(cfg, shape, mesh, remat=remat, zero1=zero1,
-                            seq_parallel=seq_parallel, logits_f32=logits_f32)
+                            seq_parallel=seq_parallel, logits_f32=logits_f32,
+                            offload=offload, pcie_gbps=pcie_gbps)
         lowered = lower_setup(setup, mesh)
         t_lower = time.time() - t0
         t0 = time.time()
@@ -83,8 +85,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
                    coll_breakdown={k: round(v) for k, v in
                                    roof.coll_breakdown.items()},
                    model_flops=roof.model_flops,
-                   remat_mask=("".join("1" if m else "0"
-                                       for m in setup.remat_mask)
+                   # one digit per unit: 0=KEEP 1=REMAT 2=OFFLOAD-to-host
+                   remat_mask=("".join(str(int(m)) for m in setup.remat_mask)
                                if setup.remat_mask else None),
                    **roof.row())
     except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
@@ -108,6 +110,13 @@ def main(argv=None):
                          "fake devices)")
     ap.add_argument("--remat", default="mimose",
                     choices=["none", "all", "mimose"])
+    ap.add_argument("--offload", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="let the mimose plan OFFLOAD unit residuals to "
+                         "pinned host memory (typed action plans)")
+    ap.add_argument("--pcie-gbps", type=float, default=16.0,
+                    help="host<->device link bandwidth the planner "
+                         "prices OFFLOAD actions at")
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--logits-bf16", action="store_true")
@@ -153,7 +162,8 @@ def main(argv=None):
             rec = run_one(arch, shape, multi_pod=mp, remat=args.remat,
                           zero1=args.zero1, seq_parallel=args.seq_parallel,
                           logits_f32=not args.logits_bf16,
-                          unroll=args.unroll, mesh_shape=mesh_shape)
+                          unroll=args.unroll, mesh_shape=mesh_shape,
+                          offload=args.offload, pcie_gbps=args.pcie_gbps)
             line = json.dumps(rec)
             print(line, flush=True)
             if out:

@@ -25,6 +25,23 @@ import numpy as np
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
+# effective host<->device link for activation offload (PCIe 4.0 x16 is
+# ~32 GB/s raw; 16 GB/s is the sustained-DMA default the --pcie-gbps
+# knob overrides).  The hybrid scheduler prices OFFLOAD actions with it.
+PCIE_BW = 16e9               # bytes/s host<->device
+
+
+def offload_transfer_s(bytes_moved: float,
+                       pcie_bytes_per_s: float = PCIE_BW) -> float:
+    """Round-trip host-offload time for ``bytes_moved`` residual bytes.
+
+    An offloaded unit's residuals cross the link twice — out during the
+    forward pass, back in before the unit's backward — so the charged
+    time is ``2 x bytes / bandwidth``.  This is the OFFLOAD counterpart
+    of the REMAT cost ``flops / PEAK_FLOPS``: the two numbers the hybrid
+    scheduler compares when choosing how to free a unit's bytes.
+    """
+    return 2.0 * float(bytes_moved) / float(pcie_bytes_per_s)
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

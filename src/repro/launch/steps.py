@@ -75,7 +75,11 @@ def plan_remat_mask(lm: LM, params_struct, batch_struct, *,
                     seq_parallel: bool = False,
                     attn_replicated: bool = False,
                     expert_2d: bool = False,
-                    cost_aware: bool = True) -> Tuple[bool, ...]:
+                    cost_aware: bool = True,
+                    offload: bool = False,
+                    pcie_gbps: float = 16.0) -> tuple:
+    """Returns the per-unit action plan (``repro.actions.Action`` tuple;
+    bool-compatible: KEEP/REMAT are value-identical to False/True)."""
     n = lm.num_plan_units()
     if mode == "none":
         return tuple([False] * n)
@@ -86,7 +90,9 @@ def plan_remat_mask(lm: LM, params_struct, batch_struct, *,
     # PartitionSpec divisors, fixed bytes as the param/opt shards.  The
     # policy flags must match what params_shardings is called with, or
     # the fixed bytes diverge from the real per-chip residency.
-    # ``cost_aware=False`` restores the paper's byte-only Algorithm 1.
+    # ``cost_aware=False`` restores the paper's byte-only Algorithm 1;
+    # ``offload=True`` lets the plan stream residuals to pinned host
+    # memory over a ``pcie_gbps`` link when that beats recompute.
     from repro.core.planner import MimosePlanner
     from repro.sharding.budget import MeshBudget
     budget = MeshBudget.from_mesh(mesh, hbm_per_chip, zero1=zero1,
@@ -95,7 +101,8 @@ def plan_remat_mask(lm: LM, params_struct, batch_struct, *,
                                   expert_2d=expert_2d)
     planner = MimosePlanner(lm, mesh_budget=budget,
                             warmup_samples=1, quantum=1,
-                            cost_aware=cost_aware)
+                            cost_aware=cost_aware,
+                            offload=offload, pcie_gbps=pcie_gbps)
     mask, _ = planner.plan(params_struct, batch_struct)
     return mask
 
@@ -122,9 +129,16 @@ def build_setup(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
                 prefill_last_only: bool = False,
                 remat_policy: str = "",
                 expert_2d: bool = False,
-                attn_impl: str = "xla") -> Setup:
+                attn_impl: str = "xla",
+                offload: bool = False,
+                pcie_gbps: float = 16.0) -> Setup:
     lm = build_model(arch_cfg, attn_impl=attn_impl)
     lm.logits_f32 = logits_f32
+    if offload and mesh.devices.size > 1:
+        # current XLA cannot shard host-offload custom-calls under SPMD:
+        # plan with OFFLOAD actions (the budget math is the point of the
+        # dry-run) but execute them as plain remat on multi-device meshes
+        lm.offload_exec = False
     if prefill_last_only and shape.kind == "prefill":
         lm.last_logits_only = True
     if seq_parallel:
@@ -150,7 +164,8 @@ def build_setup(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
                                mesh=mesh, zero1=zero1,
                                seq_parallel=seq_parallel,
                                attn_replicated=attn_replicated,
-                               expert_2d=expert_2d)
+                               expert_2d=expert_2d,
+                               offload=offload, pcie_gbps=pcie_gbps)
         policy = (getattr(jax.checkpoint_policies, remat_policy)
                   if remat_policy else None)
 

@@ -53,6 +53,14 @@ def main(argv=None):
     ap.add_argument("--byte-only-remat", action="store_true",
                     help="paper's byte-only Algorithm 1 instead of "
                          "cost-aware (bytes per recompute-FLOP) selection")
+    ap.add_argument("--offload", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="hybrid remat+offload plans: units may stream "
+                         "residuals to pinned host memory when that beats "
+                         "recompute (never worse at equal budget)")
+    ap.add_argument("--pcie-gbps", type=float, default=16.0,
+                    help="host<->device link bandwidth (GB/s) the planner "
+                         "prices OFFLOAD actions at")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -101,15 +109,22 @@ def main(argv=None):
                   "sharded execution)")
     dist = DISTRIBUTIONS[args.dataset]
     max_size = args.batch_size * bucket_length(dist.hi, args.quantum)
+    if args.offload and args.byte_only_remat:
+        ap.error("--offload needs the cost-aware selector "
+                 "(drop --byte-only-remat)")
     planner = {
         "mimose": lambda: MimosePlanner(lm, budget, quantum=args.quantum,
                                         mesh_budget=mesh_budget,
                                         warmup_samples=3,
-                                        cost_aware=not args.byte_only_remat),
+                                        cost_aware=not args.byte_only_remat,
+                                        offload=args.offload,
+                                        pcie_gbps=args.pcie_gbps),
         "sublinear": lambda: SublinearPlanner(lm, budget,
                                               max_input_size=max_size,
                                               mesh_budget=mesh_budget,
-                                              cost_aware=not args.byte_only_remat),
+                                              cost_aware=not args.byte_only_remat,
+                                              offload=args.offload,
+                                              pcie_gbps=args.pcie_gbps),
         "dtr": lambda: DTRSimPlanner(lm, budget, mesh_budget=mesh_budget),
         "none": lambda: NonePlanner(lm),
     }[args.planner]()
@@ -137,7 +152,8 @@ def main(argv=None):
         if i % 10 == 0 or i == args.steps - 1:
             st = trainer.history[-1]
             print(f"step {i:4d} loss {loss:.4f} S={batch['tokens'].shape[1]}"
-                  f" remat={st.remat_units} step_s={st.step_time_s:.3f}")
+                  f" remat={st.remat_units} offload={st.offload_units}"
+                  f" step_s={st.step_time_s:.3f}")
     print(f"done in {time.time() - t0:.1f}s")
     print("summary:", trainer.summary())
     print("\nengine report (where the padding went):")

@@ -24,7 +24,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
 
+from repro.actions import Action, as_actions
 from repro.config import ModelConfig
 from repro.models import layers as L
 from repro.models import mamba2 as M
@@ -32,6 +34,44 @@ from repro.models import moe as MOE
 from repro.models import hymba as HY
 
 Array = jax.Array
+
+# the checkpoint_name tag the OFFLOAD action pins to host memory: the
+# unit's residual-stream input (its recompute checkpoint).  Applying
+# OFFLOAD moves this named tensor to pinned_host instead of keeping it
+# in HBM — the jax-realisable form of activation offload (the planner's
+# cost model prices the residual traffic; see docs/ARCHITECTURE.md
+# "Hybrid remat+offload plans").
+OFFLOAD_RESIDUAL_NAME = "mimose_offload_resid"
+
+
+def host_offload_policy():
+    """``jax.checkpoint`` policy offloading the named residual-stream
+    checkpoint to pinned host memory.  Returns ``None`` (plain
+    save-nothing remat) on jaxlib builds without offload support, so an
+    OFFLOAD plan still executes correctly everywhere."""
+    try:
+        return jax.checkpoint_policies.save_and_offload_only_these_names(
+            names_which_can_be_saved=[],
+            names_which_can_be_offloaded=[OFFLOAD_RESIDUAL_NAME],
+            offload_src="device", offload_dst="pinned_host")
+    except (AttributeError, TypeError):
+        return None
+
+
+def _offload_unit(fn):
+    """Wrap a pure ``fn(params, x, ...)`` unit so its input checkpoint is
+    tagged for host offload, then checkpoint it under the offload
+    policy.  Under an outer jit (the trainer's step) the checkpoint is
+    used as-is; in eager execution it is additionally jit-wrapped,
+    because the host transfer (``TransferToMemoryKind``) is only legal
+    under jit — eager OFFLOAD replays therefore pay a per-call trace,
+    which is fine for the tests/debugging that path serves."""
+    def tagged(p, x, *rest):
+        return fn(p, checkpoint_name(x, OFFLOAD_RESIDUAL_NAME), *rest)
+    ckpt = jax.checkpoint(tagged, policy=host_offload_policy())
+    if jax.core.trace_state_clean():
+        return jax.jit(ckpt)
+    return ckpt
 
 
 # ---------------------------------------------------------------------------
@@ -209,6 +249,12 @@ class LM:
         # prefill: emit logits for the last position only (serving needs
         # nothing else; full-sequence logits dominate prefill memory)
         self.last_logits_only = False
+        # execute OFFLOAD actions as real host offload (jax.checkpoint
+        # offload policy).  False degrades OFFLOAD to plain remat at
+        # execution time while keeping the typed plan — needed under
+        # SPMD lowering, where current XLA cannot shard the host-offload
+        # custom-calls (launch/steps.py flips this for >1-device meshes)
+        self.offload_exec = True
 
     def _constrain(self, x: Array) -> Array:
         if self.act_sharding is not None:
@@ -294,20 +340,30 @@ class LM:
         B, F, _ = frames.shape
         pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
         x = frames
+        enc_actions = (as_actions(remat_enc) if remat_enc is not None
+                       else None)
         for i, bp in enumerate(params["encoder"]["blocks"]):
             def one(p, xx):
                 y, _, _ = block_apply(p, cfg, xx, "enc", positions=pos,
                                       impl=self.attn_impl)
                 return y
-            if remat_enc is not None and remat_enc[i]:
-                one = jax.checkpoint(one)
+            if enc_actions is not None:
+                if enc_actions[i] is Action.REMAT:
+                    one = jax.checkpoint(one)
+                elif enc_actions[i] is Action.OFFLOAD:
+                    one = (_offload_unit(one) if self.offload_exec
+                           else jax.checkpoint(one))
             x = one(bp, x)
         return L.rmsnorm_apply(params["encoder"]["final_norm"], x, cfg.norm_eps)
 
     # -- forward -----------------------------------------------------------
     def forward(self, params, batch, remat_mask=None,
                 remat_policy=None) -> Tuple[Array, Array]:
-        """remat_mask: bool sequence over plan units (blocks or chunks).
+        """remat_mask: per-unit plan over plan units (blocks or chunks) —
+        either the legacy bool sequence (True = rematerialise) or a
+        typed ``repro.actions.Action`` sequence; ``OFFLOAD`` units pin
+        their residual-stream checkpoint to host memory via the
+        ``host_offload_policy`` instead of keeping it in HBM.
 
         When the batch carries ``lengths`` ((B,) true sequence lengths of
         a bucket-padded batch), they are threaded into every block so the
@@ -324,19 +380,19 @@ class LM:
                 seq_lens = seq_lens + cfg.vision_tokens
 
         n_units = self.num_plan_units()
-        if remat_mask is None:
-            remat_mask = [False] * n_units
-        remat_mask = list(remat_mask)
-        assert len(remat_mask) == n_units, (len(remat_mask), n_units)
+        actions = (as_actions(remat_mask) if remat_mask is not None
+                   else (Action.KEEP,) * n_units)
+        assert len(actions) == n_units, (len(actions), n_units)
 
         enc_out = None
         enc_units = self._num_enc_units()
         if cfg.encoder_layers:
-            enc_out = self._encode(params, batch, remat_enc=remat_mask[:enc_units])
-        dec_mask = remat_mask[enc_units:]
+            enc_out = self._encode(params, batch,
+                                   remat_enc=actions[:enc_units])
+        dec_actions = actions[enc_units:]
 
         if cfg.remat_mode == "scan":
-            x, aux = self._forward_scan(params, x, positions, dec_mask,
+            x, aux = self._forward_scan(params, x, positions, dec_actions,
                                         enc_out, mrope_positions,
                                         remat_policy, seq_lens)
         else:
@@ -348,8 +404,11 @@ class LM:
                         enc_out=enc_out, mrope_positions=mrope_positions,
                         impl=self.attn_impl, seq_lens=seq_lens)
                     return y, a
-                if dec_mask[i]:
+                if dec_actions[i] is Action.REMAT:
                     one = jax.checkpoint(one, policy=remat_policy)
+                elif dec_actions[i] is Action.OFFLOAD:
+                    one = (_offload_unit(one) if self.offload_exec
+                           else jax.checkpoint(one, policy=remat_policy))
                 x, a = one(bp, x)
                 x = self._constrain(x)
                 aux = aux + a
@@ -363,11 +422,12 @@ class LM:
             logits = logits.astype(jnp.float32)
         return logits, aux
 
-    def _forward_scan(self, params, x, positions, chunk_mask, enc_out,
+    def _forward_scan(self, params, x, positions, chunk_actions, enc_out,
                       mrope_positions, remat_policy, seq_lens=None):
         cfg = self.cfg
         bounds = self._chunk_bounds()
         aux = jnp.zeros((), jnp.float32)
+        chunk_actions = as_actions(chunk_actions)
 
         def make_body(flag):
             # ``flag`` is a STATIC python bool (chunks are type-homogeneous)
@@ -388,8 +448,21 @@ class LM:
         for c, (s, e) in enumerate(bounds):
             p_chunk = jax.tree_util.tree_map(lambda a: a[s:e], params["blocks"])
             body = make_body(self._chunk_flag(s, e))
-            bfn = (jax.checkpoint(body, policy=remat_policy)
-                   if chunk_mask[c] else body)
+            if chunk_actions[c] is Action.REMAT:
+                bfn = jax.checkpoint(body, policy=remat_policy)
+            elif chunk_actions[c] is Action.OFFLOAD:
+                if self.offload_exec:
+                    def off_body(carry, p_i, _b=body):
+                        xx, ax = carry
+                        return _b((checkpoint_name(xx,
+                                                   OFFLOAD_RESIDUAL_NAME),
+                                   ax), p_i)
+                    bfn = jax.checkpoint(off_body,
+                                         policy=host_offload_policy())
+                else:
+                    bfn = jax.checkpoint(body, policy=remat_policy)
+            else:
+                bfn = body
             (x, aux), _ = jax.lax.scan(bfn, (x, aux), p_chunk)
         return x, aux
 

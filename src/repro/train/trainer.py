@@ -7,14 +7,18 @@ The trainer is the execution half of the *compile-once bucketed engine*:
      drawn from the small fixed bucket set; the true ``lengths`` stay in
      the batch dict until the loss weights are materialised, so masking
      is exact and padded positions contribute nothing.
-  2. ``planner.plan`` maps the bucket to a remat mask — cached plans are
-     O(1); new buckets cost <1 ms (estimator + scheduler) or one
-     deduplicated abstract collection during sheltered execution.
+  2. ``planner.plan`` maps the bucket to a typed action plan
+     (``repro.actions.Action``: KEEP / REMAT / OFFLOAD-to-host) — cached
+     plans are O(1); new buckets cost <1 ms (estimator + scheduler) or
+     one deduplicated abstract collection during sheltered execution.
   3. The plan cache and the jit-step cache share one key: the planner's
      ``bucket_key`` (quantised input size).  Because padding collapses
      every raw shape in a bucket onto the bucket's canonical shape, a
      repeated bucket never recompiles *or* replans, and total XLA
-     compiles are bounded by #buckets, not #distinct raw shapes.
+     compiles are bounded by #buckets, not #distinct raw shapes.  Both
+     caches are bounded LRUs (``max_cached_steps`` here, ``max_plans``
+     on the planner) with eviction counters, so a long-tailed bucket
+     distribution cannot pin a compiled executable per rare bucket.
   4. ``prewarm`` AOT-compiles (``jit.lower(...).compile()``) the top-k
      buckets off the critical path before step 0, so the first epoch
      never stalls on mid-training compilation.
@@ -36,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cache import LRUCache
 from repro.core.planner import PlannerBase
 from repro.data.pipeline import pad_batch
 from repro.models.lm import LM
@@ -52,6 +57,7 @@ class StepStats:
     tokens: int                # effective (unpadded) tokens in the step
     bucket: int = 0
     padded_tokens: int = 0     # bucket-shape tokens actually computed over
+    offload_units: int = 0     # units whose residuals went to host memory
 
 
 class Trainer:
@@ -59,17 +65,21 @@ class Trainer:
                  optimizer: Optional[AdamW] = None,
                  remat_policy=None,
                  bucket_pad: bool = True,
-                 mesh=None):
+                 mesh=None,
+                 max_cached_steps: int = 64):
         self.lm = lm
         self.planner = planner
         self.optimizer = optimizer or AdamW()
         self.remat_policy = remat_policy
         self.bucket_pad = bucket_pad
         self.mesh = mesh                  # jax.sharding.Mesh or None
-        self._step_cache: Dict[Any, Any] = {}
+        # bounded LRU: a long-tailed bucket distribution must not pin a
+        # compiled executable per rare bucket forever
+        self._step_cache = LRUCache(max_cached_steps)
         self.history: list[StepStats] = []
         self.cache_stats = {"compiles": 0, "prewarm_compiles": 0,
-                            "jit_hits": 0, "bucket_steps": {},
+                            "jit_hits": 0, "evictions": 0,
+                            "bucket_steps": {},
                             # per bucket: [padded_tokens, effective_tokens]
                             # (where the padding waste went — see
                             # launch/report.engine_report)
@@ -107,7 +117,7 @@ class Trainer:
                                else v)
                 for k, v in batch.items()}
 
-    def _build_step(self, mask: Tuple[bool, ...]):
+    def _build_step(self, mask):
         opt = self.optimizer
         lm = self.lm
         policy = self.remat_policy
@@ -124,25 +134,30 @@ class Trainer:
 
         return jax.jit(train_step, donate_argnums=(0, 1))
 
-    def _step_key(self, mask: Tuple[bool, ...], batch) -> tuple:
+    def _step_key(self, mask, batch) -> tuple:
         # the bucket id is fully determined by the padded shapes already in
         # the batch signature (bucket = quantised element count), so the
-        # jit cache keys on (shapes, mask, mesh signature) and aligns with
-        # the plan cache (keyed on (bucket id, mesh signature)) through the
-        # shared bucket_length rounding + planner.mesh_sig
-        return (self._batch_key(batch), mask, self.planner.mesh_sig())
+        # jit cache keys on (shapes, action plan, mesh signature) and
+        # aligns with the plan cache (keyed on (bucket id, mesh
+        # signature)) through the shared bucket_length rounding +
+        # planner.mesh_sig.  ``mask`` is the planner's typed action tuple
+        # (or a legacy bool tuple) — two plans that remat the same units
+        # but offload differently must compile separately.
+        return (self._batch_key(batch), tuple(int(m) for m in mask),
+                self.planner.mesh_sig())
 
     def _mesh_ctx(self):
         """Mesh context for compile + execute (no-op without a mesh)."""
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
-    def _get_step_fn(self, mask: Tuple[bool, ...], batch):
+    def _get_step_fn(self, mask, batch):
         key = self._step_key(mask, batch)
         fn = self._step_cache.get(key)
         if fn is None:
             fn = self._build_step(mask)
             self._step_cache[key] = fn
             self.cache_stats["compiles"] += 1
+            self.cache_stats["evictions"] = self._step_cache.evictions
             return fn, True
         self.cache_stats["jit_hits"] += 1
         return fn, False
@@ -182,6 +197,7 @@ class Trainer:
                 self._step_cache[key] = fn.lower(params, opt_state,
                                                  batch).compile()
             self.cache_stats["prewarm_compiles"] += 1
+            self.cache_stats["evictions"] = self._step_cache.evictions
             n += 1
         return n
 
@@ -207,8 +223,9 @@ class Trainer:
         bt[0] += padded_tokens
         bt[1] += eff_tokens
         self.history.append(StepStats(loss, t_step, t_plan, is_new,
-                                      int(sum(mask)), eff_tokens, bucket,
-                                      padded_tokens))
+                                      info.plan.n_remat, eff_tokens, bucket,
+                                      padded_tokens,
+                                      offload_units=info.plan.n_offload))
         return params, opt_state, loss
 
     def run(self, params, batches, opt_state: Optional[AdamWState] = None):
@@ -235,7 +252,10 @@ class Trainer:
             "prewarm_compiles": int(self.cache_stats["prewarm_compiles"]),
             "jit_hits": int(self.cache_stats["jit_hits"]),
             "buckets": len(self.cache_stats["bucket_steps"]),
+            "step_cache_evictions": int(self.cache_stats["evictions"]),
             "mean_remat_units": float(np.mean([s.remat_units for s in h])),
+            "mean_offload_units": float(np.mean([s.offload_units
+                                                 for s in h])),
             # throughput over *effective* (unpadded) tokens — the number
             # padded and ragged runs are comparable on; the raw padded
             # rate rides along as a secondary diagnostic

@@ -275,6 +275,30 @@ def test_planner_audit_detects_and_fixes_drift(small):
     assert abs(pred - truth) / truth < 0.05
 
 
+def test_audit_refit_clears_stale_plan_cache(small):
+    """The drift audit must not only refit the estimator — plans built
+    from the drifted fit are stale and must leave the cache, and the
+    audits/refits counters must advance exactly once for one drift."""
+    _, lm, params = small
+    planner = MimosePlanner(lm, budget_bytes=1e12, warmup_samples=3,
+                            quantum=8, audit_every=1)
+    for S in (32, 48, 56):
+        planner.plan(params, _batch(S))
+    planner.plan(params, _batch(64))        # post-warmup: a cached plan
+    stale_keys = set(planner.cache.keys())
+    assert stale_keys and planner.stats["refits"] == 0
+    audits_before = planner.stats["audits"]
+    # corrupt the fitted coefficients to force drift on the next miss
+    planner.estimator.fit()
+    planner.estimator._coeffs = planner.estimator._coeffs * 3.0
+    planner.plan(params, _batch(96))
+    assert planner.stats["audits"] == audits_before + 1
+    assert planner.stats["refits"] == 1
+    # every pre-drift plan was flushed; only the fresh bucket is cached
+    assert stale_keys.isdisjoint(set(planner.cache.keys()))
+    assert len(planner.cache) == 1
+
+
 def test_fixed_train_bytes_accounts_adam(small):
     _, lm, params = small
     n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,367 @@
+"""Tests for typed action plans + hybrid remat/offload (ISSUE 4):
+Action/bool back-compat, the hybrid scheduler's feasibility gap and
+floor property, offload liveness simulation, model-level OFFLOAD
+execution, trainer action cache keys + offload stats, the bounded LRU
+caches, and the baseline bucket-key PlanInfo fix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.actions import Action, as_actions
+from repro.core import (LRUCache, MimosePlanner, NonePlanner,
+                        ShuttlingCollector, SublinearPlanner, greedy_plan,
+                        offload_transfer_s, simulate)
+from repro.core.planner import fixed_train_bytes
+from repro.core.scheduler import Plan
+from repro.models.lm import build_model
+from repro.models.registry import get_config
+from repro.optim.adamw import AdamW
+from repro.train.trainer import Trainer
+
+PCIE = 16e9
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("bert_base_paper").reduced(
+        num_layers=4, d_model=128, d_ff=256, vocab_size=512)
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    return cfg, lm, params
+
+
+@pytest.fixture(scope="module")
+def vectors(small):
+    """Collected per-unit byte/cost vectors + fixed bytes + headroom."""
+    _, lm, params = small
+    col = ShuttlingCollector(lm).collect(params, _batch(64))
+    act = col.activation_vector()
+    out = col.output_vector()
+    off = col.offloadable_vector()
+    fl = col.flops_vector()
+    fixed = fixed_train_bytes(params)
+    # liveness-replay transient headroom: fwd charges act+out on top of
+    # saved; bwd resurrects an offloaded unit's residuals under its own
+    # grad working set (2x act)
+    margin = 2 * float(act.max()) + float(out.max())
+    return act, out, off, fl, fixed, margin
+
+
+def _batch(S, B=2):
+    return {"tokens": jnp.ones((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Action / Plan back-compat
+# ---------------------------------------------------------------------------
+
+def test_bool_mask_normalises_to_actions():
+    assert as_actions([True, False]) == (Action.REMAT, Action.KEEP)
+    assert as_actions((0, 1, 2)) == (Action.KEEP, Action.REMAT,
+                                     Action.OFFLOAD)
+    # bool/int value compatibility both ways
+    assert Action.REMAT == 1 == True          # noqa: E712
+    assert Action.KEEP == 0 == False          # noqa: E712
+
+
+def test_plan_as_tuple_matches_bool_semantics_without_offload():
+    """Acceptance: Plan.as_tuple() equals the old boolean semantics when
+    no unit is OFFLOAD."""
+    p = Plan([True, False, True], 0.0, 0.0, 0.0)
+    assert p.as_tuple() == (True, False, True)
+    assert p.as_actions() == (Action.REMAT, Action.KEEP, Action.REMAT)
+    assert p.n_remat == 2 and p.n_offload == 0
+    # and the typed construction round-trips
+    q = Plan([], 0.0, 0.0, 0.0,
+             actions=(Action.OFFLOAD, Action.REMAT, Action.KEEP))
+    assert q.as_tuple() == (False, True, False)   # OFFLOAD is not recompute
+    assert q.n_remat == 1 and q.n_offload == 1
+
+
+def test_plan_with_flops_counts_only_remat_units():
+    p = Plan([], 0.0, 0.0, 0.0,
+             actions=(Action.REMAT, Action.OFFLOAD, Action.KEEP))
+    p.with_flops([10.0, 100.0, 1000.0])
+    assert p.recompute_flops == 10.0
+
+
+# ---------------------------------------------------------------------------
+# hybrid scheduler
+# ---------------------------------------------------------------------------
+
+def _min_bool_plan_peak(act, out, fl, fixed):
+    """Exhaustive minimum simulated peak over every boolean remat mask —
+    the true remat-only feasibility floor (small n only)."""
+    import itertools
+    n = len(act)
+    return min(simulate(act, mask, fixed, out, fl).peak_bytes
+               for mask in itertools.product([False, True], repeat=n))
+
+
+def test_hybrid_fits_budget_infeasible_for_every_bool_plan(vectors):
+    """The headline capability: a budget no boolean remat mask can fit
+    (REMAT must keep boundary checkpoints on device; KEEP keeps
+    everything) that OFFLOAD's host eviction still fits."""
+    act, out, off, fl, fixed, _ = vectors
+    bool_floor = _min_bool_plan_peak(act, out, fl, fixed)
+    all_off = simulate(act, [Action.OFFLOAD] * len(act), fixed, out, fl,
+                       offload_bytes=off, pcie_bytes_per_s=PCIE)
+    assert all_off.peak_bytes < bool_floor     # the gap exists
+    budget = 0.5 * (all_off.peak_bytes + bool_floor)
+    plan = greedy_plan(act, budget, fixed, flops=fl, output_bytes=out,
+                       offload_bytes=off, pcie_bytes_per_s=PCIE)
+    sim = simulate(act, plan.actions, fixed, out, fl, offload_bytes=off,
+                   pcie_bytes_per_s=PCIE)
+    assert plan.n_offload > 0
+    assert sim.fits(budget)
+
+
+def test_hybrid_floor_property_randomized():
+    """At equal budget the hybrid plan's simulated step overhead
+    (recompute + non-overlapped transfer) is never worse than the
+    remat-only plan's, and feasibility is never lost."""
+    rng = np.random.default_rng(7)
+    feasible_trials = 0
+    for trial in range(60):
+        n = int(rng.integers(2, 24))
+        act = rng.uniform(1e5, 1e7, n)
+        out = act * rng.uniform(0.01, 0.3, n)
+        fl = rng.uniform(1e8, 1e12, n)
+        off = act * rng.uniform(0.5, 1.0, n)
+        fixed = float(rng.uniform(0, 1e7))
+        budget = (fixed + float(rng.uniform(0.3, 1.2)) * act.sum()
+                  + 2 * act.max() + out.max())
+        hyb = greedy_plan(act, budget, fixed, flops=fl, output_bytes=out,
+                          offload_bytes=off, pcie_bytes_per_s=PCIE)
+        ro = greedy_plan(act, budget, fixed, flops=fl)
+        sim_h = simulate(act, hyb.actions, fixed, out, fl,
+                         offload_bytes=off, pcie_bytes_per_s=PCIE)
+        sim_r = simulate(act, ro.remat, fixed, out, fl,
+                         offload_bytes=off, pcie_bytes_per_s=PCIE)
+        if sim_r.fits(budget):
+            feasible_trials += 1
+            assert sim_h.fits(budget), trial
+            assert (sim_h.step_overhead_s
+                    <= sim_r.step_overhead_s + 1e-12), trial
+    assert feasible_trials >= 10    # the property was actually exercised
+
+
+def test_hybrid_prefers_offload_when_transfer_is_free():
+    """With the transfer fully overlapped, OFFLOAD is strictly cheaper
+    than any recompute, so a plan under pressure offloads."""
+    act = np.full(8, 1e7)
+    out = np.full(8, 1e5)
+    off = act.copy()
+    fl = np.full(8, 1e12)                     # expensive recompute
+    budget = 0.4 * act.sum() + 2 * act.max() + out.max()
+    plan = greedy_plan(act, budget, 0.0, flops=fl, output_bytes=out,
+                       offload_bytes=off, pcie_bytes_per_s=PCIE,
+                       offload_overlap=1.0)
+    assert plan.n_offload > 0 and plan.n_remat == 0
+    sim = simulate(act, plan.actions, 0.0, out, fl, offload_bytes=off,
+                   pcie_bytes_per_s=PCIE, overlap=1.0)
+    ro = greedy_plan(act, budget, 0.0, flops=fl)
+    sim_r = simulate(act, ro.remat, 0.0, out, fl)
+    assert sim.step_overhead_s < sim_r.step_overhead_s
+
+
+def test_hybrid_no_offload_when_budget_ample(vectors):
+    act, out, off, fl, fixed, _ = vectors
+    plan = greedy_plan(act, 1e18, fixed, flops=fl, output_bytes=out,
+                       offload_bytes=off, pcie_bytes_per_s=PCIE)
+    assert plan.actions == (Action.KEEP,) * len(act)
+
+
+def test_byte_only_ignores_offload(vectors):
+    """byte_only=True keeps the paper's Algorithm 1 oracle untouched."""
+    act, out, off, fl, fixed, _ = vectors
+    a = greedy_plan(act, fixed + act.sum() * 0.5, fixed, flops=fl,
+                    byte_only=True, output_bytes=out, offload_bytes=off)
+    b = greedy_plan(act, fixed + act.sum() * 0.5, fixed, byte_only=True)
+    assert a.remat == b.remat and a.n_offload == 0
+
+
+# ---------------------------------------------------------------------------
+# simulator offload accounting
+# ---------------------------------------------------------------------------
+
+def test_simulate_offload_traffic_and_peak():
+    n = 6
+    act = [100.0] * n
+    out = [10.0] * n
+    off = [80.0] * n
+    plan = (Action.OFFLOAD, Action.KEEP) * 3
+    sim = simulate(act, plan, 0.0, out, offload_bytes=off,
+                   pcie_bytes_per_s=10.0, overlap=0.25)
+    assert sim.offload_units == 3
+    assert sim.offload_bytes == pytest.approx(240.0)
+    # round trip over the 10 B/s link
+    assert sim.offload_time_s == pytest.approx(2 * 240.0 / 10.0)
+    assert sim.exposed_transfer_s == pytest.approx(sim.offload_time_s * 0.75)
+    assert sim.step_overhead_s == pytest.approx(sim.exposed_transfer_s)
+    # offload frees more than remat: the boundary checkpoint goes too
+    sim_all_off = simulate(act, [Action.OFFLOAD] * n, 0.0, out,
+                           offload_bytes=act, pcie_bytes_per_s=10.0)
+    sim_all_re = simulate(act, [True] * n, 0.0, out)
+    assert sim_all_off.peak_bytes < sim_all_re.peak_bytes
+    assert offload_transfer_s(160.0, 10.0) == pytest.approx(32.0)
+
+
+def test_simulate_bool_plan_unchanged_by_new_args():
+    """Regression: the legacy bool path is bit-identical whatever the
+    new offload kwargs default to."""
+    act = [5.0, 7.0, 11.0]
+    a = simulate(act, [True, False, True], 3.0)
+    assert a.offload_units == 0 and a.offload_time_s == 0.0
+    assert a.step_overhead_s == a.recompute_time_s
+
+
+# ---------------------------------------------------------------------------
+# model execution of OFFLOAD actions
+# ---------------------------------------------------------------------------
+
+def test_forward_accepts_bool_and_action_masks(small):
+    _, lm, params = small
+    batch = _batch(48)
+    mask_b = (True, False, True, False)
+    l_bool, _ = lm.loss(params, batch, remat_mask=mask_b)
+    l_act, _ = lm.loss(params, batch, remat_mask=as_actions(mask_b))
+    assert float(l_bool) == float(l_act)
+
+
+def test_offload_action_loss_and_grads_match(small):
+    """OFFLOAD changes residual placement, never values: loss and grads
+    match the no-plan baseline."""
+    _, lm, params = small
+    batch = _batch(48)
+    plan = (Action.OFFLOAD, Action.KEEP, Action.REMAT, Action.OFFLOAD)
+    l0, _ = lm.loss(params, batch)
+    l1, _ = lm.loss(params, batch, remat_mask=plan)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6)
+    g0 = jax.jit(jax.grad(lambda p: lm.loss(p, batch)[0]))(params)
+    g1 = jax.jit(jax.grad(
+        lambda p: lm.loss(p, batch, remat_mask=plan)[0]))(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# trainer: action keys + offload stats
+# ---------------------------------------------------------------------------
+
+def test_trainer_offload_planner_end_to_end(vectors, small):
+    _, lm, params = small
+    act, out, off, fl, fixed, _ = vectors
+    all_off = simulate(act, [Action.OFFLOAD] * len(act), fixed, out, fl,
+                       offload_bytes=off, pcie_bytes_per_s=PCIE)
+    budget = 0.5 * (all_off.peak_bytes
+                    + _min_bool_plan_peak(act, out, fl, fixed))
+    planner = MimosePlanner(lm, budget, quantum=32, warmup_samples=1,
+                            offload=True)
+    tr = Trainer(lm, planner, AdamW(lr=1e-3))
+    p = jax.tree_util.tree_map(jnp.copy, params)
+    opt_state = tr.optimizer.init(p)
+    p, opt_state, loss = tr.step(p, opt_state, {
+        "tokens": np.ones((2, 60), np.int32),
+        "labels": np.ones((2, 60), np.int32)})
+    assert np.isfinite(loss)
+    st = tr.history[-1]
+    assert st.offload_units > 0
+    assert tr.summary()["mean_offload_units"] > 0
+
+
+def test_mesh_planning_prices_flops_per_device(small):
+    """Regression: the hybrid selection compares recompute seconds
+    against per-device transfer seconds, so under a mesh budget the
+    flops vector must be divided down to the per-device frame too —
+    global flops would inflate remat cost by n_devices and over-offload."""
+    from repro.core import MeshBudget
+    _, lm, params = small
+    budget = MeshBudget.from_shape((4, 2), 1e18)
+    planner = MimosePlanner(lm, mesh_budget=budget, warmup_samples=1,
+                            quantum=32, offload=True)
+    fl = np.array([8.0, 16.0])
+    np.testing.assert_allclose(planner.planning_flops(fl), fl / 8.0)
+    # global mode: untouched
+    g = MimosePlanner(lm, 1e18, warmup_samples=1)
+    assert g.planning_flops(fl) is fl
+    # and the sharded hybrid plan path runs end to end
+    plan, info = planner.plan(params, _batch(64))
+    assert len(plan) == lm.num_plan_units()
+
+
+def test_offload_requires_cost_aware(small):
+    _, lm, _ = small
+    with pytest.raises(ValueError, match="cost_aware"):
+        MimosePlanner(lm, 1e9, offload=True, cost_aware=False)
+    with pytest.raises(ValueError, match="cost_aware"):
+        SublinearPlanner(lm, 1e9, max_input_size=128, offload=True,
+                         cost_aware=False)
+
+
+# ---------------------------------------------------------------------------
+# bounded LRU caches (trainer jit-step cache + planner plan cache)
+# ---------------------------------------------------------------------------
+
+def test_lru_cache_evicts_least_recently_used():
+    c = LRUCache(2)
+    c["a"] = 1
+    c["b"] = 2
+    assert c["a"] == 1          # touch "a": "b" becomes the LRU victim
+    c["c"] = 3
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.evictions == 1
+    c.clear()
+    assert len(c) == 0 and c.evictions == 1   # clear() is not an eviction
+
+
+def test_trainer_step_cache_bounded_and_counted(small):
+    _, lm, params = small
+    planner = MimosePlanner(lm, budget_bytes=1e12, quantum=64,
+                            warmup_samples=2)
+    tr = Trainer(lm, planner, AdamW(lr=1e-3), max_cached_steps=1)
+    p = jax.tree_util.tree_map(jnp.copy, params)
+    opt_state = tr.optimizer.init(p)
+    for S in (40, 100, 40):     # bucket 64, bucket 128, bucket 64 again
+        p, opt_state, loss = tr.step(p, opt_state, {
+            "tokens": np.ones((2, S), np.int32),
+            "labels": np.ones((2, S), np.int32)})
+        assert np.isfinite(loss)
+    assert len(tr._step_cache) == 1
+    # the third step re-compiled bucket 64 (evicted by bucket 128)
+    assert tr.cache_stats["compiles"] == 3
+    assert tr.cache_stats["evictions"] == 2
+    assert tr.summary()["step_cache_evictions"] == 2
+
+
+def test_planner_plan_cache_bounded_and_counted(small):
+    _, lm, params = small
+    planner = MimosePlanner(lm, budget_bytes=1e12, quantum=8,
+                            warmup_samples=1, max_plans=2)
+    for S in (16, 32, 48, 64):
+        planner.plan(params, _batch(S))
+    assert len(planner.cache) == 2
+    assert planner.stats["evictions"] == 2
+    # the still-cached newest bucket is a hit
+    _, info = planner.plan(params, _batch(64))
+    assert info.cache_hit
+
+
+# ---------------------------------------------------------------------------
+# baseline PlanInfo bucket keys (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_baselines_report_real_bucket_key(small):
+    _, lm, params = small
+    batch = _batch(50)
+    n_elems = 2 * 50
+    _, info = NonePlanner(lm).plan(params, batch)
+    assert info.quantized_size == n_elems        # quantum 1: bucket == size
+    sub = SublinearPlanner(lm, 1e12, max_input_size=2 * 256,
+                           warmup_samples=2)
+    _, info = sub.plan(params, batch)
+    assert info.quantized_size == n_elems

@@ -188,7 +188,8 @@ def test_greedy_plan_respects_per_device_budget(toy):
         col = planner.collector.collect(params, batch)
         act = col.device_activation_vector()
         fixed = planner.resolve_fixed_bytes(params)
-        saved = float(act[~np.asarray(mask)].sum())
+        # mask is a typed action tuple now: KEEP units are the saved ones
+        saved = float(act[np.asarray(mask, dtype=int) == 0].sum())
         assert fixed + saved <= budget.hbm_per_device_bytes, shape
         # and the scheduler helper agrees with the planner's plan
         p2 = greedy_plan_sharded(act, budget, fixed)

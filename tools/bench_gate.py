@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Benchmark acceptance gate: diff a fresh ``bench_engine`` run against
+the committed ``BENCH_engine.json`` baseline.
+
+Three checks, stdlib-only (runs in the CI smoke job right after
+``benchmarks/bench_engine.py --smoke``):
+
+1. **Gate coverage** — every acceptance gate present in the committed
+   baseline must exist in the fresh run.  A refactor that silently
+   drops a gate cannot pass CI by simply not measuring it.
+2. **Gate truth** — every acceptance gate in the fresh run must be
+   True.  (``bench_engine`` exits non-zero on its own failures too;
+   this re-checks from the artifact so the gate also works on a run
+   produced elsewhere.)
+3. **Metric drift** — scale-free ratio metrics (speedups, recovered
+   fractions, time reductions) are compared within ``--rtol``.  The
+   committed baseline is a full run while CI runs ``--smoke`` on noisy
+   shared runners, so drift is reported as a WARNING by default;
+   ``--strict-drift`` turns violations into failures for runs on
+   comparable hardware.
+
+Usage:
+    python tools/bench_gate.py --fresh BENCH_engine.smoke.json \
+        [--committed BENCH_engine.json] [--rtol 0.5] [--strict-drift]
+
+Exit code 0 when the gates hold, 1 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (path into the report, larger-is-better) — only scale-free ratios:
+# absolute latencies/throughputs differ too much between the committed
+# full run and a CI smoke run to gate on
+DRIFT_METRICS = [
+    (("scheduler", "units_96", "speedup"), True),
+    (("collector", "speedup"), True),
+    (("ragged", "sweep", "pad_50pct", "flash", "modeled_recovered"), True),
+    (("ragged", "sweep", "pad_50pct", "ssd", "modeled_recovered"), True),
+]
+
+
+def dig(report: dict, path: tuple):
+    node = report
+    for key in path:
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node
+
+
+def check(fresh: dict, committed: dict, rtol: float,
+          strict_drift: bool) -> list:
+    errors = []
+    warnings = []
+    base_gates = committed.get("acceptance", {})
+    fresh_gates = fresh.get("acceptance", {})
+    for gate in base_gates:
+        if gate not in fresh_gates:
+            errors.append(f"gate missing from fresh run: {gate}")
+    for gate, value in fresh_gates.items():
+        if value is not True:
+            errors.append(f"gate failed: {gate} = {value}")
+    for path, larger_better in DRIFT_METRICS:
+        base = dig(committed, path)
+        now = dig(fresh, path)
+        name = ".".join(path)
+        if base is None:
+            continue                      # metric not in the baseline yet
+        if now is None:
+            errors.append(f"metric missing from fresh run: {name}")
+            continue
+        floor = base * (1.0 - rtol)
+        drifted = (now < floor) if larger_better else (now > base * (1 + rtol))
+        if drifted:
+            msg = (f"drift: {name} = {now} vs committed {base} "
+                   f"(tolerance {rtol:.0%})")
+            (errors if strict_drift else warnings).append(msg)
+    for w in warnings:
+        print(f"WARNING {w}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True,
+                    help="JSON from the bench_engine run under test")
+    ap.add_argument("--committed", default="BENCH_engine.json",
+                    help="committed baseline (default: BENCH_engine.json)")
+    ap.add_argument("--rtol", type=float, default=0.5,
+                    help="relative tolerance for ratio-metric drift")
+    ap.add_argument("--strict-drift", action="store_true",
+                    help="fail (not warn) on metric drift — for runs on "
+                         "hardware comparable to the committed baseline")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.committed) as f:
+        committed = json.load(f)
+
+    errors = check(fresh, committed, args.rtol, args.strict_drift)
+    n_gates = len(fresh.get("acceptance", {}))
+    if errors:
+        for e in errors:
+            print(f"FAIL {e}")
+        print(f"bench gate: FAIL ({len(errors)} violation(s))")
+        return 1
+    print(f"bench gate: PASS ({n_gates} acceptance gates, "
+          f"{len(DRIFT_METRICS)} drift metrics checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
