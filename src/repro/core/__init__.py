@@ -9,6 +9,7 @@ from repro.core.planner import (MimosePlanner, NonePlanner, PlannerBase,  # noqa
                                 fixed_train_bytes)
 from repro.core.baselines import DTRSimPlanner, SublinearPlanner  # noqa: F401
 from repro.core.scheduler import (Plan, build_buckets, greedy_plan,  # noqa: F401
+                                  greedy_plan_adaptive,
                                   greedy_plan_reference, greedy_plan_sharded)
 from repro.core.simulator import (ShardedSimResult, SimResult,  # noqa: F401
                                   dtr_simulate, peak_if_checkpointing_unit,

@@ -14,7 +14,10 @@ planner, both emit typed action plans (``Plan.as_actions()``);
 ``SublinearPlanner`` additionally takes the same ``offload=`` /
 ``pcie_gbps=`` knobs as ``MimosePlanner`` (its one static plan may then
 OFFLOAD units to host), while DTR's evict-on-OOM semantics are
-remat-only by construction.
+remat-only by construction.  Both thread ``max_microbatches=``:
+Sublinear's one static plan may pick a gradient-accumulation split for
+the largest size, and DTR escalates the split only when even
+evict-everything cannot fit the budget.
 """
 from __future__ import annotations
 
@@ -26,9 +29,9 @@ import numpy as np
 from repro.core.collector import ShuttlingCollector, input_size_of
 from repro.core.estimator import PolyEstimator
 from repro.core.planner import PlanInfo, PlannerBase
-from repro.core.scheduler import Plan, greedy_plan
-from repro.core.simulator import dtr_simulate
-from repro.launch.roofline import plan_unit_flops
+from repro.core.scheduler import Plan, greedy_plan, greedy_plan_adaptive
+from repro.core.simulator import dtr_simulate, simulate
+from repro.launch.roofline import MICROBATCH_OVERHEAD_S, plan_unit_flops
 from repro.models.lm import LM
 from repro.sharding.budget import MeshBudget
 
@@ -45,7 +48,9 @@ class SublinearPlanner(PlannerBase):
                  cost_aware: bool = True,
                  offload: bool = False,
                  pcie_gbps: float = 16.0,
-                 offload_overlap: float = 0.5):
+                 offload_overlap: float = 0.5,
+                 max_microbatches: int = 1,
+                 microbatch_overhead_s: float = MICROBATCH_OVERHEAD_S):
         self.lm = lm
         self.mesh_budget = mesh_budget
         if not max_input_size:
@@ -55,6 +60,8 @@ class SublinearPlanner(PlannerBase):
         self.fixed_bytes = fixed_bytes
         self.shard_divisor = shard_divisor
         self.cost_aware = cost_aware
+        self.max_microbatches = max(int(max_microbatches), 1)
+        self.microbatch_overhead_s = microbatch_overhead_s
         self._init_hybrid(offload=offload, pcie_gbps=pcie_gbps,
                           offload_overlap=offload_overlap,
                           cost_aware=cost_aware, degree=2,
@@ -87,11 +94,40 @@ class SublinearPlanner(PlannerBase):
         # same cost-aware scoring as MimosePlanner, apples-to-apples
         flops = (plan_unit_flops(self.lm, probe) if self.cost_aware
                  else None)
-        self._plan = greedy_plan(est / self.activation_divisor_scalar(),
-                                 self.budget_bytes,
-                                 self.resolve_fixed_bytes(params),
-                                 flops=self.planning_flops(flops),
-                                 **self._hybrid_kwargs(self.max_input_size))
+        ks = self.candidate_microbatches(probe)
+        if ks == [1]:
+            self._plan = greedy_plan(
+                est / self.activation_divisor_scalar(),
+                self.budget_bytes,
+                self.resolve_fixed_bytes(params),
+                flops=self.planning_flops(flops),
+                **self._hybrid_kwargs(self.max_input_size))
+            return
+
+        def vectors_of_k(k):
+            # the static plan is built for the LARGEST input size, so
+            # the per-microbatch vectors are the fits at max_size/k
+            probe_k = self.microbatch_probe(probe, k)
+            s_k = input_size_of(probe_k)
+            div = self.activation_divisor_scalar()
+            d = {"est_mem": self.estimator.predict(s_k) / div}
+            if self.cost_aware:
+                d["flops"] = self.planning_flops(
+                    plan_unit_flops(self.lm, probe_k))
+                d["pad_overhead_s"] = self.pad_waste_s(probe, k,
+                                                       d["flops"])
+            hv = self._hybrid_vectors(s_k)
+            if hv is not None:
+                d["output_bytes"], d["offload_bytes"] = hv
+            return d
+
+        self._plan = greedy_plan_adaptive(
+            vectors_of_k, self.budget_bytes,
+            self.resolve_fixed_bytes(params),
+            candidate_ks=ks,
+            pcie_bytes_per_s=self.pcie_gbps * 1e9,
+            offload_overlap=self.offload_overlap,
+            accum_overhead_s=self.microbatch_overhead_s)
 
     def plan(self, params, batch):
         if self._plan is None:
@@ -109,7 +145,8 @@ class DTRSimPlanner(PlannerBase):
                  shard_divisor: int = 1,
                  mesh_budget: Optional[MeshBudget] = None,
                  frag_factor: float = 1.25,
-                 plan_op_cost_s: float = 2e-5):
+                 plan_op_cost_s: float = 2e-5,
+                 max_microbatches: int = 1):
         self.lm = lm
         self.mesh_budget = mesh_budget
         self.budget_bytes = self.resolve_budget_bytes(budget_bytes)
@@ -117,23 +154,49 @@ class DTRSimPlanner(PlannerBase):
         self.shard_divisor = shard_divisor
         self.frag_factor = frag_factor
         self.plan_op_cost_s = plan_op_cost_s
+        self.max_microbatches = max(int(max_microbatches), 1)
         self.collector = ShuttlingCollector(lm, mesh_budget=mesh_budget)
-        self._size_cache: Dict[int, np.ndarray] = {}
+        self._size_cache: Dict[tuple, np.ndarray] = {}
         self.stats = {"plan_ops": 0, "plan_time_s": 0.0, "replans": 0}
+
+    def _act_vector(self, params, batch, k: int) -> np.ndarray:
+        """Concrete per-unit byte vector at split ``k`` (DTR sees real
+        tensor sizes, so a collection per (size, split) geometry)."""
+        s = input_size_of(batch)
+        if (s, k) not in self._size_cache:
+            probe = batch if k == 1 else self.microbatch_probe(batch, k)
+            res = self.collector.collect(params, probe)
+            self._size_cache[(s, k)] = self.collected_vector(res)
+        return self._size_cache[(s, k)] / self.activation_divisor_scalar()
 
     def plan(self, params, batch):
         s = input_size_of(batch)
         # DTR knows tensor sizes at runtime (they are concrete); it just
         # never reuses planning work across iterations.
-        if s not in self._size_cache:
-            res = self.collector.collect(params, batch)
-            self._size_cache[s] = self.collected_vector(res)
-        act = self._size_cache[s] / self.activation_divisor_scalar()
         self.resolve_fixed_bytes(params)
 
         t0 = time.perf_counter()
-        mask, plan_ops = dtr_simulate(act, self.budget_bytes,
-                                      self.fixed_bytes, self.frag_factor)
+        plan_ops = 0
+        # DTR has no cost model: escalate the split only when the
+        # evict-on-OOM replay cannot fit the budget (smallest feasible
+        # k; largest k as best effort when nothing fits; the plain
+        # single-shot behaviour when max_microbatches == 1)
+        ks = self.candidate_microbatches(batch)
+        act = mask = None
+        chosen = 1
+        for k in ks:
+            act = self._act_vector(params, batch, k)
+            mask, ops = dtr_simulate(act, self.budget_bytes,
+                                     self.fixed_bytes, self.frag_factor)
+            plan_ops += ops
+            chosen = k
+            # feasibility under DTR's OWN memory model: the replayed
+            # peak inflated by the same fragmentation factor the
+            # evict-on-OOM walk triggers on
+            if (len(ks) == 1
+                    or simulate(act, mask, self.fixed_bytes).peak_bytes
+                    * self.frag_factor <= self.budget_bytes):
+                break
         self.stats["plan_ops"] += plan_ops
         self.stats["replans"] += 1
         # model DTR's on-demand eviction search cost (paper: 4.4-6.1% of
@@ -142,5 +205,6 @@ class DTRSimPlanner(PlannerBase):
                                       + plan_ops * self.plan_op_cost_s)
         p = Plan(list(mask), 0.0, float(act[np.asarray(mask)].sum()),
                  float(act.sum()))
+        p.microbatch = chosen
         return p.as_actions(), PlanInfo(s, self.bucket_key(batch), False,
                                         False, p)

@@ -39,6 +39,19 @@ and offloadable byte vectors the hybrid scheduler needs.  All planners
 return ``Plan.as_actions()`` now; a plan with no OFFLOAD unit is
 value-identical to the old bool mask (``KEEP == 0 == False``,
 ``REMAT == 1 == True``).
+
+Adaptive microbatching (``max_microbatches > 1``): the candidate search
+additionally spans the gradient-accumulation split factor ``k`` per
+bucket — the per-unit byte vectors at split ``k`` come straight from
+the PolyEstimator fits evaluated at input size ``s/k`` (or an abstract
+collection on the split geometry during sheltered execution), and the
+``(k, action-plan)`` pair with the lowest simulated step overhead wins
+(``scheduler.greedy_plan_adaptive``).  ``k = 1`` always competes, so
+enabling microbatching never loses at equal budget; plan-cache keys
+grow the ``max_microbatches`` component so plans never leak across
+knob settings, and ``Plan.microbatch`` tells the trainer to execute
+the step as ``k`` accumulated microbatches
+(``repro.train.accumulate``).
 """
 from __future__ import annotations
 
@@ -53,9 +66,9 @@ import numpy as np
 from repro.core.cache import LRUCache
 from repro.core.collector import ShuttlingCollector, input_size_of, _tree_bytes
 from repro.core.estimator import PolyEstimator
-from repro.core.scheduler import Plan, greedy_plan
+from repro.core.scheduler import Plan, greedy_plan, greedy_plan_adaptive
 from repro.data.pipeline import bucket_length
-from repro.launch.roofline import plan_unit_flops
+from repro.launch.roofline import MICROBATCH_OVERHEAD_S, plan_unit_flops
 from repro.models.lm import LM
 from repro.sharding.budget import MeshBudget, fixed_train_bytes_per_device
 
@@ -93,6 +106,11 @@ class PlannerBase:
     offload: bool = False
     pcie_gbps: float = 16.0
     offload_overlap: float = 0.5
+    # adaptive microbatching: largest gradient-accumulation split the
+    # planner may pick per bucket (1 = plain full-batch steps), and the
+    # fixed per-extra-microbatch cost it prices the split at
+    max_microbatches: int = 1
+    microbatch_overhead_s: float = MICROBATCH_OVERHEAD_S
 
     def plan(self, params, batch) -> Tuple[tuple, PlanInfo]:
         """Returns ``(Plan.as_actions(), PlanInfo)`` — a typed action
@@ -165,20 +183,28 @@ class PlannerBase:
         self.est_output.add_sample(s, self.collected_output_vector(res))
         self.est_offload.add_sample(s, self.collected_offload_vector(res))
 
-    def _hybrid_kwargs(self, size: int, res=None) -> dict:
-        """The extra ``greedy_plan`` arguments for hybrid selection: the
-        boundary/offloadable byte vectors (exact from a collection when
-        ``res`` is given, predicted otherwise) in the planning frame,
-        plus the link pricing.  Empty when offload is disabled."""
+    def _hybrid_vectors(self, size: int, res=None):
+        """Boundary/offloadable byte vectors in the planning frame —
+        exact from a collection when ``res`` is given, predicted
+        otherwise.  ``None`` when offload is disabled."""
         if not self.offload:
-            return {}
+            return None
         div = self.activation_divisor_scalar()
         out_v = (self.collected_output_vector(res) if res is not None
                  else self.est_output.predict(size))
         off_v = (self.collected_offload_vector(res) if res is not None
                  else self.est_offload.predict(size))
-        return dict(output_bytes=out_v / div,
-                    offload_bytes=off_v / div,
+        return out_v / div, off_v / div
+
+    def _hybrid_kwargs(self, size: int, res=None) -> dict:
+        """The extra ``greedy_plan`` arguments for hybrid selection:
+        the ``_hybrid_vectors`` plus the link pricing.  Empty when
+        offload is disabled."""
+        v = self._hybrid_vectors(size, res)
+        if v is None:
+            return {}
+        return dict(output_bytes=v[0],
+                    offload_bytes=v[1],
                     pcie_bytes_per_s=self.pcie_gbps * 1e9,
                     offload_overlap=self.offload_overlap)
 
@@ -217,8 +243,61 @@ class PlannerBase:
                 if self.mesh_budget is not None else ())
 
     def plan_key(self, batch) -> tuple:
-        """Full plan-cache key: (bucket id, mesh signature)."""
-        return (self.bucket_key(batch), self.mesh_sig())
+        """Full plan-cache key: (bucket id, mesh signature, microbatch
+        ceiling).  ``max_microbatches`` is part of the key so plans
+        built under one microbatching knob are never replayed under
+        another (the chosen ``k`` itself is plan *output*, carried by
+        ``Plan.microbatch``)."""
+        return (self.bucket_key(batch), self.mesh_sig(),
+                self.max_microbatches)
+
+    # -- shared adaptive-microbatching machinery -------------------------
+    def candidate_microbatches(self, batch) -> list:
+        """Candidate gradient-accumulation splits for this batch: every
+        ``k`` in ``1..max_microbatches``, capped at the batch size (a
+        split cannot produce more microbatches than there are rows)."""
+        B = int(np.shape(batch["tokens"])[0])
+        kmax = max(min(int(self.max_microbatches), B), 1)
+        return list(range(1, kmax + 1))
+
+    @staticmethod
+    def pad_waste_s(batch, k: int, flops_mb) -> float:
+        """Per-step time a non-divisor split wastes on batch-axis pad
+        rows: ``split_batch`` pads ``B`` up to ``ceil(B/k)*k`` rows and
+        the step computes a full forward+backward over them.  The
+        per-microbatch flops vector is already priced at the padded
+        ``ceil(B/k)``-row geometry, so the waste is its pad-row share
+        across all ``k`` microbatches at the roofline (backward ~= 2x
+        forward).  Zero when ``k`` divides ``B`` — the simulator's
+        overhead model covers everything else, so divisor splits stay
+        exactly the floor-property candidates."""
+        from repro.launch.roofline import PEAK_FLOPS
+        B = int(np.shape(batch["tokens"])[0])
+        k = max(int(k), 1)
+        rows = -(-B // k) * k
+        if rows == B or flops_mb is None:
+            return 0.0
+        frac = (rows - B) / rows
+        return frac * 3.0 * k * float(np.sum(flops_mb)) / PEAK_FLOPS
+
+    @staticmethod
+    def microbatch_probe(batch, k: int) -> dict:
+        """The batch geometry of ONE microbatch at split ``k``: every
+        entry's batch axis cut to ``ceil(B/k)`` rows.  Works on arrays
+        and ``ShapeDtypeStruct`` batches alike (the abstract dry-run
+        plans through here too) — only shapes matter downstream
+        (collection is abstract, ``plan_unit_flops`` reads geometry).
+        """
+        B = int(np.shape(batch["tokens"])[0])
+        Bk = max(-(-B // max(int(k), 1)), 1)
+
+        def cut(v):
+            if isinstance(v, jax.ShapeDtypeStruct):
+                return jax.ShapeDtypeStruct((Bk,) + tuple(v.shape[1:]),
+                                            v.dtype)
+            return v[:Bk]
+
+        return {key: cut(v) for key, v in batch.items()}
 
 
 class NonePlanner(PlannerBase):
@@ -253,6 +332,8 @@ class MimosePlanner(PlannerBase):
                  offload: bool = False,
                  pcie_gbps: float = 16.0,
                  offload_overlap: float = 0.5,
+                 max_microbatches: int = 1,
+                 microbatch_overhead_s: float = MICROBATCH_OVERHEAD_S,
                  max_plans: int = 256,
                  audit_every: int = 0,
                  audit_tol: float = 0.02):
@@ -264,6 +345,11 @@ class MimosePlanner(PlannerBase):
         self.quantum = quantum
         self.warmup_samples = warmup_samples
         self.bucket_tol = bucket_tol
+        # adaptive microbatching: the scheduler may split a bucket into
+        # up to this many gradient-accumulation microbatches when that
+        # beats (or alone fits) the budget
+        self.max_microbatches = max(int(max_microbatches), 1)
+        self.microbatch_overhead_s = microbatch_overhead_s
         # cost-aware selection (bytes freed per recompute-FLOP, floored
         # by the byte-only oracle); False = the paper's Algorithm 1
         self.cost_aware = cost_aware
@@ -303,10 +389,53 @@ class MimosePlanner(PlannerBase):
         self.estimator.add_sample(s, self.collected_vector(res))
         self._feed_hybrid_estimators(s, res)
 
+    def _microbatch_vectors(self, params, batch, k: int, est1, flops1,
+                            res) -> dict:
+        """Per-microbatch planning vectors at split ``k`` for
+        ``greedy_plan_adaptive``: estimator predictions at the
+        microbatch input size ``~s/k`` once the fits are ready, an
+        abstract collection on the split geometry during sheltered
+        execution (the extra sample also feeds the fits).  ``k == 1``
+        reuses the vectors the plain path already derived."""
+        div = self.activation_divisor_scalar()
+        if k == 1:
+            est, flops, size, res_k = est1, flops1, input_size_of(batch), res
+        else:
+            probe = self.microbatch_probe(batch, k)
+            size = input_size_of(probe)
+            res_k = None
+            if res is None and self.estimator.ready:
+                # responsive execution: the per-unit fits price any
+                # split for free
+                est = self.estimator.predict(size)
+            else:
+                # sheltered execution (this plan() already collected at
+                # k=1): collect the split geometry too — exact vectors,
+                # and the extra sample feeds the fits
+                res_k = self.collector.collect(params, probe)
+                self._feed_estimators(size, res_k)
+                self.stats["collections"] += 1
+                self.stats["collect_time_s"] += res_k.collect_time_s
+                est = self.collected_vector(res_k)
+            flops = None
+            if self.cost_aware:
+                flops = (res_k.flops_vector() if res_k is not None
+                         else plan_unit_flops(self.lm, probe))
+        d = {"est_mem": est / div}
+        if flops is not None:
+            d["flops"] = self.planning_flops(flops)
+            d["pad_overhead_s"] = self.pad_waste_s(batch, k, d["flops"])
+        hv = self._hybrid_vectors(size, res_k)
+        if hv is not None:
+            d["output_bytes"], d["offload_bytes"] = hv
+        return d
+
     def plan(self, params, batch):
         s = input_size_of(batch)
         qs = self._quantize(s)
-        key = (qs, self.mesh_sig())
+        # the ONE cache-key construction (PlannerBase.plan_key): growing
+        # a key component there covers every planner at once
+        key = self.plan_key(batch)
         if key in self.cache:
             self.stats["cache_hits"] += 1
             p = self.cache[key]
@@ -358,13 +487,28 @@ class MimosePlanner(PlannerBase):
         # are rematerialised before FLOP-heavy ones freeing equal bytes
         if self.cost_aware and flops is None:
             flops = plan_unit_flops(self.lm, batch)
-        div = self.activation_divisor_scalar()
-        plan = greedy_plan(est / div,
-                           self.budget_bytes,
-                           self.resolve_fixed_bytes(params),
-                           tol=self.bucket_tol,
-                           flops=self.planning_flops(flops),
-                           **self._hybrid_kwargs(s, res))
+        ks = self.candidate_microbatches(batch)
+        if ks == [1]:
+            # plain path — bit-identical to planning without the
+            # microbatching subsystem
+            div = self.activation_divisor_scalar()
+            plan = greedy_plan(est / div,
+                               self.budget_bytes,
+                               self.resolve_fixed_bytes(params),
+                               tol=self.bucket_tol,
+                               flops=self.planning_flops(flops),
+                               **self._hybrid_kwargs(s, res))
+        else:
+            plan = greedy_plan_adaptive(
+                lambda k: self._microbatch_vectors(params, batch, k,
+                                                   est, flops, res),
+                self.budget_bytes,
+                self.resolve_fixed_bytes(params),
+                candidate_ks=ks,
+                tol=self.bucket_tol,
+                pcie_bytes_per_s=self.pcie_gbps * 1e9,
+                offload_overlap=self.offload_overlap,
+                accum_overhead_s=self.microbatch_overhead_s)
         t_sch = time.perf_counter() - t0
         self.stats["schedule_time_s"] += t_sch
 

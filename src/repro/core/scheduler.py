@@ -52,6 +52,16 @@ plan with the lowest simulated step overhead — the remat-only plan is
 always among the candidates, so the hybrid result is *never worse at
 equal budget* (and can fit budgets remat-only cannot: REMAT must keep
 every unit's boundary tensor on device, OFFLOAD does not).
+
+Adaptive microbatching: ``greedy_plan_adaptive`` extends the candidate
+search to ``(k, action-plan)`` pairs — split the mini-batch into ``k``
+microbatches with gradient accumulation, shrinking the batch-linear
+activation terms by ~1/k while ``(k - 1) x accum_overhead_s`` of fixed
+accumulation cost lands on the critical path.  Every candidate is
+scored by simulated step overhead; ``k = 1`` always competes, so
+enabling microbatching never loses at equal budget — and it fits
+budgets below the global-minimum footprint of the bucket, which NO
+``k = 1`` action plan (not even all-OFFLOAD) can reach.
 """
 from __future__ import annotations
 
@@ -61,7 +71,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.actions import Action, as_actions
-from repro.launch.roofline import PCIE_BW, PEAK_FLOPS
+from repro.launch.roofline import MICROBATCH_OVERHEAD_S, PCIE_BW, PEAK_FLOPS
 
 
 @dataclasses.dataclass
@@ -81,6 +91,12 @@ class Plan:
     # one-way bytes the plan streams to host (0.0 without OFFLOAD units)
     offload_bytes: float = 0.0
     n_offload: int = 0
+    # gradient-accumulation split factor: execute the step as this many
+    # sequential microbatches (1 = the plain full-batch step).  Chosen
+    # jointly with the action plan by ``greedy_plan_adaptive``; when
+    # > 1, the per-unit byte quantities above are PER-MICROBATCH while
+    # ``recompute_flops`` / ``offload_bytes`` stay full-step totals.
+    microbatch: int = 1
 
     def __post_init__(self):
         if self.actions is None:
@@ -446,6 +462,83 @@ def greedy_plan_sharded(device_est_mem: Sequence[float], mesh_budget,
                        offload_bytes=offload_bytes,
                        pcie_bytes_per_s=pcie_bytes_per_s,
                        offload_overlap=offload_overlap)
+
+
+def greedy_plan_adaptive(vectors_of_k, budget_bytes: float,
+                         fixed_bytes: float = 0.0, *,
+                         max_microbatches: int = 1,
+                         candidate_ks: Optional[Sequence[int]] = None,
+                         tol: float = 0.10,
+                         byte_only: bool = False,
+                         pcie_bytes_per_s: float = PCIE_BW,
+                         offload_overlap: float = 0.5,
+                         accum_overhead_s: float = MICROBATCH_OVERHEAD_S
+                         ) -> Plan:
+    """Joint (microbatch factor, action plan) selection.
+
+    ``vectors_of_k(k)`` must return the *per-microbatch* planning
+    vectors at split factor ``k`` as a dict with ``est_mem`` (required)
+    and optional ``flops`` / ``output_bytes`` / ``offload_bytes`` —
+    typically the PolyEstimator predictions at input size ``s/k`` (the
+    per-unit fits capture the non-batch-linear terms plain division
+    would miss) — plus an optional ``pad_overhead_s`` scalar: extra
+    per-step time the split wastes outside the simulator's model (the
+    planner charges the batch-axis pad rows a non-divisor ``k``
+    computes over, ``ceil(B/k)*k - B`` extra full rows).  For each
+    candidate ``k`` (``candidate_ks`` or ``1..max_microbatches``) the
+    per-unit action plan is chosen by ``greedy_plan`` against the same
+    budget (fixed bytes are resident regardless of the split), then
+    replayed by the liveness simulator with ``microbatch=k``; the
+    winner is the feasible candidate with the lowest simulated step
+    overhead (recompute + exposed transfer + ``(k - 1) *
+    accum_overhead_s`` + ``pad_overhead_s``), ties preferring smaller
+    ``k``.
+    When nothing fits, the candidate with the lowest replayed peak
+    wins.  ``k = 1`` always competes, so the adaptive plan is *never
+    worse at equal budget* than the plain planner — and it can fit
+    budgets below the bucket's global-minimum ``k = 1`` footprint.
+    """
+    from repro.core.simulator import simulate
+
+    ks = sorted(set(int(k) for k in
+                    (candidate_ks if candidate_ks is not None
+                     else range(1, max(int(max_microbatches), 1) + 1))))
+    assert ks and ks[0] >= 1, ks
+
+    def plan_at(k: int):
+        v = vectors_of_k(k)
+        plan = greedy_plan(v["est_mem"], budget_bytes, fixed_bytes,
+                           tol=tol, flops=v.get("flops"),
+                           byte_only=byte_only,
+                           output_bytes=v.get("output_bytes"),
+                           offload_bytes=v.get("offload_bytes"),
+                           pcie_bytes_per_s=pcie_bytes_per_s,
+                           offload_overlap=offload_overlap)
+        plan.microbatch = k
+        sim = simulate(v["est_mem"], plan.actions, fixed_bytes,
+                       v.get("output_bytes"), v.get("flops"),
+                       offload_bytes=v.get("offload_bytes"),
+                       pcie_bytes_per_s=pcie_bytes_per_s,
+                       overlap=offload_overlap, microbatch=k,
+                       accum_overhead_s=accum_overhead_s)
+        # stamp full-step totals (greedy_plan filled per-microbatch)
+        plan.recompute_flops = sim.recompute_flops
+        plan.offload_bytes = sim.offload_bytes
+        return plan, sim, float(v.get("pad_overhead_s", 0.0))
+
+    if len(ks) == 1 and ks[0] == 1:
+        # fast path: no search, bit-identical to the plain scheduler
+        return plan_at(1)[0]
+    cands = [plan_at(k) for k in ks]
+    fits = [s.peak_bytes <= budget_bytes + 1e-6 for _, s, _ in cands]
+    if any(fits):
+        best = min((i for i in range(len(cands)) if fits[i]),
+                   key=lambda i: (cands[i][1].step_overhead_s
+                                  + cands[i][2],
+                                  cands[i][0].microbatch))
+    else:
+        best = min(range(len(cands)), key=lambda i: cands[i][1].peak_bytes)
+    return cands[best][0]
 
 
 def greedy_plan_reference(est_mem: Sequence[float], budget_bytes: float,

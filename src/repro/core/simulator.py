@@ -22,9 +22,19 @@ Plans may be the legacy boolean remat mask or a typed ``Action`` tuple
   ``overlap`` models the fraction hidden under compute, leaving
   ``exposed_transfer_s`` on the critical path.
 
+Microbatching (``microbatch=k``): the step runs ``k`` sequential
+forward+backward passes with gradient accumulation, so the liveness
+replay covers ONE microbatch — the byte vectors passed in must already
+be the *per-microbatch* bytes (estimator predictions at input size
+``s/k``, or a collection on the split geometry) — while the per-step
+totals (recomputed bytes/FLOPs, offload traffic) scale by ``k`` and
+``accum_overhead_s`` charges the fixed per-extra-microbatch
+accumulation cost ``(k - 1) x accum_overhead_s`` on the critical path.
+
 ``SimResult.step_overhead_s`` — recompute time + non-overlapped
-transfer — is the scalar the hybrid scheduler's floor guarantees never
-exceeds the remat-only plan's at equal budget.
+transfer + accumulation overhead — is the scalar the hybrid and
+adaptive-microbatching schedulers' floors guarantee never exceeds the
+remat-only / ``k=1`` plan's at equal budget.
 
 A unit's internal working set is transiently live while it executes
 whether or not it is rematted/offloaded; during backward (reverse
@@ -57,6 +67,11 @@ class SimResult:
     offload_time_s: float = 0.0
     # transfer time NOT hidden under compute ((1 - overlap) x round trip)
     exposed_transfer_s: float = 0.0
+    # gradient-accumulation split factor of the replayed step (1 = the
+    # plain full-batch step) and the fixed accumulation cost it adds to
+    # the critical path ((k - 1) x per-microbatch overhead)
+    microbatches: int = 1
+    accum_overhead_s: float = 0.0
 
     @property
     def recompute_time_s(self) -> float:
@@ -67,9 +82,11 @@ class SimResult:
     @property
     def step_overhead_s(self) -> float:
         """Total plan overhead on the step's critical path: recompute
-        plus the non-overlapped share of the offload traffic.  The
-        hybrid scheduler's floor property is stated on this number."""
-        return self.recompute_time_s + self.exposed_transfer_s
+        plus the non-overlapped share of the offload traffic plus the
+        gradient-accumulation cost.  The hybrid and microbatching
+        schedulers' floor properties are stated on this number."""
+        return (self.recompute_time_s + self.exposed_transfer_s
+                + self.accum_overhead_s)
 
     def fits(self, budget: float) -> bool:
         return self.peak_bytes <= budget
@@ -81,11 +98,19 @@ def simulate(act_bytes: Sequence[float], remat: Sequence,
              flops: Sequence[float] | None = None, *,
              offload_bytes: Sequence[float] | None = None,
              pcie_bytes_per_s: float = PCIE_BW,
-             overlap: float = 0.5) -> SimResult:
+             overlap: float = 0.5,
+             microbatch: int = 1,
+             accum_overhead_s: float = 0.0) -> SimResult:
     """Replay one training step's liveness under ``remat`` (a bool mask
     or an ``Action`` plan).  ``offload_bytes[i]`` is the unit's
     offloadable residual bytes (defaults to all of ``act_bytes[i]``);
-    only consulted for units the plan marks OFFLOAD."""
+    only consulted for units the plan marks OFFLOAD.
+
+    With ``microbatch=k > 1`` the byte/FLOP vectors must be the
+    *per-microbatch* quantities; the replayed peak covers one
+    microbatch (gradient accumulation runs them sequentially) while the
+    per-step totals scale by ``k`` and ``(k - 1) * accum_overhead_s``
+    is charged as fixed accumulation cost."""
     actions = as_actions(remat)
     n = len(act_bytes)
     act = [float(a) for a in act_bytes]
@@ -136,11 +161,20 @@ def simulate(act_bytes: Sequence[float], remat: Sequence,
         saved -= act[i]
         timeline.append((f"bwd{i}", live + saved))
 
+    # per-step totals: k sequential microbatches each recompute /
+    # offload their own (1/k-scale) share — the peak above stays one
+    # microbatch's, the traffic and recompute multiply out
+    k = max(int(microbatch), 1)
+    recompute *= k
+    recompute_fl *= k
+    moved *= k
     t_xfer = 2.0 * moved / float(pcie_bytes_per_s)
     exposed = t_xfer * max(0.0, min(1.0, 1.0 - overlap))
     return SimResult(peak, recompute, n_re, timeline, recompute_fl,
                      offload_bytes=moved, offload_units=n_off,
-                     offload_time_s=t_xfer, exposed_transfer_s=exposed)
+                     offload_time_s=t_xfer, exposed_transfer_s=exposed,
+                     microbatches=k,
+                     accum_overhead_s=(k - 1) * float(accum_overhead_s))
 
 
 @dataclasses.dataclass
@@ -180,6 +214,12 @@ class ShardedSimResult:
     def step_overhead_s(self) -> float:
         return self.per_device.step_overhead_s
 
+    @property
+    def microbatches(self) -> int:
+        """Gradient-accumulation split factor of the replayed step
+        (SPMD: every device runs the same k sequential microbatches)."""
+        return self.per_device.microbatches
+
     def fits(self, budget_per_device: float) -> bool:
         return self.per_device.peak_bytes <= budget_per_device
 
@@ -192,7 +232,9 @@ def simulate_sharded(device_act_bytes: Sequence[float],
                      flops: Sequence[float] | None = None, *,
                      offload_bytes: Sequence[float] | None = None,
                      pcie_bytes_per_s: float = PCIE_BW,
-                     overlap: float = 0.5) -> ShardedSimResult:
+                     overlap: float = 0.5,
+                     microbatch: int = 1,
+                     accum_overhead_s: float = 0.0) -> ShardedSimResult:
     """Replay the training step's per-device memory timeline.
 
     ``device_act_bytes`` is the per-unit byte vector landing on one
@@ -203,11 +245,17 @@ def simulate_sharded(device_act_bytes: Sequence[float],
     without hardware — the multi-device analogue of ``simulate``.
     ``flops`` should be the *per-device* per-unit recompute FLOPs
     (global FLOPs / n_devices under SPMD); ``offload_bytes`` the
-    per-device offloadable residual bytes.
+    per-device offloadable residual bytes.  ``microbatch=k`` replays a
+    k-way gradient-accumulation step per device (the vectors must then
+    be per-microbatch per-device bytes) — under SPMD every device runs
+    the same k sequential microbatches, so one per-device microbatched
+    replay covers the whole mesh.
     """
     base = simulate(device_act_bytes, remat, fixed_device_bytes,
                     output_bytes, flops, offload_bytes=offload_bytes,
-                    pcie_bytes_per_s=pcie_bytes_per_s, overlap=overlap)
+                    pcie_bytes_per_s=pcie_bytes_per_s, overlap=overlap,
+                    microbatch=microbatch,
+                    accum_overhead_s=accum_overhead_s)
     return ShardedSimResult(base, int(n_devices))
 
 

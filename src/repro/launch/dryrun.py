@@ -38,7 +38,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
             zero1: bool, seq_parallel: bool, logits_f32: bool,
             unroll: bool = False, verbose: bool = True,
             mesh_shape=None, offload: bool = False,
-            pcie_gbps: float = 16.0) -> dict:
+            pcie_gbps: float = 16.0,
+            max_microbatches: int = 1) -> dict:
     import dataclasses
     cfg = get_config(arch)
     if unroll:
@@ -57,7 +58,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
         chips = 512 if multi_pod else 256
     rec = {"arch": canonical(arch), "shape": shape_name, "mesh": mesh_name,
            "remat": remat, "zero1": zero1, "seq_parallel": seq_parallel,
-           "logits_f32": logits_f32, "unroll": unroll, "offload": offload}
+           "logits_f32": logits_f32, "unroll": unroll, "offload": offload,
+           "max_microbatches": max_microbatches}
 
     ok, why = shape_applicable(cfg, shape)
     if not ok:
@@ -69,7 +71,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
         t0 = time.time()
         setup = build_setup(cfg, shape, mesh, remat=remat, zero1=zero1,
                             seq_parallel=seq_parallel, logits_f32=logits_f32,
-                            offload=offload, pcie_gbps=pcie_gbps)
+                            offload=offload, pcie_gbps=pcie_gbps,
+                            max_microbatches=max_microbatches)
         lowered = lower_setup(setup, mesh)
         t_lower = time.time() - t0
         t0 = time.time()
@@ -85,9 +88,14 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, remat: str,
                    coll_breakdown={k: round(v) for k, v in
                                    roof.coll_breakdown.items()},
                    model_flops=roof.model_flops,
-                   # one digit per unit: 0=KEEP 1=REMAT 2=OFFLOAD-to-host
-                   remat_mask=("".join(str(int(m)) for m in setup.remat_mask)
+                   # one digit per unit (0=KEEP 1=REMAT 2=OFFLOAD-to-host),
+                   # with the gradient-accumulation split factor appended
+                   # when the planner chose to microbatch (e.g. "0110x2")
+                   remat_mask=(("".join(str(int(m)) for m in setup.remat_mask)
+                                + (f"x{setup.microbatch}"
+                                   if setup.microbatch > 1 else ""))
                                if setup.remat_mask else None),
+                   microbatch=setup.microbatch,
                    **roof.row())
     except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
@@ -117,6 +125,12 @@ def main(argv=None):
     ap.add_argument("--pcie-gbps", type=float, default=16.0,
                     help="host<->device link bandwidth the planner "
                          "prices OFFLOAD actions at")
+    ap.add_argument("--max-microbatches", type=int, default=1,
+                    help="let the mimose plan split the train step into "
+                         "up to K gradient-accumulation microbatches "
+                         "when that wins on simulated step time (the "
+                         "mask string then shows the factor, e.g. "
+                         "'0110x2')")
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--logits-bf16", action="store_true")
@@ -163,7 +177,8 @@ def main(argv=None):
                           zero1=args.zero1, seq_parallel=args.seq_parallel,
                           logits_f32=not args.logits_bf16,
                           unroll=args.unroll, mesh_shape=mesh_shape,
-                          offload=args.offload, pcie_gbps=args.pcie_gbps)
+                          offload=args.offload, pcie_gbps=args.pcie_gbps,
+                          max_microbatches=args.max_microbatches)
             line = json.dumps(rec)
             print(line, flush=True)
             if out:

@@ -5,9 +5,11 @@ plus the live engine report a training run prints at exit.
     PYTHONPATH=src python -m repro.launch.report roofline.jsonl --kind roofline
 
 ``engine_report(trainer, planner)`` turns the trainer's cache stats into
-a per-bucket table — steps, padded vs effective tokens, pad fraction —
-so a run shows exactly where padding waste went, alongside the plan
-cache and jit cache hit rates (``launch/train.py`` prints it).
+a per-bucket table — steps, gradient-accumulation split factor ``k``,
+padded vs effective tokens, pad fraction — so a run shows exactly where
+padding waste went and where adaptive microbatching kicked in,
+alongside the plan cache and jit cache hit rates (``launch/train.py``
+prints it).
 """
 from __future__ import annotations
 
@@ -23,19 +25,22 @@ def engine_report(trainer, planner=None) -> str:
     ``planner``: optionally the planner, for plan-cache hit rates.
     """
     cs = trainer.cache_stats
-    lines = ["| bucket S | steps | padded tok | effective tok | pad % |",
-             "|---|---|---|---|---|"]
+    lines = ["| bucket S | steps | k | padded tok | effective tok | pad % |",
+             "|---|---|---|---|---|---|"]
     tot_pad = tot_eff = 0
     for bucket in sorted(cs["bucket_steps"]):
         steps = cs["bucket_steps"][bucket]
         padded, eff = cs.get("bucket_tokens", {}).get(bucket, (0, 0))
+        # gradient-accumulation split the planner picked for the bucket
+        # (where adaptive microbatching kicked in; 1 = full-batch steps)
+        k = cs.get("bucket_microbatch", {}).get(bucket, 1)
         tot_pad += padded
         tot_eff += eff
         frac = 100.0 * (1.0 - eff / padded) if padded else 0.0
-        lines.append(f"| {bucket} | {steps} | {padded} | {eff} "
+        lines.append(f"| {bucket} | {steps} | {k} | {padded} | {eff} "
                      f"| {frac:.1f} |")
     tot_frac = 100.0 * (1.0 - tot_eff / tot_pad) if tot_pad else 0.0
-    lines.append(f"| **total** | {sum(cs['bucket_steps'].values())} "
+    lines.append(f"| **total** | {sum(cs['bucket_steps'].values())} | - "
                  f"| {tot_pad} | {tot_eff} | {tot_frac:.1f} |")
     lines.append("")
     lines.append(f"jit cache: {cs['compiles']} compiles "

@@ -29,6 +29,14 @@ ICI_BW = 50e9                # bytes/s per link
 # ~32 GB/s raw; 16 GB/s is the sustained-DMA default the --pcie-gbps
 # knob overrides).  The hybrid scheduler prices OFFLOAD actions with it.
 PCIE_BW = 16e9               # bytes/s host<->device
+# fixed per-microbatch cost of gradient accumulation: one extra step
+# dispatch plus the grad-buffer read-modify-write (~params bytes at
+# HBM_BW) per additional microbatch.  The adaptive-microbatching
+# scheduler charges (k - 1) of these when scoring a k-way split, so k
+# never escalates for free — it must buy back more remat/offload
+# overhead than the accumulation costs (planners override per model via
+# ``microbatch_overhead_s=``).
+MICROBATCH_OVERHEAD_S = 5e-4
 
 
 def offload_transfer_s(bytes_moved: float,

@@ -77,14 +77,18 @@ def plan_remat_mask(lm: LM, params_struct, batch_struct, *,
                     expert_2d: bool = False,
                     cost_aware: bool = True,
                     offload: bool = False,
-                    pcie_gbps: float = 16.0) -> tuple:
-    """Returns the per-unit action plan (``repro.actions.Action`` tuple;
-    bool-compatible: KEEP/REMAT are value-identical to False/True)."""
+                    pcie_gbps: float = 16.0,
+                    max_microbatches: int = 1) -> Tuple[tuple, int]:
+    """Returns ``(actions, microbatch)``: the per-unit action plan
+    (``repro.actions.Action`` tuple; bool-compatible: KEEP/REMAT are
+    value-identical to False/True) and the gradient-accumulation split
+    factor the planner chose (1 unless ``max_microbatches > 1`` and a
+    split wins on simulated step time / alone fits the budget)."""
     n = lm.num_plan_units()
     if mode == "none":
-        return tuple([False] * n)
+        return tuple([False] * n), 1
     if mode == "all":
-        return tuple([True] * n)
+        return tuple([True] * n), 1
     # mode == "mimose": run the input-aware planner abstractly at scale,
     # against the true per-device budget — activations divided by their
     # PartitionSpec divisors, fixed bytes as the param/opt shards.  The
@@ -102,9 +106,10 @@ def plan_remat_mask(lm: LM, params_struct, batch_struct, *,
     planner = MimosePlanner(lm, mesh_budget=budget,
                             warmup_samples=1, quantum=1,
                             cost_aware=cost_aware,
-                            offload=offload, pcie_gbps=pcie_gbps)
-    mask, _ = planner.plan(params_struct, batch_struct)
-    return mask
+                            offload=offload, pcie_gbps=pcie_gbps,
+                            max_microbatches=max_microbatches)
+    mask, info = planner.plan(params_struct, batch_struct)
+    return mask, max(int(info.plan.microbatch), 1)
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +125,8 @@ class Setup:
     out_shardings: Any
     donate_argnums: tuple = ()
     remat_mask: Optional[tuple] = None
+    # gradient-accumulation split of the train step (1 = full batch)
+    microbatch: int = 1
 
 
 def build_setup(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
@@ -131,7 +138,8 @@ def build_setup(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
                 expert_2d: bool = False,
                 attn_impl: str = "xla",
                 offload: bool = False,
-                pcie_gbps: float = 16.0) -> Setup:
+                pcie_gbps: float = 16.0,
+                max_microbatches: int = 1) -> Setup:
     lm = build_model(arch_cfg, attn_impl=attn_impl)
     lm.logits_f32 = logits_f32
     if offload and mesh.devices.size > 1:
@@ -160,27 +168,43 @@ def build_setup(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
         opt = AdamW()
         opt_struct = jax.eval_shape(opt.init, params_struct)
         o_sh = SP.opt_state_shardings(p_sh, opt_struct, mesh, zero1=zero1)
-        mask = plan_remat_mask(lm, params_struct, batch, mode=remat,
-                               mesh=mesh, zero1=zero1,
-                               seq_parallel=seq_parallel,
-                               attn_replicated=attn_replicated,
-                               expert_2d=expert_2d,
-                               offload=offload, pcie_gbps=pcie_gbps)
+        mask, microbatch = plan_remat_mask(
+            lm, params_struct, batch, mode=remat,
+            mesh=mesh, zero1=zero1,
+            seq_parallel=seq_parallel,
+            attn_replicated=attn_replicated,
+            expert_2d=expert_2d,
+            offload=offload, pcie_gbps=pcie_gbps,
+            max_microbatches=max_microbatches)
         policy = (getattr(jax.checkpoint_policies, remat_policy)
                   if remat_policy else None)
 
-        def train_step(params, opt_state, b):
-            def loss_fn(p):
-                return lm.loss(p, b, remat_mask=mask, remat_policy=policy)
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params)
-            new_p, new_o = opt.update(grads, opt_state, params)
-            return new_p, new_o, loss
+        if microbatch > 1:
+            # the planner split the batch: lower the k-way accumulated
+            # step (the split happens inside, so the batch shardings
+            # still apply to the unsplit bucket-shaped batch)
+            from repro.train.accumulate import accumulated_step_fn
+            acc = accumulated_step_fn(lm, opt, mask, microbatch,
+                                      remat_policy=policy)
+
+            def train_step(params, opt_state, b):
+                new_p, new_o, loss, _metrics = acc(params, opt_state, b)
+                return new_p, new_o, loss
+        else:
+            def train_step(params, opt_state, b):
+                def loss_fn(p):
+                    return lm.loss(p, b, remat_mask=mask,
+                                   remat_policy=policy)
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params)
+                new_p, new_o = opt.update(grads, opt_state, params)
+                return new_p, new_o, loss
 
         return Setup("train_step", train_step,
                      (params_struct, opt_struct, batch),
                      (p_sh, o_sh, b_sh), (p_sh, o_sh, repl),
-                     donate_argnums=(0, 1), remat_mask=mask)
+                     donate_argnums=(0, 1), remat_mask=mask,
+                     microbatch=microbatch)
 
     if shape.kind == "prefill":
         data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)

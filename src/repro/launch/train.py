@@ -61,6 +61,13 @@ def main(argv=None):
     ap.add_argument("--pcie-gbps", type=float, default=16.0,
                     help="host<->device link bandwidth (GB/s) the planner "
                          "prices OFFLOAD actions at")
+    ap.add_argument("--max-microbatches", type=int, default=1,
+                    help="adaptive microbatching: the planner may split "
+                         "a bucket's step into up to K gradient-"
+                         "accumulation microbatches when that wins on "
+                         "simulated step time — or alone fits the "
+                         "budget (k=1 always competes, so enabling "
+                         "this never loses at equal budget)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -112,20 +119,28 @@ def main(argv=None):
     if args.offload and args.byte_only_remat:
         ap.error("--offload needs the cost-aware selector "
                  "(drop --byte-only-remat)")
+    if args.offload and mesh is not None:
+        # same guard as launch/steps.py: current XLA cannot shard the
+        # host-offload custom-calls under SPMD — plan with OFFLOAD
+        # actions but execute them as plain remat under a live mesh
+        lm.offload_exec = False
     planner = {
         "mimose": lambda: MimosePlanner(lm, budget, quantum=args.quantum,
                                         mesh_budget=mesh_budget,
                                         warmup_samples=3,
                                         cost_aware=not args.byte_only_remat,
                                         offload=args.offload,
-                                        pcie_gbps=args.pcie_gbps),
+                                        pcie_gbps=args.pcie_gbps,
+                                        max_microbatches=args.max_microbatches),
         "sublinear": lambda: SublinearPlanner(lm, budget,
                                               max_input_size=max_size,
                                               mesh_budget=mesh_budget,
                                               cost_aware=not args.byte_only_remat,
                                               offload=args.offload,
-                                              pcie_gbps=args.pcie_gbps),
-        "dtr": lambda: DTRSimPlanner(lm, budget, mesh_budget=mesh_budget),
+                                              pcie_gbps=args.pcie_gbps,
+                                              max_microbatches=args.max_microbatches),
+        "dtr": lambda: DTRSimPlanner(lm, budget, mesh_budget=mesh_budget,
+                                     max_microbatches=args.max_microbatches),
         "none": lambda: NonePlanner(lm),
     }[args.planner]()
 
@@ -153,7 +168,7 @@ def main(argv=None):
             st = trainer.history[-1]
             print(f"step {i:4d} loss {loss:.4f} S={batch['tokens'].shape[1]}"
                   f" remat={st.remat_units} offload={st.offload_units}"
-                  f" step_s={st.step_time_s:.3f}")
+                  f" k={st.microbatches} step_s={st.step_time_s:.3f}")
     print(f"done in {time.time() - t0:.1f}s")
     print("summary:", trainer.summary())
     print("\nengine report (where the padding went):")

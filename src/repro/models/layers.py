@@ -237,7 +237,9 @@ def attention_apply(params: dict, cfg: ModelConfig, x: Array, *,
 
     new_cache = None
     if kv_cache is not None:
-        # decode: insert new k/v at cache_index
+        # decode / chunked prefill: insert the Sq new k/v rows at
+        # cache_index (Sq == 1 for token decode, a whole block for
+        # chunked prefill — same compiled shape family either way)
         ck, cv = kv_cache["k"], kv_cache["v"]
         ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
         cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, axis=1)
@@ -245,10 +247,12 @@ def attention_apply(params: dict, cfg: ModelConfig, x: Array, *,
         k, v = ck, cv
         Sk = k.shape[1]
         k_pos = jnp.arange(Sk)[None, :]
-        q_pos = positions                                  # (B, 1)
-        valid = k_pos <= q_pos[..., :, None][..., 0, :]     # (B, Sk) keys written so far
-        mask = _build_mask(q_pos, jnp.broadcast_to(k_pos, (B, Sk)), cfg.sliding_window,
-                           layer_is_global) & valid[:, None, :]
+        q_pos = positions                                  # (B, Sq)
+        # per-query "keys written so far": cache slots past each query's
+        # own position hold garbage (future chunk rows / zeros)
+        valid = k_pos[None, :, :] <= q_pos[..., :, None]    # (B, Sq, Sk)
+        mask = _build_mask(q_pos, jnp.broadcast_to(k_pos, (B, Sk)),
+                           cfg.sliding_window, layer_is_global) & valid
     elif cross_kv is not None or not causal:
         Sk = k.shape[1]
         mask = jnp.ones((B, Sq, Sk), dtype=bool)

@@ -581,15 +581,18 @@ class LM:
         return caches
 
     def decode_step(self, params, tokens, cache, index):
-        """tokens: (B, 1) int32; index: scalar current length. Returns
-        (logits (B,1,V), new_cache)."""
+        """tokens: (B, C) int32 — C == 1 for token-by-token decode, a
+        whole block for chunked prefill (``train.serve``); index: scalar
+        position of the first token.  Returns (logits (B,C,V),
+        new_cache) — the cache advances by C positions."""
         cfg = self.cfg
-        B = tokens.shape[0]
+        B, C = tokens.shape
         x = params["embed"][tokens]
-        positions = jnp.full((B, 1), index, jnp.int32)
+        positions = index + jnp.broadcast_to(
+            jnp.arange(C, dtype=jnp.int32), (B, C))
         mrope_positions = None
         if cfg.mrope:
-            mrope_positions = jnp.broadcast_to(positions[None], (3, B, 1))
+            mrope_positions = jnp.broadcast_to(positions[None], (3, B, C))
 
         if cfg.remat_mode == "scan":
             flags = self._global_flags()

@@ -158,12 +158,16 @@ def mamba2_apply(params: dict, cfg: ModelConfig, u: Array,
     z, xBC, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
 
     if decode:
-        # conv_state: (B, K-1, conv_dim) rolling buffer of past inputs
-        full = jnp.concatenate([conv_state, xBC], axis=1)
-        new_conv_state = full[:, 1:]
+        # conv_state: (B, K-1, conv_dim) rolling buffer of past inputs.
+        # Works for any S >= 1 (S == 1: token decode; S > 1: chunked
+        # prefill advancing the cache a block at a time): the causal
+        # conv windows slide over [conv_state, new inputs] and the
+        # buffer keeps the last K-1 rows.
+        full = jnp.concatenate([conv_state, xBC], axis=1)   # (B, K-1+S, C)
+        new_conv_state = full[:, S:]
         K = cfg.conv_kernel
-        xBC = (jnp.einsum("bkc,kc->bc", full[:, -K:], params["conv_w"])
-               + params["conv_b"])[:, None, :]
+        xBC = sum(full[:, i:i + S, :] * params["conv_w"][i]
+                  for i in range(K)) + params["conv_b"]
     else:
         new_conv_state = None
         xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
@@ -178,8 +182,15 @@ def mamba2_apply(params: dict, cfg: ModelConfig, u: Array,
     A = -jnp.exp(params["A_log"])
 
     if decode:
-        y, new_ssm = ssd_step(ssm_state, x[:, 0], dt[:, 0], A, B_[:, 0], C_[:, 0])
-        y = y[:, None]
+        if x.shape[1] == 1:
+            y, new_ssm = ssd_step(ssm_state, x[:, 0], dt[:, 0], A,
+                                  B_[:, 0], C_[:, 0])
+            y = y[:, None]
+        else:
+            # chunked prefill: run the chunked scan from the cached
+            # state (bitwise state semantics match repeated ssd_step)
+            y, new_ssm = ssd_chunked(x, dt, A, B_, C_, cfg.ssm_chunk,
+                                     initial_state=ssm_state)
     else:
         y, new_ssm = ssd_chunked(x, dt, A, B_, C_, cfg.ssm_chunk,
                                  initial_state=ssm_state)

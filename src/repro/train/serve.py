@@ -19,24 +19,32 @@ def make_serve_step(lm: LM):
     return serve_step
 
 
-def prefill_into_cache(lm: LM, params, tokens, cache):
-    """Feed a prompt token-by-token (reference implementation; fine for the
-    CPU-scale examples.  The dry-run prefill shape lowers the one-shot
-    forward instead)."""
+def prefill_into_cache(lm: LM, params, tokens, cache, chunk: int = 32):
+    """Advance the cache over the prompt a ``chunk``-token block at a
+    time: ``ceil(S/chunk)`` jit dispatches instead of the S per-token
+    dispatches the old reference path paid (``chunk=1`` restores it).
+    At most two shapes compile — the full chunk and the remainder —
+    and the numerics match the token-by-token path (the decode step
+    handles any block width; ``tests/test_microbatch.py`` locks
+    generation equivalence).  The dry-run prefill shape still lowers
+    the one-shot forward instead."""
     B, S = tokens.shape
+    chunk = max(int(chunk), 1)
     step = jax.jit(make_serve_step(lm))
     logits = None
-    for t in range(S):
-        logits, cache = step(params, tokens[:, t:t + 1], cache, t)
+    for t in range(0, S, chunk):
+        logits, cache = step(params, tokens[:, t:t + chunk], cache, t)
     return logits, cache
 
 
 def generate(lm: LM, params, prompt: jnp.ndarray, max_new_tokens: int,
-             temperature: float = 0.0, seed: int = 0):
+             temperature: float = 0.0, seed: int = 0,
+             prefill_chunk: int = 32):
     """Greedy / sampled generation for the examples."""
     B, S = prompt.shape
     cache = lm.init_cache(B, S + max_new_tokens)
-    logits, cache = prefill_into_cache(lm, params, prompt, cache)
+    logits, cache = prefill_into_cache(lm, params, prompt, cache,
+                                       chunk=prefill_chunk)
     step = jax.jit(make_serve_step(lm))
     key = jax.random.PRNGKey(seed)
     toks = []

@@ -22,6 +22,13 @@ The trainer is the execution half of the *compile-once bucketed engine*:
   4. ``prewarm`` AOT-compiles (``jit.lower(...).compile()``) the top-k
      buckets off the critical path before step 0, so the first epoch
      never stalls on mid-training compilation.
+  5. When the plan carries a gradient-accumulation split
+     (``Plan.microbatch > 1``, chosen by the adaptive-microbatching
+     planner), the step executes as a ``lax.scan`` over ``k``
+     microbatches (``repro.train.accumulate``) with token-weighted
+     accumulation, so loss/grads match the full-batch step exactly.
+     The jit-step cache key includes ``k``; ``StepStats.microbatches``
+     and ``summary()['mean_microbatches']`` report where it kicked in.
 
 Sharding: pass ``mesh`` to build and run every step under that Mesh
 context (required for ``with_sharding_constraint`` in the model).  The
@@ -45,6 +52,7 @@ from repro.core.planner import PlannerBase
 from repro.data.pipeline import pad_batch
 from repro.models.lm import LM
 from repro.optim.adamw import AdamW, AdamWState
+from repro.train.accumulate import build_accumulated_step
 
 
 @dataclasses.dataclass
@@ -58,6 +66,7 @@ class StepStats:
     bucket: int = 0
     padded_tokens: int = 0     # bucket-shape tokens actually computed over
     offload_units: int = 0     # units whose residuals went to host memory
+    microbatches: int = 1      # gradient-accumulation split of the step
 
 
 class Trainer:
@@ -83,7 +92,10 @@ class Trainer:
                             # per bucket: [padded_tokens, effective_tokens]
                             # (where the padding waste went — see
                             # launch/report.engine_report)
-                            "bucket_tokens": {}}
+                            "bucket_tokens": {},
+                            # per bucket: largest gradient-accumulation
+                            # split the planner picked for it
+                            "bucket_microbatch": {}}
 
     # ------------------------------------------------------------------
     def _batch_key(self, batch) -> tuple:
@@ -117,10 +129,16 @@ class Trainer:
                                else v)
                 for k, v in batch.items()}
 
-    def _build_step(self, mask):
+    def _build_step(self, mask, microbatch: int = 1):
         opt = self.optimizer
         lm = self.lm
         policy = self.remat_policy
+        if microbatch > 1:
+            # k-way gradient accumulation: one lax.scan over the split
+            # batch, token-weighted so loss/grads match the full-batch
+            # step exactly (repro.train.accumulate)
+            return build_accumulated_step(lm, opt, mask, microbatch,
+                                          remat_policy=policy)
 
         def train_step(params, opt_state, batch):
             def loss_fn(p):
@@ -134,27 +152,28 @@ class Trainer:
 
         return jax.jit(train_step, donate_argnums=(0, 1))
 
-    def _step_key(self, mask, batch) -> tuple:
+    def _step_key(self, mask, batch, microbatch: int = 1) -> tuple:
         # the bucket id is fully determined by the padded shapes already in
         # the batch signature (bucket = quantised element count), so the
-        # jit cache keys on (shapes, action plan, mesh signature) and
-        # aligns with the plan cache (keyed on (bucket id, mesh
-        # signature)) through the shared bucket_length rounding +
-        # planner.mesh_sig.  ``mask`` is the planner's typed action tuple
-        # (or a legacy bool tuple) — two plans that remat the same units
-        # but offload differently must compile separately.
+        # jit cache keys on (shapes, action plan, microbatch split, mesh
+        # signature) and aligns with the plan cache (keyed on (bucket id,
+        # mesh signature, max_microbatches)) through the shared
+        # bucket_length rounding + planner.mesh_sig.  ``mask`` is the
+        # planner's typed action tuple (or a legacy bool tuple) — two
+        # plans that remat the same units but offload or split
+        # differently must compile separately.
         return (self._batch_key(batch), tuple(int(m) for m in mask),
-                self.planner.mesh_sig())
+                int(microbatch), self.planner.mesh_sig())
 
     def _mesh_ctx(self):
         """Mesh context for compile + execute (no-op without a mesh)."""
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
-    def _get_step_fn(self, mask, batch):
-        key = self._step_key(mask, batch)
+    def _get_step_fn(self, mask, batch, microbatch: int = 1):
+        key = self._step_key(mask, batch, microbatch)
         fn = self._step_cache.get(key)
         if fn is None:
-            fn = self._build_step(mask)
+            fn = self._build_step(mask, microbatch)
             self._step_cache[key] = fn
             self.cache_stats["compiles"] += 1
             self.cache_stats["evictions"] = self._step_cache.evictions
@@ -189,10 +208,11 @@ class Trainer:
                             for k, v in extra.items()})
             batch = self._prepare(raw)
             mask, _info = self.planner.plan(params, batch)
-            key = self._step_key(mask, batch)
+            k = max(int(getattr(_info.plan, "microbatch", 1)), 1)
+            key = self._step_key(mask, batch, k)
             if key in self._step_cache:
                 continue
-            fn = self._build_step(mask)
+            fn = self._build_step(mask, k)
             with self._mesh_ctx():
                 self._step_cache[key] = fn.lower(params, opt_state,
                                                  batch).compile()
@@ -209,7 +229,8 @@ class Trainer:
         t_plan = time.perf_counter() - t0
 
         bucket = self.planner.bucket_key(batch)
-        fn, is_new = self._get_step_fn(mask, batch)
+        k = max(int(getattr(info.plan, "microbatch", 1)), 1)
+        fn, is_new = self._get_step_fn(mask, batch, k)
         t1 = time.perf_counter()
         with self._mesh_ctx():
             params, opt_state, loss, metrics = fn(params, opt_state, batch)
@@ -217,15 +238,24 @@ class Trainer:
         t_step = time.perf_counter() - t1
         eff_tokens = int(metrics["tokens"])
         padded_tokens = int(np.prod(np.shape(batch["tokens"])))
+        if k > 1:
+            # a non-divisor split pads the batch axis to ceil(B/k)*k
+            # rows and computes over them — count what actually ran, or
+            # the padding-waste accounting understates those buckets
+            B0 = int(np.shape(batch["tokens"])[0])
+            padded_tokens = padded_tokens // B0 * (-(-B0 // k) * k)
         bs = self.cache_stats["bucket_steps"]
         bs[bucket] = bs.get(bucket, 0) + 1
         bt = self.cache_stats["bucket_tokens"].setdefault(bucket, [0, 0])
         bt[0] += padded_tokens
         bt[1] += eff_tokens
+        bm = self.cache_stats["bucket_microbatch"]
+        bm[bucket] = max(bm.get(bucket, 1), k)
         self.history.append(StepStats(loss, t_step, t_plan, is_new,
                                       info.plan.n_remat, eff_tokens, bucket,
                                       padded_tokens,
-                                      offload_units=info.plan.n_offload))
+                                      offload_units=info.plan.n_offload,
+                                      microbatches=k))
         return params, opt_state, loss
 
     def run(self, params, batches, opt_state: Optional[AdamWState] = None):
@@ -240,13 +270,18 @@ class Trainer:
         h = self.history
         if not h:
             return {}
-        warm = [s for s in h if not s.compile] or h
+        # throughput is measured over WARM (post-compile) steps only; a
+        # run where every step compiled has no warm-rate evidence, so
+        # the throughput fields are zeroed rather than computed from
+        # compile-dominated wall time (or dividing by an empty sum)
+        warm = [s for s in h if not s.compile]
         warm_s = max(float(np.sum([s.step_time_s for s in warm])), 1e-9)
         eff = float(np.sum([s.tokens for s in warm]))
         padded = float(np.sum([s.padded_tokens for s in warm]))
         return {
             "steps": len(h),
-            "mean_step_s": float(np.mean([s.step_time_s for s in warm])),
+            "mean_step_s": (float(np.mean([s.step_time_s for s in warm]))
+                            if warm else 0.0),
             "total_plan_s": float(np.sum([s.plan_time_s for s in h])),
             "compiles": int(sum(s.compile for s in h)),
             "prewarm_compiles": int(self.cache_stats["prewarm_compiles"]),
@@ -256,11 +291,13 @@ class Trainer:
             "mean_remat_units": float(np.mean([s.remat_units for s in h])),
             "mean_offload_units": float(np.mean([s.offload_units
                                                  for s in h])),
+            "mean_microbatches": float(np.mean([s.microbatches
+                                                for s in h])),
             # throughput over *effective* (unpadded) tokens — the number
             # padded and ragged runs are comparable on; the raw padded
             # rate rides along as a secondary diagnostic
-            "tokens_per_s": eff / warm_s,
-            "padded_tokens_per_s": padded / warm_s,
-            "pad_fraction": 1.0 - eff / max(padded, 1.0),
+            "tokens_per_s": eff / warm_s if warm else 0.0,
+            "padded_tokens_per_s": padded / warm_s if warm else 0.0,
+            "pad_fraction": (1.0 - eff / max(padded, 1.0)) if warm else 0.0,
             "final_loss": h[-1].loss,
         }

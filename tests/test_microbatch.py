@@ -1,0 +1,514 @@
+"""Tests for adaptive microbatching (ISSUE 5): batch splitting +
+token-weighted gradient accumulation numerics (attention and mamba2,
+ragged included), the joint (k, action-plan) scheduler search and its
+never-worse floor, simulator microbatch replay, planner threading and
+cache keys, trainer execution + stats, the chunked prefill serve fix,
+the engine-report microbatch column, and the summary zero-guard."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.actions import Action
+from repro.core import (DTRSimPlanner, MimosePlanner, ShuttlingCollector,
+                        SublinearPlanner, greedy_plan, greedy_plan_adaptive,
+                        simulate, simulate_sharded)
+from repro.core.planner import fixed_train_bytes
+from repro.launch.report import engine_report
+from repro.models.lm import build_model
+from repro.models.registry import get_config
+from repro.optim.adamw import AdamW
+from repro.train.accumulate import accumulated_grads, split_batch
+from repro.train.serve import generate, prefill_into_cache
+from repro.train.trainer import Trainer
+
+PCIE = 16e9
+
+
+def _ragged_batch(B, S, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(S // 4, S + 1, B).astype(np.int32)
+    lens[0] = S                              # keep the bucket honest
+    tokens = rng.integers(1, vocab, (B, S)).astype(np.int32)
+    w = (np.arange(S)[None, :] < lens[:, None]).astype(np.float32)
+    tokens = tokens * w.astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1)
+    labels[:, -1] = 0
+    return {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels),
+            "weights": jnp.asarray(w), "lengths": jnp.asarray(lens)}
+
+
+@pytest.fixture(scope="module")
+def attn_setup():
+    cfg = get_config("bert_base_paper").reduced(
+        num_layers=4, d_model=128, d_ff=256, vocab_size=512,
+        dtype="float32")
+    lm = build_model(cfg)
+    return cfg, lm, lm.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def mamba_setup():
+    cfg = get_config("mamba2_1p3b").reduced(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=256,
+        dtype="float32")
+    lm = build_model(cfg)
+    return cfg, lm, lm.init(jax.random.PRNGKey(1))
+
+
+# ---------------------------------------------------------------------------
+# split_batch
+# ---------------------------------------------------------------------------
+
+def test_split_batch_shapes_and_lengths():
+    b = _ragged_batch(6, 32, 100)
+    mbs = split_batch(b, 3)
+    assert mbs["tokens"].shape == (3, 2, 32)
+    assert mbs["lengths"].shape == (3, 2)
+    np.testing.assert_array_equal(
+        np.asarray(mbs["lengths"]).reshape(-1), np.asarray(b["lengths"]))
+
+
+def test_split_batch_pads_non_divisor_with_inert_rows():
+    b = _ragged_batch(5, 16, 100)
+    mbs = split_batch(b, 2)                  # 5 -> 6 rows, 2 x 3
+    assert mbs["tokens"].shape == (2, 3, 16)
+    flat_w = np.asarray(mbs["weights"]).reshape(6, 16)
+    flat_l = np.asarray(mbs["lengths"]).reshape(6)
+    assert flat_w[5].sum() == 0.0            # pad row carries no weight
+    assert flat_l[5] == 0                    # ...and zero length
+
+
+def test_split_batch_materialises_missing_weights():
+    b = {"tokens": jnp.ones((3, 8), jnp.int32),
+         "labels": jnp.ones((3, 8), jnp.int32)}
+    mbs = split_batch(b, 2)                  # 3 -> 4 rows
+    w = np.asarray(mbs["weights"]).reshape(4, 8)
+    assert w[:3].sum() == 3 * 8 and w[3].sum() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# accumulation numerics: k-microbatch scan == full-batch step (fp32)
+# ---------------------------------------------------------------------------
+
+def _assert_accumulation_matches(lm, params, batch, k):
+    (l0, m0), g0 = jax.value_and_grad(
+        lambda p: lm.loss(p, batch), has_aux=True)(params)
+    l1, m1, g1 = accumulated_grads(lm, params, batch, k)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(m0["tokens"]), float(m1["tokens"]))
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_accumulation_matches_full_batch_attention(attn_setup, k):
+    _, lm, params = attn_setup
+    batch = {"tokens": jnp.ones((4, 48), jnp.int32),
+             "labels": jnp.ones((4, 48), jnp.int32)}
+    _assert_accumulation_matches(lm, params, batch, k)
+
+
+def test_accumulation_matches_full_batch_ragged_attention(attn_setup):
+    """Ragged batch: lengths (and weights) split alongside tokens, and
+    the token-weighted accumulation reproduces the global weighted mean
+    even though the microbatch weights are unequal."""
+    _, lm, params = attn_setup
+    _assert_accumulation_matches(lm, params, _ragged_batch(4, 48, 512), 2)
+
+
+@pytest.mark.parametrize("k", [2, 3])
+def test_accumulation_matches_full_batch_mamba2(mamba_setup, k):
+    _, lm, params = mamba_setup
+    _assert_accumulation_matches(lm, params, _ragged_batch(6, 32, 256,
+                                                           seed=3), k)
+
+
+def test_accumulation_moe_all_pad_microbatch_inert():
+    """MoE regression: an all-pad microbatch (batch-axis padding when
+    k does not divide B) must contribute NOTHING — without the w_raw
+    guard its load-balance aux would enter with clamped weight 1."""
+    cfg = get_config("granite_moe_1b_a400m").reduced(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+        dtype="float32")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(2))
+    batch = {"tokens": jnp.ones((5, 16), jnp.int32),
+             "labels": jnp.ones((5, 16), jnp.int32),
+             "weights": jnp.ones((5, 16), jnp.float32)}
+    # k=2: rows pad 5 -> 6, no all-pad microbatch — the reference
+    l_ref, m_ref, _ = accumulated_grads(lm, params, batch, 2)
+    # k=4: rows pad 5 -> 8, the last microbatch is 2 pad rows
+    l4, m4, g4 = accumulated_grads(lm, params, batch, 4)
+    assert np.isfinite(float(l4))
+    assert float(m4["tokens"]) == float(m_ref["tokens"]) == 5 * 16
+    for g in jax.tree_util.tree_leaves(g4):
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_accumulation_with_action_plan(attn_setup):
+    """REMAT/OFFLOAD actions change placement, never values — the
+    accumulated step under a plan still matches the full-batch step."""
+    _, lm, params = attn_setup
+    batch = _ragged_batch(4, 48, 512, seed=5)
+    plan = (Action.REMAT, Action.KEEP, Action.OFFLOAD, Action.REMAT)
+    (l0, _), g0 = jax.value_and_grad(
+        lambda p: lm.loss(p, batch), has_aux=True)(params)
+    l1, _, g1 = accumulated_grads(lm, params, batch, 2, actions=plan)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# simulator microbatch replay
+# ---------------------------------------------------------------------------
+
+def test_simulate_microbatch_scales_totals_not_peak():
+    act = [100.0, 100.0]
+    s1 = simulate(act, [True, True], 10.0, flops=[1e9, 1e9])
+    s2 = simulate(act, [True, True], 10.0, flops=[1e9, 1e9],
+                  microbatch=2, accum_overhead_s=1e-3)
+    assert s2.peak_bytes == s1.peak_bytes        # per-microbatch vectors
+    assert s2.recompute_flops == 2 * s1.recompute_flops
+    assert s2.microbatches == 2
+    assert s2.accum_overhead_s == pytest.approx(1e-3)
+    assert s2.step_overhead_s == pytest.approx(
+        2 * s1.recompute_time_s + 1e-3)
+    sh = simulate_sharded(act, [True, True], 10.0, 4, flops=[1e9, 1e9],
+                          microbatch=3)
+    assert sh.microbatches == 3
+
+
+def test_simulate_default_is_k1_and_unchanged():
+    act = [5.0, 7.0, 11.0]
+    s = simulate(act, [True, False, True], 3.0)
+    assert s.microbatches == 1 and s.accum_overhead_s == 0.0
+    assert s.step_overhead_s == s.recompute_time_s
+
+
+# ---------------------------------------------------------------------------
+# joint (k, action-plan) scheduler search
+# ---------------------------------------------------------------------------
+
+def _vecs(act, out, off, fl):
+    """vectors_of_k from exact 1/k scaling (batch-linear toy units)."""
+    def f(k):
+        return {"est_mem": act / k, "output_bytes": out / k,
+                "offload_bytes": off / k, "flops": fl / k}
+    return f
+
+
+def test_adaptive_k1_identical_to_plain_greedy():
+    rng = np.random.default_rng(0)
+    act = rng.uniform(1e6, 1e8, 12)
+    fl = rng.uniform(1e9, 1e12, 12)
+    budget = act.sum() * 0.5
+    a = greedy_plan_adaptive(_vecs(act, act * 0.1, act * 0.8, fl),
+                             budget, 0.0, max_microbatches=1)
+    b = greedy_plan(act, budget, 0.0, flops=fl, output_bytes=act * 0.1,
+                    offload_bytes=act * 0.8)
+    assert a.actions == b.actions and a.microbatch == 1
+
+
+def test_adaptive_escalates_k_when_k1_infeasible():
+    """A budget below the k=1 global-minimum footprint (exhaustive over
+    every action plan) is reachable only by splitting: the search picks
+    k > 1, not infeasibility."""
+    import itertools
+    act = np.full(6, 1e7)
+    out = np.full(6, 1e5)
+    off = act * 0.8                          # 20% residue stays on device
+    fl = np.full(6, 1e10)
+    # every k=1 plan keeps residues/checkpoints + the executing unit's
+    # transient working set on device — the exhaustive minimum:
+    k1_floor = min(simulate(act, plan, 0.0, out, fl,
+                            offload_bytes=off).peak_bytes
+                   for plan in itertools.product((0, 1, 2), repeat=6))
+    budget = 0.8 * k1_floor
+    plan = greedy_plan_adaptive(_vecs(act, out, off, fl), budget, 0.0,
+                                max_microbatches=4)
+    assert plan.microbatch > 1
+    v = _vecs(act, out, off, fl)(plan.microbatch)
+    sim = simulate(v["est_mem"], plan.actions, 0.0, v["output_bytes"],
+                   v["flops"], offload_bytes=v["offload_bytes"],
+                   microbatch=plan.microbatch)
+    assert sim.fits(budget)
+
+
+def test_adaptive_never_worse_than_k1_randomized():
+    """The floor property: k=1 always competes, so at equal budget the
+    adaptive choice never has higher simulated step overhead."""
+    rng = np.random.default_rng(11)
+    exercised = 0
+    for trial in range(40):
+        n = int(rng.integers(2, 16))
+        act = rng.uniform(1e5, 1e7, n)
+        out = act * rng.uniform(0.01, 0.3, n)
+        off = act * rng.uniform(0.5, 1.0, n)
+        fl = rng.uniform(1e8, 1e12, n)
+        budget = float(rng.uniform(0.3, 1.2)) * act.sum() \
+            + 2 * act.max() + out.max()
+        vf = _vecs(act, out, off, fl)
+        p1 = greedy_plan_adaptive(vf, budget, 0.0, max_microbatches=1)
+        pk = greedy_plan_adaptive(vf, budget, 0.0, max_microbatches=4)
+
+        def replay(p):
+            v = vf(p.microbatch)
+            return simulate(v["est_mem"], p.actions, 0.0,
+                            v["output_bytes"], v["flops"],
+                            offload_bytes=v["offload_bytes"],
+                            microbatch=p.microbatch,
+                            accum_overhead_s=5e-4)
+        s1, sk = replay(p1), replay(pk)
+        if s1.fits(budget):
+            exercised += 1
+            assert sk.fits(budget), trial
+            assert sk.step_overhead_s <= s1.step_overhead_s + 1e-12, trial
+    assert exercised >= 10
+
+
+def test_adaptive_prefers_smaller_k_on_ties():
+    act = np.full(4, 1e6)
+    plan = greedy_plan_adaptive(_vecs(act, act * 0.1, act, act * 0.0 + 1e9),
+                                1e18, 0.0, max_microbatches=4)
+    assert plan.microbatch == 1              # ample budget: no split
+
+
+def test_adaptive_charges_pad_overhead():
+    """A candidate split that wastes compute on batch-axis pad rows
+    loses to an equally feasible split without the waste."""
+    act = np.full(4, 1e7)
+    fl = np.full(4, 1e9)
+    base = _vecs(act, act * 0.1, act * 0.9, fl)
+
+    def vf(k):
+        v = dict(base(k))
+        v["pad_overhead_s"] = 1.0 if k == 2 else 0.0   # k=2 pads rows
+        return v
+
+    budget = 1.8e7          # below the k=1 floor; k=2 and k=3 both fit
+    plan = greedy_plan_adaptive(vf, budget, 0.0, candidate_ks=[1, 2, 3])
+    assert plan.microbatch == 3              # waste-free split wins
+    # without the waste term the smaller split would win the tie-break
+    plan = greedy_plan_adaptive(base, budget, 0.0, candidate_ks=[1, 2, 3])
+    assert plan.microbatch == 2
+
+
+def test_planner_pad_waste_priced_for_non_divisor_k(attn_setup):
+    _, lm, _ = attn_setup
+    planner = MimosePlanner(lm, 1e12, max_microbatches=3)
+    batch = {"tokens": jnp.ones((8, 16), jnp.int32)}
+    fl = np.full(4, 1e9)
+    assert planner.pad_waste_s(batch, 2, fl) == 0.0       # 8 % 2 == 0
+    w3 = planner.pad_waste_s(batch, 3, fl)                # 8 -> 9 rows
+    assert w3 > 0.0
+    assert planner.pad_waste_s(batch, 3, None) == 0.0     # byte-only
+
+
+# ---------------------------------------------------------------------------
+# planner threading
+# ---------------------------------------------------------------------------
+
+def test_mimose_picks_split_for_tight_budget(attn_setup):
+    _, lm, params = attn_setup
+    batch = {"tokens": jnp.ones((8, 64), jnp.int32),
+             "labels": jnp.ones((8, 64), jnp.int32)}
+    col = ShuttlingCollector(lm).collect(params, batch)
+    act, out, off = (col.activation_vector(), col.output_vector(),
+                     col.offloadable_vector())
+    fixed = fixed_train_bytes(params)
+    k1_floor = simulate(act, [2] * len(act), fixed, out,
+                        offload_bytes=off).peak_bytes
+    budget = 0.5 * (fixed + k1_floor)
+    planner = MimosePlanner(lm, budget, quantum=32, warmup_samples=1,
+                            offload=True, max_microbatches=4)
+    mask, info = planner.plan(params, batch)
+    assert info.plan.microbatch > 1
+    # cache key embeds the knob: a second plan() is a pure hit
+    _, info2 = planner.plan(params, batch)
+    assert info2.cache_hit and info2.plan.microbatch == info.plan.microbatch
+
+
+def test_plan_cache_key_includes_max_microbatches(attn_setup):
+    _, lm, params = attn_setup
+    batch = {"tokens": jnp.ones((4, 64), jnp.int32),
+             "labels": jnp.ones((4, 64), jnp.int32)}
+    p1 = MimosePlanner(lm, 1e12, quantum=32, warmup_samples=1)
+    p2 = MimosePlanner(lm, 1e12, quantum=32, warmup_samples=1,
+                       max_microbatches=4)
+    assert p1.plan_key(batch) != p2.plan_key(batch)
+    assert p1.plan_key(batch)[:2] == p2.plan_key(batch)[:2]
+
+
+def test_candidate_ks_capped_at_batch_size(attn_setup):
+    _, lm, _ = attn_setup
+    planner = MimosePlanner(lm, 1e12, max_microbatches=8)
+    batch = {"tokens": jnp.ones((3, 16), jnp.int32)}
+    assert planner.candidate_microbatches(batch) == [1, 2, 3]
+
+
+def test_sublinear_and_dtr_thread_max_microbatches(attn_setup):
+    _, lm, params = attn_setup
+    batch = {"tokens": jnp.ones((4, 64), jnp.int32),
+             "labels": jnp.ones((4, 64), jnp.int32)}
+    sub = SublinearPlanner(lm, 1e12, max_input_size=4 * 128,
+                           warmup_samples=2, max_microbatches=2)
+    _, info = sub.plan(params, batch)
+    assert info.plan.microbatch in (1, 2)    # ample budget: 1 expected
+    assert info.plan.microbatch == 1
+    # DTR escalates only when evict-everything cannot fit
+    col = ShuttlingCollector(lm).collect(params, batch)
+    fixed = fixed_train_bytes(params)
+    tight = fixed + 1.5 * float(col.activation_vector().max())
+    dtr = DTRSimPlanner(lm, tight, max_microbatches=4)
+    _, info = dtr.plan(params, batch)
+    assert info.plan.microbatch > 1
+    ample = DTRSimPlanner(lm, 1e15, max_microbatches=4)
+    _, info = ample.plan(params, batch)
+    assert info.plan.microbatch == 1
+
+
+# ---------------------------------------------------------------------------
+# trainer execution + stats + report column
+# ---------------------------------------------------------------------------
+
+def test_trainer_runs_accumulated_step_end_to_end(attn_setup):
+    _, lm, params = attn_setup
+    batch = _ragged_batch(8, 60, 512, seed=7)
+    col = ShuttlingCollector(lm).collect(
+        params, {"tokens": jnp.ones((8, 64), jnp.int32)})
+    act, out, off = (col.activation_vector(), col.output_vector(),
+                     col.offloadable_vector())
+    fixed = fixed_train_bytes(params)
+    k1_floor = simulate(act, [2] * len(act), fixed, out,
+                        offload_bytes=off).peak_bytes
+    budget = 0.5 * (fixed + k1_floor)
+    planner = MimosePlanner(lm, budget, quantum=32, warmup_samples=1,
+                            offload=True, max_microbatches=2)
+    tr = Trainer(lm, planner, AdamW(lr=1e-3))
+    p = jax.tree_util.tree_map(jnp.copy, params)
+    opt_state = tr.optimizer.init(p)
+    for _ in range(2):
+        p, opt_state, loss = tr.step(p, opt_state, dict(batch))
+        assert np.isfinite(loss)
+    st = tr.history[-1]
+    assert st.microbatches == 2
+    s = tr.summary()
+    assert s["mean_microbatches"] == 2.0
+    # the report's per-bucket table shows where accumulation kicked in
+    rep = engine_report(tr, planner)
+    assert "| k |" in rep.splitlines()[0]
+    bucket = tr.history[-1].bucket
+    assert f"| {bucket} | 2 | 2 |" in rep
+
+
+def test_trainer_jit_cache_keys_on_microbatch(attn_setup):
+    """Same bucket + same actions but a different split must compile
+    separately (the accumulated step is a different executable)."""
+    _, lm, params = attn_setup
+    planner = MimosePlanner(lm, 1e12, quantum=32, warmup_samples=1)
+    tr = Trainer(lm, planner, AdamW(lr=1e-3))
+    batch = tr._prepare({"tokens": np.ones((4, 32), np.int32),
+                         "labels": np.ones((4, 32), np.int32)})
+    mask = (False,) * lm.num_plan_units()
+    assert tr._step_key(mask, batch, 1) != tr._step_key(mask, batch, 2)
+
+
+def test_padded_tokens_count_batch_axis_padding(attn_setup):
+    """A non-divisor split computes ceil(B/k)*k rows — the padding
+    accounting must count what actually ran, not the unsplit shape."""
+    from repro.core.planner import NonePlanner
+    _, lm, params = attn_setup
+
+    class ForcedSplit(NonePlanner):
+        def plan(self, p, batch):
+            mask, info = super().plan(p, batch)
+            info.plan.microbatch = 3
+            return mask, info
+
+    tr = Trainer(lm, ForcedSplit(lm), AdamW(lr=1e-3), bucket_pad=False)
+    p = jax.tree_util.tree_map(jnp.copy, params)
+    opt_state = tr.optimizer.init(p)
+    p, opt_state, _ = tr.step(p, opt_state, {
+        "tokens": np.ones((8, 16), np.int32),
+        "labels": np.ones((8, 16), np.int32)})
+    st = tr.history[-1]
+    assert st.microbatches == 3
+    assert st.padded_tokens == 9 * 16        # 8 rows padded to 9
+
+
+def test_summary_zeroed_throughput_without_warm_steps(attn_setup):
+    """Satellite: a run where every step compiled has no warm-rate
+    evidence — summary() returns zeroed throughput instead of a rate
+    computed from compile-dominated steps (and never raises)."""
+    _, lm, params = attn_setup
+    planner = MimosePlanner(lm, 1e12, quantum=32, warmup_samples=1)
+    tr = Trainer(lm, planner, AdamW(lr=1e-3))
+    p = jax.tree_util.tree_map(jnp.copy, params)
+    opt_state = tr.optimizer.init(p)
+    p, opt_state, _ = tr.step(p, opt_state, {
+        "tokens": np.ones((2, 32), np.int32),
+        "labels": np.ones((2, 32), np.int32)})
+    s = tr.summary()                          # single step == compile step
+    assert s["steps"] == 1 and s["compiles"] == 1
+    assert s["tokens_per_s"] == 0.0
+    assert s["padded_tokens_per_s"] == 0.0
+    assert s["mean_step_s"] == 0.0 and s["pad_fraction"] == 0.0
+    assert np.isfinite(s["final_loss"])
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (serve satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["bert_base_paper", "mamba2_1p3b",
+                                  "hymba_1p5b"])
+def test_chunked_prefill_generation_unchanged(arch):
+    cfg = get_config(arch).reduced(num_layers=2, d_model=64, d_ff=128,
+                                   vocab_size=128, dtype="float32")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 13), 1, 128)
+    l1, c1 = prefill_into_cache(lm, params, prompt,
+                                lm.init_cache(2, 17), chunk=1)
+    l2, c2 = prefill_into_cache(lm, params, prompt,
+                                lm.init_cache(2, 17), chunk=5)
+    # final-position logits match the token-by-token reference...
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               rtol=2e-5, atol=2e-5)
+    # ...and so do the advanced caches
+    for a, b in zip(jax.tree_util.tree_leaves(c1),
+                    jax.tree_util.tree_leaves(c2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+    # generation output is unchanged end to end
+    g1 = generate(lm, params, prompt, 4, prefill_chunk=1)
+    g2 = generate(lm, params, prompt, 4, prefill_chunk=5)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
+
+def test_chunked_prefill_dispatch_count(attn_setup, monkeypatch):
+    """The point of the fix: ceil(S/chunk) decode dispatches, not S."""
+    import repro.train.serve as serve
+    _, lm, params = attn_setup
+    prompt = jnp.ones((1, 33), jnp.int32)
+    cache = lm.init_cache(1, 33)
+    calls = {"n": 0}
+    real_jit = jax.jit
+
+    def counting_jit(fn, **kw):
+        jfn = real_jit(fn, **kw)
+
+        def wrapped(*a, **k):
+            calls["n"] += 1                   # one jitted step dispatch
+            return jfn(*a, **k)
+        return wrapped
+
+    monkeypatch.setattr(serve.jax, "jit", counting_jit)
+    serve.prefill_into_cache(lm, params, prompt, cache, chunk=8)
+    assert calls["n"] == 5                    # ceil(33 / 8), was 33
