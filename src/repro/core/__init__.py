@@ -8,8 +8,8 @@ from repro.core.estimator import (DecisionTreeEstimator, ESTIMATORS,  # noqa: F4
 from repro.core.planner import (MimosePlanner, NonePlanner, PlannerBase,  # noqa: F401
                                 fixed_train_bytes)
 from repro.core.baselines import DTRSimPlanner, SublinearPlanner  # noqa: F401
-from repro.core.scheduler import (Plan, build_buckets, greedy_plan,  # noqa: F401
-                                  greedy_plan_adaptive,
+from repro.core.scheduler import (Plan, build_buckets, escalate_plan,  # noqa: F401
+                                  greedy_plan, greedy_plan_adaptive,
                                   greedy_plan_reference, greedy_plan_sharded)
 from repro.core.simulator import (ShardedSimResult, SimResult,  # noqa: F401
                                   dtr_simulate, peak_if_checkpointing_unit,

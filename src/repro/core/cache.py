@@ -60,6 +60,11 @@ class LRUCache:
     def keys(self):
         return self._data.keys()
 
+    def pop(self, key, default=None):
+        """Remove one entry (plan poisoning after an OOM): explicit
+        invalidation, like ``clear``, does not count as an eviction."""
+        return self._data.pop(key, default)
+
     def clear(self) -> None:
         """Drop every entry (stale-plan flush); evictions keep counting
         only capacity-driven removals, not explicit invalidation."""

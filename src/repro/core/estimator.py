@@ -79,6 +79,34 @@ class PolyEstimator:
     def predict_total(self, input_size: float) -> float:
         return float(np.sum(self.predict(input_size)))
 
+    # -- persistence (preemption-safe checkpointing) --------------------------
+    def state_dict(self) -> dict:
+        """Serializable snapshot of the fit: the raw samples, which fully
+        determine the coefficients (fitting is ~1 ms, so restore refits
+        rather than trusting stored coefficients against drifted code)."""
+        return {"degree": int(self.degree),
+                "min_samples": int(self.min_samples),
+                "sizes": [float(s) for s in self._sizes],
+                "acts": [np.asarray(a, dtype=np.float64).tolist()
+                         for a in self._acts]}
+
+    def load_state(self, state: dict) -> "PolyEstimator":
+        """Restore from ``state_dict`` output.  ``degree``/``min_samples``
+        stay as constructed (the planner owns those knobs); only the
+        sample log is adopted.  Refits immediately when ready."""
+        sizes = list(state.get("sizes", []))
+        acts = state.get("acts", [])
+        if len(sizes) != len(acts):
+            raise ValueError(
+                f"estimator state corrupt: {len(sizes)} sizes vs "
+                f"{len(acts)} activation vectors")
+        self._sizes = [float(s) for s in sizes]
+        self._acts = [np.asarray(a, dtype=np.float64) for a in acts]
+        self._coeffs = None
+        if self.ready:
+            self.fit()
+        return self
+
     # -- evaluation helpers ----------------------------------------------------
     def mape(self, sizes: Sequence[float], truth: np.ndarray) -> float:
         """truth: (n_samples, n_units) actual bytes."""

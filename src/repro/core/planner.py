@@ -66,7 +66,8 @@ import numpy as np
 from repro.core.cache import LRUCache
 from repro.core.collector import ShuttlingCollector, input_size_of, _tree_bytes
 from repro.core.estimator import PolyEstimator
-from repro.core.scheduler import Plan, greedy_plan, greedy_plan_adaptive
+from repro.core.scheduler import (Plan, escalate_plan, greedy_plan,
+                                  greedy_plan_adaptive)
 from repro.data.pipeline import bucket_length
 from repro.launch.roofline import MICROBATCH_OVERHEAD_S, plan_unit_flops
 from repro.models.lm import LM
@@ -117,6 +118,24 @@ class PlannerBase:
         tuple; bool-mask consumers keep working because KEEP/REMAT are
         value-identical to False/True."""
         raise NotImplementedError
+
+    # -- OOM-watchdog hooks (repro.train.resilience) ---------------------
+    def record_oom(self, bucket: int) -> None:
+        """Book a device-OOM (real or injected) against ``bucket`` in
+        ``stats`` — a planner without a stats dict just drops it."""
+        st = getattr(self, "stats", None)
+        if isinstance(st, dict):
+            st["oom_events"] = st.get("oom_events", 0) + 1
+            by = st.setdefault("oom_by_bucket", {})
+            by[bucket] = by.get(bucket, 0) + 1
+
+    def escalate(self, params, batch) -> bool:
+        """Replace the cached plan for this batch's bucket with a more
+        memory-aggressive one (DTR-style recovery after an OOM).  The
+        base planner cannot — only planners with an online estimator
+        implement the ladder; returning False tells the watchdog to
+        re-raise instead of retrying."""
+        return False
 
     # -- shared mesh-vs-global accounting (one implementation for the
     # Mimose planner and both baselines, so their byte accounting can
@@ -336,7 +355,8 @@ class MimosePlanner(PlannerBase):
                  microbatch_overhead_s: float = MICROBATCH_OVERHEAD_S,
                  max_plans: int = 256,
                  audit_every: int = 0,
-                 audit_tol: float = 0.02):
+                 audit_tol: float = 0.02,
+                 escalate_shrink: float = 0.85):
         self.lm = lm
         self.mesh_budget = mesh_budget
         self.budget_bytes = self.resolve_budget_bytes(budget_bytes)
@@ -370,11 +390,24 @@ class MimosePlanner(PlannerBase):
         # bounded: a long-tailed bucket distribution must not grow the
         # plan cache without limit (the jit-step cache is bounded too)
         self.cache = LRUCache(max_plans)
-        # stats (paper Table 2)
+        # OOM recovery (repro.train.resilience): per-plan-key escalation
+        # level, and the per-rung budget shrink that keeps each retry
+        # strictly more aggressive than the last
+        self.escalate_shrink = float(escalate_shrink)
+        self._escalation: dict = {}
+        # every (input size, batch geometry) the estimators were fed —
+        # collection is abstract and shape-determined, so this log IS
+        # the warmup state: a snapshot carries it and a restore onto a
+        # different mesh replays it (eval_shape, zero FLOPs) instead of
+        # re-paying the online warmup Mimose exists to avoid
+        self._sample_log: list = []
+        # stats (paper Table 2) + resilience counters (watchdog/restore)
         self.stats = {"cache_hits": 0, "cache_misses": 0, "collections": 0,
                       "collect_time_s": 0.0, "estimate_time_s": 0.0,
                       "schedule_time_s": 0.0, "audits": 0, "refits": 0,
-                      "evictions": 0}
+                      "evictions": 0, "oom_events": 0, "escalations": 0,
+                      "poisoned_plans": 0, "restored_samples": 0,
+                      "restored_plans": 0, "dropped_plans": 0}
 
     # ------------------------------------------------------------------
     def _quantize(self, s: int) -> int:
@@ -383,11 +416,20 @@ class MimosePlanner(PlannerBase):
         # align only because both delegate to the same bucket_length
         return bucket_length(s, self.quantum)
 
-    def _feed_estimators(self, s: int, res) -> None:
+    def _feed_estimators(self, s: int, res, probe=None) -> None:
         """One collection feeds all three per-unit fits (activation,
-        boundary, offloadable) so they become ready together."""
+        boundary, offloadable) so they become ready together.  The
+        probe's geometry is logged so a snapshot can replay the sample
+        abstractly under a different mesh (``train/resilience.py``)."""
         self.estimator.add_sample(s, self.collected_vector(res))
         self._feed_hybrid_estimators(s, res)
+        if probe is not None:
+            self._sample_log.append(
+                {"size": int(s),
+                 "probe": {k: [list(np.shape(v)),
+                               str(getattr(v, "dtype", "int32"))]
+                           for k, v in probe.items()
+                           if np.shape(v)}})
 
     def _microbatch_vectors(self, params, batch, k: int, est1, flops1,
                             res) -> dict:
@@ -413,7 +455,7 @@ class MimosePlanner(PlannerBase):
                 # k=1): collect the split geometry too — exact vectors,
                 # and the extra sample feeds the fits
                 res_k = self.collector.collect(params, probe)
-                self._feed_estimators(size, res_k)
+                self._feed_estimators(size, res_k, probe)
                 self.stats["collections"] += 1
                 self.stats["collect_time_s"] += res_k.collect_time_s
                 est = self.collected_vector(res_k)
@@ -451,7 +493,7 @@ class MimosePlanner(PlannerBase):
             # collection carries the recompute-cost vector for this
             # geometry, so the scheduler reads it straight off)
             res = self.collector.collect(params, batch)
-            self._feed_estimators(s, res)
+            self._feed_estimators(s, res, batch)
             est = self.collected_vector(res)
             if self.cost_aware:
                 flops = res.flops_vector()
@@ -472,7 +514,7 @@ class MimosePlanner(PlannerBase):
                 truth = self.collected_vector(audit_res)
                 err = abs(truth.sum() - est.sum()) / max(truth.sum(), 1.0)
                 if err > self.audit_tol:
-                    self._feed_estimators(s, audit_res)
+                    self._feed_estimators(s, audit_res, batch)
                     self.estimator.fit()
                     self.est_output.fit()
                     self.est_offload.fit()
@@ -516,3 +558,97 @@ class MimosePlanner(PlannerBase):
         self.stats["evictions"] = self.cache.evictions
         return plan.as_actions(), PlanInfo(s, qs, False, collected, plan,
                                            t_est, t_sch, t_col)
+
+    # ------------------------------------------------------------------
+    def escalate(self, params, batch) -> bool:
+        """DTR-style recovery ladder after a device OOM on this batch's
+        bucket (called by the ``repro.train.resilience`` watchdog).
+
+        The predicted plan was wrong — reality ran out of memory — so
+        each call replaces the cached plan with a strictly more
+        aggressive one, planned against a budget shrunk by
+        ``escalate_shrink ** level`` (the prediction error is unknown;
+        the shrink is the safety margin).  Rungs, in order:
+
+          1. **more remat** — re-plan remat-only at the shrunken budget;
+          2. **offload** — upgrade the current plan's actions
+             (KEEP -> REMAT -> OFFLOAD) in density order via
+             ``scheduler.escalate_plan`` until the liveness replay fits;
+          3. **higher microbatch k** — double the gradient-accumulation
+             split (``greedy_plan_adaptive`` with the forced candidate),
+             repeating until ``k`` reaches the batch size.
+
+        The escalated plan is cached under the same plan key (the old
+        entry is poisoned), so later steps of the bucket reuse it.
+        Returns False when the ladder is exhausted (``k`` cannot grow
+        further) — the watchdog then re-raises the OOM.
+        """
+        key = self.plan_key(batch)
+        level = self._escalation.get(key, 0) + 1
+        s = input_size_of(batch)
+        bucket = self.bucket_key(batch)
+        B = int(np.shape(batch["tokens"])[0])
+
+        res = None
+        if not self.estimator.ready:
+            res = self.collector.collect(params, batch)
+            self._feed_estimators(s, res, batch)
+            self.stats["collections"] += 1
+            self.stats["collect_time_s"] += res.collect_time_s
+            est = self.collected_vector(res)
+        else:
+            est = self.estimator.predict(s)
+        div = self.activation_divisor_scalar()
+        flops = (res.flops_vector() if res is not None
+                 else plan_unit_flops(self.lm, batch))
+        fixed = self.resolve_fixed_bytes(params)
+        budget = self.budget_bytes * (self.escalate_shrink ** level)
+        prev = self.cache.get(key)
+        prev_k = max(int(getattr(prev, "microbatch", 1) or 1), 1)
+
+        if level == 1 and prev_k == 1:
+            # rung 1: more remat — the full cost-aware replan at the
+            # shrunken budget frees strictly more bytes than the plan
+            # that just OOMed
+            plan = greedy_plan(est / div, budget, fixed,
+                               tol=self.bucket_tol,
+                               flops=self.planning_flops(flops))
+        elif level == 2 and prev_k == 1:
+            # rung 2: offload — upgrade the failed plan's actions until
+            # the replayed peak fits (works even when the offload knob
+            # is off: the hybrid estimators are fed on every collection)
+            out_v = (self.collected_output_vector(res) if res is not None
+                     else self.est_output.predict(s)) / div
+            off_v = (self.collected_offload_vector(res) if res is not None
+                     else self.est_offload.predict(s)) / div
+            base = prev.actions if prev is not None else None
+            plan = escalate_plan(base, est / div,
+                                 self.planning_flops(flops), budget, fixed,
+                                 output_bytes=out_v, offload_bytes=off_v,
+                                 pcie_bytes_per_s=self.pcie_gbps * 1e9,
+                                 offload_overlap=self.offload_overlap)
+        else:
+            # rung 3+: gradient accumulation — shrink the per-microbatch
+            # footprint itself, the one lever that reaches below the
+            # bucket's k=1 minimum footprint
+            k_new = min(B, max(2, prev_k * 2))
+            if k_new <= prev_k:
+                self._escalation[key] = level
+                return False
+            plan = greedy_plan_adaptive(
+                lambda k: self._microbatch_vectors(params, batch, k,
+                                                   est, flops, res),
+                budget, fixed, candidate_ks=[k_new],
+                tol=self.bucket_tol,
+                pcie_bytes_per_s=self.pcie_gbps * 1e9,
+                offload_overlap=self.offload_overlap,
+                accum_overhead_s=self.microbatch_overhead_s)
+
+        if key in self.cache:
+            self.stats["poisoned_plans"] += 1
+        self.cache[key] = plan
+        self._escalation[key] = level
+        self.stats["escalations"] += 1
+        by = self.stats.setdefault("escalations_by_bucket", {})
+        by[bucket] = by.get(bucket, 0) + 1
+        return True

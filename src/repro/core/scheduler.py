@@ -285,18 +285,12 @@ def _hybrid_plan(est_mem, output_bytes, offload_bytes, flops,
         """Repair against the liveness replay: the byte bookkeeping
         ignores transient working sets, and nothing below the all-remat
         floor is reachable without OFFLOAD evicting the boundary
-        checkpoints.  Walk the candidate list in density order (cheap
-        remats first) and upgrade each unit's action (KEEP -> REMAT or
-        OFFLOAD, REMAT -> OFFLOAD) until the replayed peak fits."""
-        actions = list(plan.actions)
-        for _, i, code in candidates(True):
-            if replay(finish(actions)).peak_bytes <= budget_bytes:
-                break
-            if code == 1 and actions[i] is Action.KEEP:
-                actions[i] = Action.REMAT
-            elif code == 2 and actions[i] is not Action.OFFLOAD:
-                actions[i] = Action.OFFLOAD
-        return finish(actions)
+        checkpoints.  Delegates to the module-level ``escalate_plan``
+        (shared with the OOM watchdog's DTR-style recovery ladder)."""
+        return escalate_plan(plan.actions, est, fl, budget_bytes,
+                             fixed_bytes, output_bytes=out,
+                             offload_bytes=off, pcie_bytes_per_s=pcie,
+                             offload_overlap=overlap)
 
     # candidates: hybrid density greedy (plus its replay-repaired
     # escalation), remat-only under the same liveness accounting, and
@@ -316,6 +310,79 @@ def _hybrid_plan(est_mem, output_bytes, offload_bytes, flops,
     else:
         best = min(range(len(cands)), key=lambda i: sims[i].peak_bytes)
     return cands[best]
+
+
+def escalate_plan(actions, est_mem, flops, budget_bytes: float,
+                  fixed_bytes: float = 0.0, *,
+                  output_bytes: Sequence[float] | None = None,
+                  offload_bytes: Sequence[float] | None = None,
+                  pcie_bytes_per_s: float = PCIE_BW,
+                  offload_overlap: float = 0.5) -> Plan:
+    """DTR-style escalation of an existing action plan.
+
+    Starting from ``actions`` (a typed tuple, bool mask, or ``None`` for
+    all-KEEP), walk every (unit, action) candidate in bytes-freed-per-
+    cost-second density order and upgrade one rung at a time — KEEP ->
+    REMAT (or OFFLOAD when that is the denser move), REMAT -> OFFLOAD —
+    until the liveness replay of the plan fits ``budget_bytes``.  The
+    walk is the recovery policy Dynamic Tensor Rematerialization applies
+    when reality contradicts the plan: evict more, cheapest first,
+    rather than die.  Used in two places: ``_hybrid_plan`` repairs its
+    density-greedy candidate with it, and the OOM watchdog
+    (``repro.train.resilience``) escalates a bucket's cached plan after
+    a RESOURCE_EXHAUSTED step.  Returns the (possibly still infeasible —
+    callers decide what to do when even all-OFFLOAD cannot fit) plan
+    with full byte/FLOP accounting stamped.
+    """
+    from repro.core.simulator import simulate
+
+    est = np.asarray(est_mem, dtype=np.float64)
+    n = est.size
+    fl = (np.asarray(flops, dtype=np.float64) if flops is not None
+          else np.zeros(n))
+    out = (np.asarray(output_bytes, dtype=np.float64)
+           if output_bytes is not None else np.zeros(n))
+    off = (np.clip(np.asarray(offload_bytes, dtype=np.float64), 0.0, est)
+           if offload_bytes is not None else np.zeros(n))
+    total = float(est.sum())
+    excess = total + float(fixed_bytes) - float(budget_bytes)
+
+    t_re = fl / PEAK_FLOPS
+    t_off = (2.0 * off / float(pcie_bytes_per_s)
+             * max(0.0, min(1.0, 1.0 - offload_overlap)))
+    freed_re = np.maximum(est - out, 0.0)
+    freed_off = off
+    cand = []
+    for i in range(n):
+        if freed_re[i] > 0:
+            cand.append((freed_re[i] / max(t_re[i], 1e-12), i, 1))
+        if freed_off[i] > 0:
+            cand.append((freed_off[i] / max(t_off[i], 1e-12), i, 2))
+    cand.sort(key=lambda c: (-c[0], c[1], c[2]))
+
+    def finish(acts) -> Plan:
+        arr = np.array([int(a) for a in acts], dtype=np.int64)
+        covered = float(freed_re[arr == 1].sum() + freed_off[arr == 2].sum())
+        plan = Plan([], excess, covered, total, actions=tuple(acts))
+        plan.recompute_flops = float(fl[arr == 1].sum())
+        plan.offload_bytes = float(off[arr == 2].sum())
+        return plan
+
+    acts = (list(as_actions(actions)) if actions is not None
+            else [Action.KEEP] * n)
+    assert len(acts) == n, (len(acts), n)
+    for _, i, code in cand:
+        peak = simulate(est, tuple(acts), fixed_bytes, out, fl,
+                        offload_bytes=off,
+                        pcie_bytes_per_s=pcie_bytes_per_s,
+                        overlap=offload_overlap).peak_bytes
+        if peak <= budget_bytes:
+            break
+        if code == 1 and acts[i] is Action.KEEP:
+            acts[i] = Action.REMAT
+        elif code == 2 and acts[i] is not Action.OFFLOAD:
+            acts[i] = Action.OFFLOAD
+    return finish(acts)
 
 
 def _cost_aware_plan(est_mem: Sequence[float], flops: Sequence[float],

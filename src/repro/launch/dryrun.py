@@ -139,6 +139,10 @@ def main(argv=None):
     ap.add_argument("--json", default=None, help="append JSONL records here")
     ap.add_argument("--resume", action="store_true",
                     help="skip pairs already recorded ok in --json")
+    ap.add_argument("--keep-going", action="store_true",
+                    help="exit 0 even when sweep points failed (the "
+                         "failure summary still prints); default is a "
+                         "non-zero exit so CI flags partial sweeps")
     args = ap.parse_args(argv)
 
     done = set()
@@ -165,7 +169,8 @@ def main(argv=None):
                   if args.mesh_shape else None)
 
     out = open(args.json, "a") if args.json else None
-    n_fail = 0
+    n_ok = n_skip = 0
+    failures = []
     for arch, shape in pairs:
         for mp in meshes:
             mesh_name = ("x".join(str(s) for s in mesh_shape) if mesh_shape
@@ -185,10 +190,31 @@ def main(argv=None):
                 out.write(line + "\n")
                 out.flush()
             if rec["status"] == "error":
-                n_fail += 1
+                failures.append(rec)
+            elif rec["status"] == "skipped":
+                n_skip += 1
+            else:
+                n_ok += 1
     if out:
         out.close()
-    sys.exit(1 if n_fail else 0)
+    # failure summary: a long sweep's errors must not scroll away into
+    # the per-point JSONL noise — CI readers (and humans) get one table
+    if failures:
+        print(f"\n{len(failures)} of {n_ok + n_skip + len(failures)} "
+              "sweep point(s) FAILED:", file=sys.stderr)
+        print(f"  {'arch':<24} {'shape':<12} {'mesh':<10} error",
+              file=sys.stderr)
+        for r in failures:
+            err = r.get("error", "?")
+            print(f"  {r['arch']:<24} {r['shape']:<12} {r['mesh']:<10} "
+                  f"{err[:90]}", file=sys.stderr)
+        if args.keep_going:
+            print("--keep-going: exiting 0 despite failures",
+                  file=sys.stderr)
+    else:
+        print(f"\nsweep clean: {n_ok} ok, {n_skip} skipped",
+              file=sys.stderr)
+    sys.exit(0 if (args.keep_going or not failures) else 1)
 
 
 if __name__ == "__main__":

@@ -51,6 +51,25 @@ def engine_report(trainer, planner=None) -> str:
         lines.append(f"plan cache: {stats['cache_hits']} hits, "
                      f"{stats['cache_misses']} misses, "
                      f"{stats['collections']} collections")
+    # elastic-resilience counters (repro.train.resilience) — only when
+    # something actually happened, so quiet runs keep a quiet report
+    wd = getattr(trainer, "watchdog", None)
+    sn = getattr(trainer, "snapshots", None)
+    oom = int(wd.stats["oom_events"]) if wd is not None else 0
+    snaps = int(sn.written) if sn is not None else 0
+    restores = int(getattr(trainer, "restores", 0))
+    if oom or snaps or restores:
+        lines.append(f"resilience: {snaps} snapshot(s) written, "
+                     f"{restores} restore(s), {oom} OOM event(s), "
+                     f"{wd.stats['escalations'] if wd else 0} escalation(s), "
+                     f"{wd.stats['retry_successes'] if wd else 0} retry "
+                     f"success(es), "
+                     f"{wd.stats['retry_failures'] if wd else 0} retry "
+                     "failure(s)")
+        esc_by = (stats or {}).get("escalations_by_bucket", {})
+        if esc_by:
+            per = ", ".join(f"{b}: {n}" for b, n in sorted(esc_by.items()))
+            lines.append(f"escalations by bucket: {per}")
     return "\n".join(lines)
 
 

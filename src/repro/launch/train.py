@@ -16,6 +16,7 @@ param/batch/optimizer NamedShardings.
 from __future__ import annotations
 
 import argparse
+import itertools
 import time
 
 import jax
@@ -32,6 +33,8 @@ from repro.models.lm import build_model
 from repro.models.registry import get_config
 from repro.optim.adamw import AdamW, cosine_schedule
 from repro.train import checkpoint as ckpt
+from repro.train.resilience import (FaultInjector, OOMWatchdog,
+                                    SnapshotManager)
 from repro.train.trainer import Trainer
 
 
@@ -78,6 +81,33 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true",
                     help="reduced model variant (CPU demo)")
     ap.add_argument("--save", default=None)
+    # elastic resilience (repro.train.resilience)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for periodic full-state snapshots "
+                         "(params + optimizer + planner state + data "
+                         "cursor); atomic, hash-manifested, last-k kept")
+    ap.add_argument("--checkpoint-every-steps", type=int, default=25,
+                    help="snapshot cadence in steps (0 = off)")
+    ap.add_argument("--checkpoint-every-secs", type=float, default=0.0,
+                    help="wall-clock snapshot cadence in seconds (0 = off; "
+                         "fires on the first step boundary past the mark)")
+    ap.add_argument("--checkpoint-keep", type=int, default=3,
+                    help="retain the newest K snapshots")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest valid snapshot from "
+                         "--checkpoint-dir (params, optimizer, planner "
+                         "warmup state, data cursor) and continue — works "
+                         "across a different --mesh-shape: estimator "
+                         "samples replay abstractly under the new mesh")
+    ap.add_argument("--max-oom-retries", type=int, default=3,
+                    help="OOM watchdog: retries per step, each after a "
+                         "DTR-style plan escalation (more remat -> "
+                         "offload -> higher microbatch split)")
+    ap.add_argument("--inject-oom", default=None,
+                    help="deterministic fault injection for drills: an "
+                         "int N (fail the first N step executions) or "
+                         'JSON like {"bucket": {"1024": 2}} — also '
+                         "readable from $MIMOSE_INJECT_OOM")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -145,13 +175,41 @@ def main(argv=None):
     }[args.planner]()
 
     opt = AdamW(lr=cosine_schedule(args.lr, 10, args.steps))
-    trainer = Trainer(lm, planner, opt, mesh=mesh)
+    snapshots = None
+    if args.checkpoint_dir:
+        snapshots = SnapshotManager(args.checkpoint_dir,
+                                    every_steps=args.checkpoint_every_steps,
+                                    every_secs=args.checkpoint_every_secs,
+                                    keep=args.checkpoint_keep)
+    injector = (FaultInjector(args.inject_oom) if args.inject_oom
+                else FaultInjector.from_env())
+    watchdog = OOMWatchdog(max_retries=args.max_oom_retries,
+                           injector=injector)
+    trainer = Trainer(lm, planner, opt, mesh=mesh,
+                      watchdog=watchdog, snapshots=snapshots)
     batches = make_batches(args.dataset, batch_size=args.batch_size,
                            vocab_size=cfg.vocab_size,
                            num_batches=args.steps, quantum=args.quantum,
                            seed=0)
     t0 = time.time()
     opt_state = opt.init(params)
+    if args.resume:
+        if snapshots is None:
+            ap.error("--resume needs --checkpoint-dir")
+        restored = snapshots.restore_latest(params_like=params,
+                                            opt_like=opt_state,
+                                            planner=planner)
+        params, opt_state = restored.params, restored.opt_state
+        trainer.global_step = restored.step
+        trainer.data_cursor = restored.data_cursor
+        trainer.restores = 1
+        # the batch stream is deterministic (seeded) — the cursor says
+        # how many batches the snapshot already consumed
+        batches = itertools.islice(iter(batches), restored.data_cursor,
+                                   None)
+        print(f"resumed {restored.path} at step {restored.step} "
+              f"(cursor={restored.data_cursor}, "
+              f"planner={restored.planner_summary})")
     if args.prewarm:
         likely = top_buckets(args.dataset, batch_size=args.batch_size,
                              quantum=max(args.quantum,
@@ -169,6 +227,11 @@ def main(argv=None):
             print(f"step {i:4d} loss {loss:.4f} S={batch['tokens'].shape[1]}"
                   f" remat={st.remat_units} offload={st.offload_units}"
                   f" k={st.microbatches} step_s={st.step_time_s:.3f}")
+    if snapshots is not None:
+        final = snapshots.save(step=trainer.global_step, params=params,
+                               opt_state=opt_state, planner=planner,
+                               data_cursor=trainer.data_cursor)
+        print("snapshot", final)
     print(f"done in {time.time() - t0:.1f}s")
     print("summary:", trainer.summary())
     print("\nengine report (where the padding went):")

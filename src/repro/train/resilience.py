@@ -1,0 +1,509 @@
+"""Elastic resilience: full-state snapshots, mesh-reshape resume, and an
+OOM watchdog with DTR-style plan escalation.
+
+An input-aware planner earns its keep on long, preemptible training
+jobs — exactly the jobs that get killed, resized, and OOM-killed.  This
+module makes the engine survive all three:
+
+**Full-state snapshots** (``SnapshotManager``).  A snapshot is a
+directory holding params, optimizer state, the *planner's* learned
+state (estimator sample logs, plan cache, escalation levels), and a
+meta record (step counter, data cursor, RNG seed).  Writes are
+crash-consistent: everything lands in a tmp directory, a manifest with
+per-file sha256 hashes is written last, and one ``os.replace`` makes
+the snapshot visible.  Retention keeps the last *k*; restore walks
+newest-to-oldest past any corrupt/partial snapshot.
+
+**Mesh-reshape resume** (``planner_state`` / ``restore_planner_state``).
+The planner's warmup state is shape-determined: collection is abstract
+(``jax.eval_shape``), so the log of (input size, probe geometry) pairs
+fully determines every estimator sample.  A snapshot therefore carries
+that log, and restoring onto a *different* ``--mesh-shape`` replays it
+abstractly under the new mesh — zero FLOPs, zero training steps of
+re-warmup.  Plan-cache entries are re-keyed: plans whose stored mesh
+signature matches the live mesh are restored verbatim, the rest are
+dropped (their byte math was per-device under the old mesh).
+
+**OOM watchdog** (``OOMWatchdog`` + ``FaultInjector``).  The trainer
+wraps each jitted step; on a device OOM (real ``RESOURCE_EXHAUSTED``
+or injected ``SimulatedOOM``) it books the failure against the bucket,
+poisons the cached plan and compiled step, and asks the planner to
+``escalate`` — the DTR-style ladder (more remat, then offload, then a
+higher gradient-accumulation split) — before retrying, up to a bounded
+number of attempts.  ``MIMOSE_INJECT_OOM`` drives deterministic fault
+injection for tests and chaos drills.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import time
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+from repro.actions import Action
+from repro.core.scheduler import Plan
+from repro.train import checkpoint
+from repro.train.checkpoint import CheckpointError
+
+STATE_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+class SimulatedOOM(RuntimeError):
+    """Injected device OOM.  The message embeds RESOURCE_EXHAUSTED so the
+    watchdog's matcher treats it exactly like the real XLA error."""
+
+    def __init__(self, step: int, bucket: int):
+        super().__init__(
+            f"RESOURCE_EXHAUSTED: injected OOM (step={step}, "
+            f"bucket={bucket}) [simulated by repro.train.resilience]")
+        self.step = step
+        self.bucket = bucket
+
+
+class FaultInjector:
+    """Deterministic OOM injection, driven by env or constructor.
+
+    Spec formats (``MIMOSE_INJECT_OOM`` or the ``spec`` argument):
+
+    * ``"3"`` (int string) — fail the first 3 step *executions*;
+    * ``'{"bucket": {"1024": 2}, "step": {"5": 1}}'`` — fail the next 2
+      executions of bucket 1024 and 1 execution of global step 5.
+
+    Counters decrement on each injected failure, so a retried step that
+    escalated past its quota succeeds — exactly the shape the watchdog
+    tests need.
+    """
+
+    ENV = "MIMOSE_INJECT_OOM"
+
+    def __init__(self, spec: Any = None):
+        self._first_n = 0
+        self._by_bucket: dict = {}
+        self._by_step: dict = {}
+        self.injected = 0
+        if spec is None:
+            return
+        if isinstance(spec, str):
+            spec = spec.strip()
+            if not spec:
+                return
+            try:
+                spec = int(spec)
+            except ValueError:
+                try:
+                    spec = json.loads(spec)
+                except json.JSONDecodeError as e:
+                    raise ValueError(
+                        f"{self.ENV}: expected an int or a JSON object, "
+                        f"got {spec!r}") from e
+        if isinstance(spec, int):
+            self._first_n = max(int(spec), 0)
+        elif isinstance(spec, dict):
+            self._by_bucket = {int(k): int(v)
+                               for k, v in (spec.get("bucket") or {}).items()}
+            self._by_step = {int(k): int(v)
+                             for k, v in (spec.get("step") or {}).items()}
+        else:
+            raise ValueError(f"{self.ENV}: unsupported spec {spec!r}")
+
+    @classmethod
+    def from_env(cls) -> Optional["FaultInjector"]:
+        raw = os.environ.get(cls.ENV)
+        if not raw:
+            return None
+        return cls(raw)
+
+    @property
+    def armed(self) -> bool:
+        return (self._first_n > 0 or any(v > 0 for v in self._by_bucket.values())
+                or any(v > 0 for v in self._by_step.values()))
+
+    def should_fail(self, *, step: int, bucket: int) -> bool:
+        if self._first_n > 0:
+            self._first_n -= 1
+            self.injected += 1
+            return True
+        if self._by_step.get(int(step), 0) > 0:
+            self._by_step[int(step)] -= 1
+            self.injected += 1
+            return True
+        if self._by_bucket.get(int(bucket), 0) > 0:
+            self._by_bucket[int(bucket)] -= 1
+            self.injected += 1
+            return True
+        return False
+
+
+def _xla_oom_types() -> tuple:
+    try:  # jaxlib's runtime error type (name has moved across versions)
+        from jax.errors import JaxRuntimeError  # type: ignore
+        return (JaxRuntimeError,)
+    except Exception:
+        pass
+    try:
+        from jaxlib.xla_extension import XlaRuntimeError  # type: ignore
+        return (XlaRuntimeError,)
+    except Exception:
+        return ()
+
+
+_XLA_ERRORS = _xla_oom_types()
+_OOM_MARKERS = ("RESOURCE_EXHAUSTED", "Out of memory", "out of memory",
+                "OOM when allocating")
+
+
+class OOMWatchdog:
+    """Classifies device OOMs and books them; the retry/escalate loop
+    itself lives in ``Trainer.step`` (it owns the caches being poisoned).
+    """
+
+    def __init__(self, *, max_retries: int = 3,
+                 injector: Optional[FaultInjector] = None):
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        self.max_retries = int(max_retries)
+        self.injector = injector if injector is not None \
+            else FaultInjector.from_env()
+        self.stats = {"oom_events": 0, "escalations": 0,
+                      "retry_successes": 0, "retry_failures": 0,
+                      "oom_by_bucket": {}}
+
+    @staticmethod
+    def is_oom(e: BaseException) -> bool:
+        """True for real XLA RESOURCE_EXHAUSTED errors and injected ones.
+        Matched on the message because jaxlib collapses all runtime
+        failures into one exception type."""
+        if isinstance(e, SimulatedOOM):
+            return True
+        if _XLA_ERRORS and not isinstance(e, _XLA_ERRORS):
+            return False
+        msg = str(e)
+        return any(m in msg for m in _OOM_MARKERS)
+
+    def maybe_inject(self, *, step: int, bucket: int) -> None:
+        """Raise a SimulatedOOM when the injector says this execution
+        fails.  Called by the trainer *before* launching the jit step,
+        so no real work (or donated buffer) is consumed by the fault."""
+        if self.injector is not None and self.injector.should_fail(
+                step=step, bucket=bucket):
+            raise SimulatedOOM(step, bucket)
+
+    def on_oom(self, bucket: int) -> None:
+        self.stats["oom_events"] += 1
+        by = self.stats["oom_by_bucket"]
+        by[int(bucket)] = by.get(int(bucket), 0) + 1
+
+    def on_escalation(self) -> None:
+        self.stats["escalations"] += 1
+
+    def on_retry_success(self) -> None:
+        self.stats["retry_successes"] += 1
+
+    def on_retry_failure(self) -> None:
+        self.stats["retry_failures"] += 1
+
+
+# ---------------------------------------------------------------------------
+# planner state (de)serialization
+# ---------------------------------------------------------------------------
+def _plan_to_dict(plan: Plan) -> dict:
+    return {"actions": [int(a) for a in plan.as_actions()],
+            "excess_bytes": float(plan.excess_bytes),
+            "covered_bytes": float(plan.covered_bytes),
+            "est_activation_bytes": float(plan.est_activation_bytes),
+            "recompute_flops": float(plan.recompute_flops),
+            "offload_bytes": float(plan.offload_bytes),
+            "microbatch": int(plan.microbatch)}
+
+
+def _plan_from_dict(d: dict) -> Plan:
+    return Plan([], float(d["excess_bytes"]), float(d["covered_bytes"]),
+                float(d["est_activation_bytes"]),
+                recompute_flops=float(d.get("recompute_flops", 0.0)),
+                actions=tuple(Action(int(a)) for a in d["actions"]),
+                offload_bytes=float(d.get("offload_bytes", 0.0)),
+                microbatch=int(d.get("microbatch", 1)))
+
+
+def planner_state(planner) -> dict:
+    """Serializable snapshot of everything the planner learned online:
+    estimator sample sets, the (size, probe geometry) sample log that
+    makes them replayable under a new mesh, the plan cache (keyed by
+    stringified mesh signature), and escalation levels.  Planners
+    without an estimator (baselines) serialize to a name-only stub."""
+    state = {"version": STATE_VERSION, "name": getattr(planner, "name", "?")}
+    if not hasattr(planner, "estimator"):
+        return state
+    state["mesh_sig"] = repr(planner.mesh_sig())
+    state["estimators"] = {
+        "activation": planner.estimator.state_dict(),
+        "output": planner.est_output.state_dict(),
+        "offload": planner.est_offload.state_dict(),
+    }
+    state["sample_log"] = list(getattr(planner, "_sample_log", []))
+    plans = []
+    esc = getattr(planner, "_escalation", {})
+    for key in list(planner.cache.keys()):
+        bucket, sig, max_mb = key
+        plans.append({"bucket": int(bucket), "mesh_sig": repr(sig),
+                      "max_microbatches": int(max_mb),
+                      "escalation": int(esc.get(key, 0)),
+                      "plan": _plan_to_dict(planner.cache[key])})
+    state["plans"] = plans
+    return state
+
+
+def _probe_struct(probe: dict) -> dict:
+    """Rebuild an abstract batch from a logged probe geometry."""
+    return {k: jax.ShapeDtypeStruct(tuple(int(d) for d in shape),
+                                    np.dtype(dtype))
+            for k, (shape, dtype) in probe.items()}
+
+
+def restore_planner_state(planner, state: dict, params=None) -> dict:
+    """Load a ``planner_state`` snapshot into a live planner.
+
+    Same mesh signature: estimator sample sets load verbatim (and refit,
+    ~1 ms).  Different mesh (elastic resume after a reshape): the stored
+    per-device byte vectors are invalid, so the sample *log* is replayed
+    abstractly through the live collector — each probe geometry goes
+    through ``jax.eval_shape`` under the new mesh's divisors, zero FLOPs
+    — and only plans whose stored signature matches the live mesh are
+    restored.  ``params`` is required for replay (the collector traces
+    the model).  Returns a small summary dict for reporting.
+    """
+    summary = {"mesh_changed": False, "restored_samples": 0,
+               "restored_plans": 0, "dropped_plans": 0}
+    if not hasattr(planner, "estimator") or "estimators" not in state:
+        return summary
+    live_sig = repr(planner.mesh_sig())
+    stored_sig = state.get("mesh_sig", live_sig)
+    sample_log = list(state.get("sample_log", []))
+    if stored_sig == live_sig:
+        ests = state["estimators"]
+        planner.estimator.load_state(ests["activation"])
+        planner.est_output.load_state(ests["output"])
+        planner.est_offload.load_state(ests["offload"])
+        planner._sample_log = sample_log
+        summary["restored_samples"] = planner.estimator.num_samples
+    else:
+        summary["mesh_changed"] = True
+        if params is None:
+            raise ValueError(
+                "restore_planner_state: mesh signature changed "
+                f"({stored_sig} -> {live_sig}) — replaying the sample log "
+                "needs params (pass the restored model params)")
+        planner._sample_log = []
+        for rec in sample_log:
+            probe = _probe_struct(rec["probe"])
+            res = planner.collector.collect(params, probe)
+            planner._feed_estimators(int(rec["size"]), res, probe)
+            summary["restored_samples"] += 1
+        if planner.estimator.ready:
+            planner.estimator.fit()
+            planner.est_output.fit()
+            planner.est_offload.fit()
+    # plans: rebuild keys from the LIVE planner's signature; entries from
+    # another mesh are per-device math for the wrong mesh — drop them
+    for rec in state.get("plans", []):
+        if rec.get("mesh_sig") != live_sig:
+            summary["dropped_plans"] += 1
+            continue
+        key = (int(rec["bucket"]), planner.mesh_sig(),
+               int(rec["max_microbatches"]))
+        planner.cache[key] = _plan_from_dict(rec["plan"])
+        if rec.get("escalation"):
+            planner._escalation[key] = int(rec["escalation"])
+        summary["restored_plans"] += 1
+    st = getattr(planner, "stats", None)
+    if isinstance(st, dict):
+        st["restored_samples"] = st.get("restored_samples", 0) \
+            + summary["restored_samples"]
+        st["restored_plans"] = st.get("restored_plans", 0) \
+            + summary["restored_plans"]
+        st["dropped_plans"] = st.get("dropped_plans", 0) \
+            + summary["dropped_plans"]
+    return summary
+
+
+# ---------------------------------------------------------------------------
+# snapshots
+# ---------------------------------------------------------------------------
+class SnapshotError(RuntimeError):
+    """A snapshot directory failed validation (missing/corrupt files)."""
+
+
+@dataclasses.dataclass
+class Restored:
+    """Everything ``SnapshotManager.restore_latest`` hands back."""
+    params: Any
+    opt_state: Any
+    step: int
+    data_cursor: int
+    planner_summary: dict
+    path: str
+    meta: dict
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+class SnapshotManager:
+    """Periodic, atomic, self-validating training snapshots.
+
+    ``due(step)`` fires on a step cadence (``every_steps``) and/or a
+    wall-clock cadence (``every_secs``) — preemption-safe jobs want the
+    latter so a slow bucket cannot stretch the exposure window.  Each
+    ``save`` writes params/opt/planner/meta into ``<dir>/.tmp-*``, then
+    a ``manifest.json`` carrying the sha256 + byte count of every file
+    (written LAST: a manifest's existence certifies a complete write),
+    then atomically renames to ``snap-<step>``.  ``keep`` bounds disk:
+    oldest snapshots beyond the last *k* are deleted after each save.
+    """
+
+    MANIFEST = "manifest.json"
+
+    def __init__(self, directory: str, *, every_steps: int = 0,
+                 every_secs: float = 0.0, keep: int = 3):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
+        self.dir = directory
+        self.every_steps = int(every_steps)
+        self.every_secs = float(every_secs)
+        self.keep = int(keep)
+        self.written = 0
+        self._last_save = time.monotonic()
+        os.makedirs(self.dir, exist_ok=True)
+
+    # -- cadence -------------------------------------------------------
+    def due(self, step: int) -> bool:
+        if self.every_steps > 0 and step > 0 \
+                and step % self.every_steps == 0:
+            return True
+        if self.every_secs > 0 \
+                and time.monotonic() - self._last_save >= self.every_secs:
+            return True
+        return False
+
+    # -- write ---------------------------------------------------------
+    def save(self, *, step: int, params, opt_state, planner=None,
+             data_cursor: int = 0, extra: Optional[dict] = None) -> str:
+        final = os.path.join(self.dir, f"snap-{step:08d}")
+        tmp = os.path.join(self.dir, f".tmp-snap-{step:08d}")
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        checkpoint.save(os.path.join(tmp, "params.ckpt"), params)
+        checkpoint.save(os.path.join(tmp, "opt.ckpt"), opt_state)
+        if planner is not None:
+            with open(os.path.join(tmp, "planner.msgpack"), "wb") as f:
+                f.write(msgpack.packb(planner_state(planner),
+                                      use_bin_type=True))
+        meta = {"step": int(step), "data_cursor": int(data_cursor),
+                "wall_time": time.time(), "extra": extra or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        files = {name: {"sha256": _sha256(os.path.join(tmp, name)),
+                        "bytes": os.path.getsize(os.path.join(tmp, name))}
+                 for name in sorted(os.listdir(tmp))}
+        # manifest last: its presence certifies every file above landed
+        with open(os.path.join(tmp, self.MANIFEST), "w") as f:
+            json.dump({"step": int(step), "files": files}, f, indent=1)
+        if os.path.isdir(final):          # re-save of the same step
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self.written += 1
+        self._last_save = time.monotonic()
+        self._retain()
+        return final
+
+    def _retain(self) -> None:
+        snaps = self.snapshots()
+        for old in snaps[:-self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # -- read ----------------------------------------------------------
+    def snapshots(self) -> list:
+        """All snapshot dirs, oldest first (tmp dirs excluded)."""
+        if not os.path.isdir(self.dir):
+            return []
+        return sorted(os.path.join(self.dir, d)
+                      for d in os.listdir(self.dir)
+                      if d.startswith("snap-"))
+
+    def latest(self) -> Optional[str]:
+        snaps = self.snapshots()
+        return snaps[-1] if snaps else None
+
+    def verify(self, path: str) -> dict:
+        """Validate one snapshot dir against its manifest.  Returns the
+        manifest; raises SnapshotError on any missing/corrupt file."""
+        man_path = os.path.join(path, self.MANIFEST)
+        if not os.path.isfile(man_path):
+            raise SnapshotError(f"{path}: no manifest (partial write?)")
+        try:
+            with open(man_path) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise SnapshotError(f"{path}: unreadable manifest: {e}") from e
+        for name, rec in manifest.get("files", {}).items():
+            fp = os.path.join(path, name)
+            if not os.path.isfile(fp):
+                raise SnapshotError(f"{path}: missing file {name}")
+            if os.path.getsize(fp) != rec["bytes"]:
+                raise SnapshotError(
+                    f"{path}: {name} is {os.path.getsize(fp)} bytes, "
+                    f"manifest says {rec['bytes']}")
+            if _sha256(fp) != rec["sha256"]:
+                raise SnapshotError(f"{path}: {name} content hash mismatch")
+        return manifest
+
+    def restore_latest(self, *, params_like, opt_like, planner=None) -> Restored:
+        """Restore the newest snapshot that validates, walking past any
+        corrupt/partial one (a preempted save leaves either a manifest-
+        less tmp dir — never listed — or an older complete snapshot)."""
+        errors = []
+        for path in reversed(self.snapshots()):
+            try:
+                self.verify(path)
+                with open(os.path.join(path, "meta.json")) as f:
+                    meta = json.load(f)
+                params = checkpoint.load(os.path.join(path, "params.ckpt"),
+                                         params_like)
+                opt_state = checkpoint.load(os.path.join(path, "opt.ckpt"),
+                                            opt_like)
+                psummary = {}
+                ppath = os.path.join(path, "planner.msgpack")
+                if planner is not None and os.path.isfile(ppath):
+                    with open(ppath, "rb") as f:
+                        pstate = msgpack.unpackb(f.read(), raw=False,
+                                                 strict_map_key=False)
+                    psummary = restore_planner_state(planner, pstate,
+                                                     params=params)
+                return Restored(params=params, opt_state=opt_state,
+                                step=int(meta["step"]),
+                                data_cursor=int(meta.get("data_cursor", 0)),
+                                planner_summary=psummary, path=path,
+                                meta=meta)
+            except (SnapshotError, CheckpointError, OSError,
+                    KeyError, ValueError) as e:
+                errors.append(f"{path}: {e}")
+                continue
+        raise SnapshotError(
+            "no restorable snapshot under " + self.dir
+            + ("; tried:\n  " + "\n  ".join(errors) if errors else ""))

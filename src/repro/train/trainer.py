@@ -75,13 +75,23 @@ class Trainer:
                  remat_policy=None,
                  bucket_pad: bool = True,
                  mesh=None,
-                 max_cached_steps: int = 64):
+                 max_cached_steps: int = 64,
+                 watchdog=None,
+                 snapshots=None):
         self.lm = lm
         self.planner = planner
         self.optimizer = optimizer or AdamW()
         self.remat_policy = remat_policy
         self.bucket_pad = bucket_pad
         self.mesh = mesh                  # jax.sharding.Mesh or None
+        # elastic resilience (repro.train.resilience): the OOM watchdog
+        # wraps step execution in a bounded retry/escalate loop, and the
+        # snapshot manager periodically persists full training state
+        self.watchdog = watchdog          # resilience.OOMWatchdog or None
+        self.snapshots = snapshots        # resilience.SnapshotManager or None
+        self.global_step = 0              # across restarts (set on resume)
+        self.data_cursor = 0              # batches consumed from the stream
+        self.restores = 0                 # snapshots restored into this run
         # bounded LRU: a long-tailed bucket distribution must not pin a
         # compiled executable per rare bucket forever
         self._step_cache = LRUCache(max_cached_steps)
@@ -229,12 +239,45 @@ class Trainer:
         t_plan = time.perf_counter() - t0
 
         bucket = self.planner.bucket_key(batch)
-        k = max(int(getattr(info.plan, "microbatch", 1)), 1)
-        fn, is_new = self._get_step_fn(mask, batch, k)
-        t1 = time.perf_counter()
-        with self._mesh_ctx():
-            params, opt_state, loss, metrics = fn(params, opt_state, batch)
-        loss = float(loss)
+        wd = self.watchdog
+        attempt = 0
+        while True:
+            k = max(int(getattr(info.plan, "microbatch", 1)), 1)
+            fn, is_new = self._get_step_fn(mask, batch, k)
+            t1 = time.perf_counter()
+            try:
+                if wd is not None:
+                    # injected faults fire BEFORE the jit call so no
+                    # donated buffer is consumed by a simulated failure
+                    wd.maybe_inject(step=self.global_step, bucket=bucket)
+                with self._mesh_ctx():
+                    params, opt_state, loss, metrics = fn(params, opt_state,
+                                                          batch)
+                # device sync: an async allocation failure surfaces here,
+                # inside the try, not on a later unrelated line
+                loss = float(loss)
+            except Exception as e:
+                if wd is None or not wd.is_oom(e):
+                    raise
+                # the plan predicted this bucket fits; reality disagreed —
+                # book it, poison the compiled step for the failed plan,
+                # and ask the planner for a strictly more aggressive one
+                wd.on_oom(bucket)
+                self.planner.record_oom(bucket)
+                self._step_cache.pop(self._step_key(mask, batch, k))
+                attempt += 1
+                if attempt > wd.max_retries \
+                        or not self.planner.escalate(params, batch):
+                    wd.on_retry_failure()
+                    raise
+                wd.on_escalation()
+                t0b = time.perf_counter()
+                mask, info = self.planner.plan(params, batch)
+                t_plan += time.perf_counter() - t0b
+                continue
+            break
+        if wd is not None and attempt:
+            wd.on_retry_success()
         t_step = time.perf_counter() - t1
         eff_tokens = int(metrics["tokens"])
         padded_tokens = int(np.prod(np.shape(batch["tokens"])))
@@ -256,6 +299,12 @@ class Trainer:
                                       padded_tokens,
                                       offload_units=info.plan.n_offload,
                                       microbatches=k))
+        self.global_step += 1
+        self.data_cursor += 1
+        if self.snapshots is not None and self.snapshots.due(self.global_step):
+            self.snapshots.save(step=self.global_step, params=params,
+                                opt_state=opt_state, planner=self.planner,
+                                data_cursor=self.data_cursor)
         return params, opt_state, loss
 
     def run(self, params, batches, opt_state: Optional[AdamWState] = None):
@@ -300,4 +349,20 @@ class Trainer:
             "padded_tokens_per_s": padded / warm_s if warm else 0.0,
             "pad_fraction": (1.0 - eff / max(padded, 1.0)) if warm else 0.0,
             "final_loss": h[-1].loss,
+            # elastic-resilience counters (zero when the watchdog /
+            # snapshot manager are not attached)
+            "snapshots_written": int(self.snapshots.written)
+            if self.snapshots is not None else 0,
+            "restores": int(self.restores),
+            "oom_events": int(self.watchdog.stats["oom_events"])
+            if self.watchdog is not None else 0,
+            "escalations": int(self.watchdog.stats["escalations"])
+            if self.watchdog is not None else 0,
+            "retry_successes": int(self.watchdog.stats["retry_successes"])
+            if self.watchdog is not None else 0,
+            "retry_failures": int(self.watchdog.stats["retry_failures"])
+            if self.watchdog is not None else 0,
+            "escalations_by_bucket": dict(
+                getattr(self.planner, "stats", {})
+                .get("escalations_by_bucket", {})),
         }

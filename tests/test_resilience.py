@@ -1,0 +1,502 @@
+"""Elastic-resilience tests: strict checkpoint validation, atomic
+snapshots with corruption fallback, kill-and-resume (including onto a
+reshaped mesh), and the OOM watchdog's DTR-style escalation ladder
+under deterministic fault injection."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MeshBudget, MimosePlanner
+from repro.data.pipeline import make_batches
+from repro.models.lm import build_model
+from repro.models.registry import get_config
+from repro.optim.adamw import AdamW
+from repro.train import checkpoint
+from repro.train.checkpoint import CheckpointError
+from repro.train.resilience import (FaultInjector, OOMWatchdog, Restored,
+                                    SimulatedOOM, SnapshotManager,
+                                    planner_state, restore_planner_state)
+from repro.train.trainer import Trainer
+
+pytestmark = pytest.mark.resilience
+
+HBM = float(1 << 30)          # roomy per-device budget: plans stay no-op
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("bert_base_paper").reduced(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=256)
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    return cfg, lm, params
+
+
+def _batch(S, B=2):
+    return {"tokens": jnp.ones((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32)}
+
+
+def _copy(tree):
+    """Private copy of a param/opt pytree: the jit train step donates
+    its inputs, so a shared fixture tree must never be stepped on."""
+    return jax.tree_util.tree_map(lambda x: jnp.array(x), tree)
+
+
+def _batches(cfg, n, B=2, seed=0):
+    return list(make_batches("swag", batch_size=B,
+                             vocab_size=cfg.vocab_size, num_batches=n,
+                             quantum=64, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint.load validation
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": jnp.ones((3,), jnp.float32)}
+    p = str(tmp_path / "t.ckpt")
+    checkpoint.save(p, tree)
+    back = checkpoint.load(p, jax.tree_util.tree_map(jnp.zeros_like, tree))
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_checkpoint_loaded_leaves_are_writable_copies(tmp_path):
+    # np.frombuffer over the msgpack payload is read-only; load must
+    # copy so downstream numpy consumers can mutate without tripping
+    p = str(tmp_path / "t.ckpt")
+    checkpoint.save(p, {"w": jnp.ones((4,), jnp.float32)})
+    back = checkpoint.load(p, {"w": jnp.zeros((4,), jnp.float32)})
+    host = np.asarray(back["w"])
+    buf = np.frombuffer(b"\x00" * 16, dtype=np.float32)
+    assert not buf.flags.writeable          # the failure mode guarded against
+    assert host.copy().flags.writeable
+
+
+def test_checkpoint_dtype_mismatch_names_leaf(tmp_path):
+    p = str(tmp_path / "t.ckpt")
+    checkpoint.save(p, {"emb": jnp.ones((2, 2), jnp.float32)})
+    with pytest.raises(CheckpointError, match="dtype mismatch.*emb"):
+        checkpoint.load(p, {"emb": jnp.ones((2, 2), jnp.int32)})
+
+
+def test_checkpoint_shape_mismatch_names_leaf(tmp_path):
+    p = str(tmp_path / "t.ckpt")
+    checkpoint.save(p, {"w": jnp.ones((2, 2), jnp.float32)})
+    with pytest.raises(CheckpointError, match="w"):
+        checkpoint.load(p, {"w": jnp.ones((3, 2), jnp.float32)})
+
+
+def test_checkpoint_treedef_mismatch(tmp_path):
+    p = str(tmp_path / "t.ckpt")
+    checkpoint.save(p, {"a": jnp.ones((2,), jnp.float32)})
+    with pytest.raises(CheckpointError, match="treedef mismatch"):
+        checkpoint.load(p, {"b": jnp.ones((2,), jnp.float32)})
+
+
+def test_checkpoint_truncated_file(tmp_path):
+    p = str(tmp_path / "t.ckpt")
+    checkpoint.save(p, {"w": jnp.ones((64,), jnp.float32)})
+    raw = open(p, "rb").read()
+    with open(p, "wb") as f:
+        f.write(raw[: len(raw) // 2])
+    with pytest.raises(CheckpointError):
+        checkpoint.load(p, {"w": jnp.ones((64,), jnp.float32)})
+
+
+# ---------------------------------------------------------------------------
+# fault injector
+# ---------------------------------------------------------------------------
+
+def test_injector_first_n():
+    inj = FaultInjector("2")
+    hits = [inj.should_fail(step=i, bucket=0) for i in range(4)]
+    assert hits == [True, True, False, False]
+    assert inj.injected == 2
+
+
+def test_injector_by_bucket_and_step():
+    inj = FaultInjector({"bucket": {128: 1}, "step": {5: 1}})
+    assert not inj.should_fail(step=0, bucket=64)
+    assert inj.should_fail(step=1, bucket=128)       # bucket quota
+    assert not inj.should_fail(step=2, bucket=128)   # quota spent
+    assert inj.should_fail(step=5, bucket=64)        # step quota
+    assert not inj.should_fail(step=5, bucket=64)
+
+
+def test_injector_from_env(monkeypatch):
+    monkeypatch.setenv(FaultInjector.ENV, '{"step": {"0": 1}}')
+    inj = FaultInjector.from_env()
+    assert inj is not None and inj.armed
+    assert inj.should_fail(step=0, bucket=0)
+    monkeypatch.delenv(FaultInjector.ENV)
+    assert FaultInjector.from_env() is None
+
+
+def test_injector_rejects_garbage():
+    with pytest.raises(ValueError):
+        FaultInjector("not json {")
+
+
+def test_watchdog_classifies_oom():
+    assert OOMWatchdog.is_oom(SimulatedOOM(0, 128))
+    assert "RESOURCE_EXHAUSTED" in str(SimulatedOOM(0, 128))
+    assert not OOMWatchdog.is_oom(ValueError("shape mismatch"))
+
+
+# ---------------------------------------------------------------------------
+# snapshots: atomicity, retention, corruption fallback
+# ---------------------------------------------------------------------------
+
+def _tiny_state():
+    params = {"w": jnp.arange(4, dtype=jnp.float32)}
+    opt = {"m": jnp.zeros((4,), jnp.float32)}
+    return params, opt
+
+
+def test_snapshot_roundtrip_and_manifest(tmp_path):
+    params, opt = _tiny_state()
+    sm = SnapshotManager(str(tmp_path), every_steps=5, keep=3)
+    path = sm.save(step=5, params=params, opt_state=opt, data_cursor=5)
+    man = json.load(open(os.path.join(path, sm.MANIFEST)))
+    assert set(man["files"]) >= {"params.ckpt", "opt.ckpt", "meta.json"}
+    r = sm.restore_latest(params_like=jax.tree_util.tree_map(
+        jnp.zeros_like, params), opt_like=opt)
+    assert isinstance(r, Restored)
+    assert r.step == 5 and r.data_cursor == 5
+    np.testing.assert_array_equal(np.asarray(r.params["w"]),
+                                  np.asarray(params["w"]))
+
+
+def test_snapshot_due_cadence(tmp_path):
+    sm = SnapshotManager(str(tmp_path), every_steps=4)
+    assert [s for s in range(1, 9) if sm.due(s)] == [4, 8]
+    sm2 = SnapshotManager(str(tmp_path), every_steps=0, every_secs=0.0)
+    assert not any(sm2.due(s) for s in range(1, 9))
+    sm3 = SnapshotManager(str(tmp_path), every_secs=1e-9)
+    assert sm3.due(1)        # wall-clock trigger fires immediately
+
+
+def test_snapshot_retention(tmp_path):
+    params, opt = _tiny_state()
+    sm = SnapshotManager(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        sm.save(step=step, params=params, opt_state=opt)
+    snaps = sm.snapshots()
+    assert len(snaps) == 2
+    assert snaps[-1].endswith("snap-00000004")
+    assert sm.written == 4
+
+
+def test_restore_skips_corrupt_snapshot(tmp_path):
+    params, opt = _tiny_state()
+    sm = SnapshotManager(str(tmp_path), keep=3)
+    sm.save(step=1, params=params, opt_state=opt, data_cursor=1)
+    good = np.asarray(params["w"]).copy()
+    newest = sm.save(step=2, params={"w": params["w"] * 7.0},
+                     opt_state=opt, data_cursor=2)
+    # bit-flip the newest snapshot's params: manifest hash must catch it
+    target = os.path.join(newest, "params.ckpt")
+    raw = bytearray(open(target, "rb").read())
+    raw[-1] ^= 0xFF
+    with open(target, "wb") as f:
+        f.write(bytes(raw))
+    r = sm.restore_latest(params_like=params, opt_like=opt)
+    assert r.step == 1        # fell back past the corrupt snap-2
+    np.testing.assert_array_equal(np.asarray(r.params["w"]), good)
+
+
+def test_restore_ignores_partial_tmp_dir(tmp_path):
+    params, opt = _tiny_state()
+    sm = SnapshotManager(str(tmp_path))
+    sm.save(step=1, params=params, opt_state=opt)
+    os.makedirs(str(tmp_path / ".tmp-snap-00000009"))  # simulated crash
+    assert len(sm.snapshots()) == 1
+    assert sm.restore_latest(params_like=params, opt_like=opt).step == 1
+
+
+def test_restore_empty_dir_raises(tmp_path):
+    sm = SnapshotManager(str(tmp_path))
+    with pytest.raises(Exception, match="no restorable snapshot"):
+        sm.restore_latest(params_like={}, opt_like={})
+
+
+# ---------------------------------------------------------------------------
+# planner state: serialize / restore, same mesh and reshaped mesh
+# ---------------------------------------------------------------------------
+
+def test_planner_state_same_mesh_roundtrip(small):
+    cfg, lm, params = small
+    src = MimosePlanner(lm, HBM, quantum=64, warmup_samples=1)
+    src.plan(params, _batch(64))
+    src.plan(params, _batch(128))
+    state = planner_state(src)
+    assert state["sample_log"] and state["plans"]
+
+    dst = MimosePlanner(lm, HBM, quantum=64, warmup_samples=1)
+    summary = restore_planner_state(dst, state)
+    assert not summary["mesh_changed"]
+    assert summary["restored_plans"] == len(state["plans"])
+    assert dst.estimator.num_samples == src.estimator.num_samples
+    np.testing.assert_allclose(dst.estimator.predict(96),
+                               src.estimator.predict(96))
+    # a seen bucket is a pure cache hit on the restored planner
+    dst.plan(params, _batch(64))
+    assert dst.stats["cache_hits"] == 1
+    assert dst.stats["collections"] == 0
+
+
+def test_planner_state_mesh_reshape_replays_samples(small):
+    cfg, lm, params = small
+    mb_a = MeshBudget.from_shape([1, 2], HBM)
+    mb_b = MeshBudget.from_shape([2, 1], HBM)
+    src = MimosePlanner(lm, None, quantum=64, warmup_samples=1,
+                        mesh_budget=mb_a)
+    src.plan(params, _batch(64))
+    state = planner_state(src)
+
+    dst = MimosePlanner(lm, None, quantum=64, warmup_samples=1,
+                        mesh_budget=mb_b)
+    summary = restore_planner_state(dst, state, params=params)
+    assert summary["mesh_changed"]
+    assert summary["restored_samples"] == len(state["sample_log"])
+    # plans keyed to the old mesh signature must not survive the reshape
+    assert summary["restored_plans"] == 0
+    assert summary["dropped_plans"] == len(state["plans"])
+    assert dst.estimator.ready
+    assert dst.stats["dropped_plans"] == len(state["plans"])
+    # the replayed fit is the NEW mesh's per-device bytes, not the old's
+    fresh = MimosePlanner(lm, None, quantum=64, warmup_samples=1,
+                          mesh_budget=mb_b)
+    fresh.plan(params, _batch(64))
+    np.testing.assert_allclose(dst.estimator.predict(128),
+                               fresh.estimator.predict(128), rtol=1e-6)
+
+
+def test_planner_state_mesh_reshape_requires_params(small):
+    cfg, lm, params = small
+    src = MimosePlanner(lm, None, quantum=64, warmup_samples=1,
+                        mesh_budget=MeshBudget.from_shape([1, 2], HBM))
+    src.plan(params, _batch(64))
+    dst = MimosePlanner(lm, None, quantum=64, warmup_samples=1,
+                        mesh_budget=MeshBudget.from_shape([2, 1], HBM))
+    with pytest.raises(ValueError, match="needs params"):
+        restore_planner_state(dst, planner_state(src))
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume: trainer-level, across a mesh reshape
+# ---------------------------------------------------------------------------
+
+def test_kill_and_resume_across_mesh_reshape(small, tmp_path):
+    cfg, lm, params0 = small
+    batches = _batches(cfg, 8)
+    opt = AdamW(lr=1e-3)
+
+    def fresh(mesh_shape):
+        planner = MimosePlanner(lm, None, quantum=64, warmup_samples=1,
+                                mesh_budget=MeshBudget.from_shape(
+                                    mesh_shape, HBM))
+        return Trainer(lm, planner, opt)
+
+    # reference: 8 uninterrupted steps under mesh (1, 2)
+    tr_a = fresh([1, 2])
+    params = _copy(params0)
+    opt_state = opt.init(params)
+    ref_losses = []
+    for b in batches:
+        params, opt_state, loss = tr_a.step(params, opt_state, b)
+        ref_losses.append(loss)
+
+    # preempted run: 4 steps, snapshot, "kill"
+    tr_b = fresh([1, 2])
+    tr_b.snapshots = SnapshotManager(str(tmp_path), keep=2)
+    params = _copy(params0)
+    opt_state = opt.init(params)
+    for b in batches[:4]:
+        params, opt_state, _ = tr_b.step(params, opt_state, b)
+    tr_b.snapshots.save(step=tr_b.global_step, params=params,
+                        opt_state=opt_state, planner=tr_b.planner,
+                        data_cursor=tr_b.data_cursor)
+
+    # resume onto the RESHAPED mesh (2, 1): new process, new planner
+    tr_c = fresh([2, 1])
+    r = tr_c.snapshots_restored = SnapshotManager(str(tmp_path)) \
+        .restore_latest(params_like=params0,
+                        opt_like=opt.init(params0),
+                        planner=tr_c.planner)
+    assert r.step == 4 and r.data_cursor == 4
+    assert r.planner_summary["mesh_changed"]
+    assert r.planner_summary["restored_samples"] >= 1
+    params, opt_state = r.params, r.opt_state
+    tr_c.global_step, tr_c.data_cursor = r.step, r.data_cursor
+    tr_c.restores = 1
+    res_losses = []
+    for b in batches[r.data_cursor:]:
+        params, opt_state, loss = tr_c.step(params, opt_state, b)
+        res_losses.append(loss)
+
+    # loss trajectory matches the uninterrupted run (same numerics
+    # modulo remat re-association; generous rtol documents the bound)
+    np.testing.assert_allclose(res_losses, ref_losses[4:], rtol=1e-4)
+    # zero planner re-warmup for seen buckets: the replayed sample log
+    # made the estimator ready, so no collection and no refit ran
+    assert tr_c.planner.stats["collections"] == 0
+    assert tr_c.planner.stats["refits"] == 0
+    # recompiles bounded by the resumed run's own bucket set (a new
+    # process always compiles each bucket once — never more)
+    n_buckets = len({tr_c.planner.bucket_key(tr_c._prepare(b))
+                     for b in batches[4:]})
+    assert tr_c.cache_stats["compiles"] <= n_buckets
+    assert tr_c.summary()["restores"] == 1
+
+
+# ---------------------------------------------------------------------------
+# OOM watchdog: escalation ladder, bounded retries, cache poisoning
+# ---------------------------------------------------------------------------
+
+def test_watchdog_escalation_ladder_and_recovery(small):
+    cfg, lm, params = small
+    planner = MimosePlanner(lm, HBM, quantum=64, warmup_samples=1)
+    tr = Trainer(lm, planner, AdamW())
+    params = _copy(params)
+    opt_state = tr.optimizer.init(params)
+    batch = _batch(128, B=4)
+    bucket = planner.bucket_key(tr._prepare(batch))
+    key0 = planner.plan_key(tr._prepare(batch))
+    wd = OOMWatchdog(max_retries=3,
+                     injector=FaultInjector({"bucket": {bucket: 3}}))
+    tr.watchdog = wd
+
+    params2, opt_state, loss = tr.step(params, opt_state, batch)
+    assert np.isfinite(loss)
+    # the ladder ran all three rungs: remat replan, action upgrade,
+    # then a doubled gradient-accumulation split
+    assert wd.stats["oom_events"] == 3
+    assert wd.stats["escalations"] == 3
+    assert wd.stats["retry_successes"] == 1
+    assert wd.stats["retry_failures"] == 0
+    assert wd.stats["oom_by_bucket"] == {bucket: 3}
+    assert planner.stats["oom_events"] == 3
+    assert planner.stats["escalations"] == 3
+    assert planner._escalation[key0] == 3
+    assert planner.cache.get(key0).microbatch == 2   # rung 3 doubled k
+    # the quota is spent: the next step of the bucket sails through
+    params3, opt_state, loss2 = tr.step(params2, opt_state, batch)
+    assert wd.stats["oom_events"] == 3
+    assert tr.summary()["oom_events"] == 3
+    assert tr.summary()["escalations_by_bucket"] == {bucket: 3}
+
+
+def test_watchdog_poisons_plan_and_step_cache(small):
+    cfg, lm, params = small
+    planner = MimosePlanner(lm, HBM, quantum=64, warmup_samples=1)
+    tr = Trainer(lm, planner, AdamW())
+    params = _copy(params)
+    opt_state = tr.optimizer.init(params)
+    batch = _batch(64, B=4)
+    bucket = planner.bucket_key(tr._prepare(batch))
+    tr.watchdog = OOMWatchdog(max_retries=2,
+                              injector=FaultInjector({"bucket": {bucket: 1}}))
+    tr.step(params, opt_state, batch)
+    # the failed attempt's plan was replaced under the same key and its
+    # compiled step evicted — exactly one poisoning each
+    assert planner.stats["poisoned_plans"] == 1
+    assert tr.cache_stats["compiles"] == 2   # failed plan + escalated plan
+
+
+def test_watchdog_bounded_retries_reraises(small):
+    cfg, lm, params = small
+    planner = MimosePlanner(lm, HBM, quantum=64, warmup_samples=1)
+    wd = OOMWatchdog(max_retries=1, injector=FaultInjector("10"))
+    tr = Trainer(lm, planner, AdamW(), watchdog=wd)
+    opt_state = tr.optimizer.init(params)
+    with pytest.raises(SimulatedOOM):
+        tr.step(params, opt_state, _batch(64, B=4))
+    assert wd.stats["retry_failures"] == 1
+    assert wd.stats["retry_successes"] == 0
+    assert wd.stats["oom_events"] == 2       # initial try + 1 retry
+
+
+def test_watchdog_ignores_non_oom_errors(small):
+    cfg, lm, params = small
+    planner = MimosePlanner(lm, HBM, quantum=64, warmup_samples=1)
+    wd = OOMWatchdog(max_retries=3)
+    tr = Trainer(lm, planner, AdamW(), watchdog=wd)
+    opt_state = tr.optimizer.init(params)
+    bad = {"tokens": jnp.ones((2, 64), jnp.int32)}    # no labels: real bug
+    with pytest.raises(Exception):
+        tr.step(params, opt_state, bad)
+    assert wd.stats["oom_events"] == 0        # not booked as an OOM
+
+
+def test_engine_report_shows_resilience_counters(small):
+    from repro.launch.report import engine_report
+    cfg, lm, params = small
+    planner = MimosePlanner(lm, HBM, quantum=64, warmup_samples=1)
+    tr = Trainer(lm, planner, AdamW())
+    params = _copy(params)
+    opt_state = tr.optimizer.init(params)
+    batch = _batch(64, B=4)
+    bucket = planner.bucket_key(tr._prepare(batch))
+    tr.watchdog = OOMWatchdog(max_retries=3,
+                              injector=FaultInjector({"bucket": {bucket: 1}}))
+    tr.step(params, opt_state, batch)
+    rep = engine_report(tr, planner)
+    assert "resilience:" in rep
+    assert "1 OOM event(s)" in rep
+    assert "escalations by bucket" in rep
+
+
+# ---------------------------------------------------------------------------
+# bench gate degrades gracefully
+# ---------------------------------------------------------------------------
+
+def _gate(args):
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "bench_gate", os.path.join(os.path.dirname(__file__), "..",
+                                   "tools", "bench_gate.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.main(args)
+
+
+def test_bench_gate_skips_when_fresh_missing(tmp_path):
+    assert _gate(["--fresh", str(tmp_path / "nope.json")]) == 0
+
+
+def test_bench_gate_skips_when_baseline_missing(tmp_path):
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text(json.dumps({"acceptance": {"g": True}}))
+    assert _gate(["--fresh", str(fresh),
+                  "--committed", str(tmp_path / "missing.json")]) == 0
+
+
+def test_bench_gate_skips_when_acceptance_key_absent(tmp_path):
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text(json.dumps({"acceptance": {"g": True}}))
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"scheduler": {}}))
+    assert _gate(["--fresh", str(fresh), "--committed", str(base)]) == 0
+
+
+def test_bench_gate_fails_on_corrupt_json(tmp_path):
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text("{not json")
+    assert _gate(["--fresh", str(fresh)]) == 1
+
+
+def test_bench_gate_still_gates_when_armed(tmp_path):
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text(json.dumps({"acceptance": {"g": False}}))
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"acceptance": {"g": True}}))
+    assert _gate(["--fresh", str(fresh), "--committed", str(base)]) == 1

@@ -96,10 +96,36 @@ def main(argv=None) -> int:
                          "hardware comparable to the committed baseline")
     args = ap.parse_args(argv)
 
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-    with open(args.committed) as f:
-        committed = json.load(f)
+    # graceful degradation, not a crash: a branch that predates the
+    # baseline (or a fresh clone that skipped the smoke run) should see
+    # a clear SKIP, while a *corrupt* artifact still fails loudly
+    try:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+    except FileNotFoundError:
+        print(f"bench gate: SKIP — fresh run artifact not found "
+              f"({args.fresh}); run benchmarks/bench_engine.py first")
+        return 0
+    except json.JSONDecodeError as e:
+        print(f"bench gate: FAIL — {args.fresh} is not valid JSON ({e})")
+        return 1
+    try:
+        with open(args.committed) as f:
+            committed = json.load(f)
+    except FileNotFoundError:
+        print(f"bench gate: SKIP — no committed baseline at "
+              f"{args.committed}; nothing to gate against (commit one "
+              "from a full bench_engine run to arm the gate)")
+        return 0
+    except json.JSONDecodeError as e:
+        print(f"bench gate: FAIL — {args.committed} is not valid JSON "
+              f"({e})")
+        return 1
+    if "acceptance" not in committed:
+        print(f"bench gate: SKIP — committed baseline {args.committed} "
+              "has no 'acceptance' key; gate coverage cannot be checked "
+              "(re-generate the baseline with a current bench_engine)")
+        return 0
 
     errors = check(fresh, committed, args.rtol, args.strict_drift)
     n_gates = len(fresh.get("acceptance", {}))
