@@ -8,12 +8,16 @@ from repro.core.estimator import (DecisionTreeEstimator, ESTIMATORS,  # noqa: F4
 from repro.core.planner import (MimosePlanner, NonePlanner, PlannerBase,  # noqa: F401
                                 fixed_train_bytes)
 from repro.core.baselines import DTRSimPlanner, SublinearPlanner  # noqa: F401
-from repro.core.scheduler import (Plan, build_buckets, escalate_plan,  # noqa: F401
-                                  greedy_plan, greedy_plan_adaptive,
-                                  greedy_plan_reference, greedy_plan_sharded)
-from repro.core.simulator import (ShardedSimResult, SimResult,  # noqa: F401
-                                  dtr_simulate, peak_if_checkpointing_unit,
-                                  simulate, simulate_sharded)
+from repro.core.scheduler import (ActionTables, Plan, action_tables,  # noqa: F401
+                                  build_buckets, escalate_plan, greedy_plan,
+                                  greedy_plan_adaptive, greedy_plan_reference,
+                                  greedy_plan_sharded)
+from repro.core.simulator import (BatchSimResult, ShardedSimResult,  # noqa: F401
+                                  SimResult, dtr_simulate,
+                                  peak_if_checkpointing_unit, simulate,
+                                  simulate_many, simulate_sharded)
+from repro.core.solver import (BackgroundSolver, SolveRequest,  # noqa: F401
+                               SolveResult, solve)
 from repro.launch.roofline import (offload_transfer_s,  # noqa: F401
                                    plan_unit_flops, unit_fwd_flops)
 from repro.sharding.budget import (MeshBudget,  # noqa: F401

@@ -56,6 +56,7 @@ the step as ``k`` accumulated microbatches
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Optional, Tuple
 
@@ -68,6 +69,7 @@ from repro.core.collector import ShuttlingCollector, input_size_of, _tree_bytes
 from repro.core.estimator import PolyEstimator
 from repro.core.scheduler import (Plan, escalate_plan, greedy_plan,
                                   greedy_plan_adaptive)
+from repro.core.solver import BackgroundSolver, SolveRequest
 from repro.data.pipeline import bucket_length
 from repro.launch.roofline import MICROBATCH_OVERHEAD_S, plan_unit_flops
 from repro.models.lm import LM
@@ -263,12 +265,18 @@ class PlannerBase:
 
     def plan_key(self, batch) -> tuple:
         """Full plan-cache key: (bucket id, mesh signature, microbatch
-        ceiling).  ``max_microbatches`` is part of the key so plans
-        built under one microbatching knob are never replayed under
-        another (the chosen ``k`` itself is plan *output*, carried by
-        ``Plan.microbatch``)."""
+        ceiling, PCIe GB/s, offload overlap).  ``max_microbatches`` is
+        part of the key so plans built under one microbatching knob are
+        never replayed under another (the chosen ``k`` itself is plan
+        *output*, carried by ``Plan.microbatch``); the roofline knobs
+        are part of it so a background-solved plan priced at one link
+        speed can never be resurrected — from the cache or a snapshot —
+        after a ``--pcie-gbps`` / ``--offload-overlap`` change that
+        would re-rank its actions."""
         return (self.bucket_key(batch), self.mesh_sig(),
-                self.max_microbatches)
+                self.max_microbatches,
+                round(float(self.pcie_gbps), 6),
+                round(float(self.offload_overlap), 6))
 
     # -- shared adaptive-microbatching machinery -------------------------
     def candidate_microbatches(self, batch) -> list:
@@ -356,7 +364,9 @@ class MimosePlanner(PlannerBase):
                  max_plans: int = 256,
                  audit_every: int = 0,
                  audit_tol: float = 0.02,
-                 escalate_shrink: float = 0.85):
+                 escalate_shrink: float = 0.85,
+                 solver: str = "off",
+                 solver_budget_ms: float = 50.0):
         self.lm = lm
         self.mesh_budget = mesh_budget
         self.budget_bytes = self.resolve_budget_bytes(budget_bytes)
@@ -402,12 +412,28 @@ class MimosePlanner(PlannerBase):
         # re-paying the online warmup Mimose exists to avoid
         self._sample_log: list = []
         # stats (paper Table 2) + resilience counters (watchdog/restore)
+        # + optimal-plan-tier counters (repro.core.solver)
         self.stats = {"cache_hits": 0, "cache_misses": 0, "collections": 0,
                       "collect_time_s": 0.0, "estimate_time_s": 0.0,
                       "schedule_time_s": 0.0, "audits": 0, "refits": 0,
                       "evictions": 0, "oom_events": 0, "escalations": 0,
                       "poisoned_plans": 0, "restored_samples": 0,
-                      "restored_plans": 0, "dropped_plans": 0}
+                      "restored_plans": 0, "dropped_plans": 0,
+                      "solves": 0, "solver_swaps": 0, "solver_wins": 0,
+                      "solver_timeouts": 0}
+        # optimal-plan tier: a daemon thread solves the (k, action)
+        # assignment exactly and swaps strictly better plans into the
+        # cache above — all cache access goes through _cache_lock so
+        # the swap is atomic against the training thread
+        if solver not in ("off", "dp"):
+            raise ValueError(f"solver must be 'off' or 'dp', got "
+                             f"{solver!r}")
+        self.solver = solver
+        self.solver_budget_ms = float(solver_budget_ms)
+        self._cache_lock = threading.RLock()
+        self.background_solver = (
+            BackgroundSolver(self, budget_ms=self.solver_budget_ms)
+            if solver == "dp" else None)
 
     # ------------------------------------------------------------------
     def _quantize(self, s: int) -> int:
@@ -478,9 +504,13 @@ class MimosePlanner(PlannerBase):
         # the ONE cache-key construction (PlannerBase.plan_key): growing
         # a key component there covers every planner at once
         key = self.plan_key(batch)
-        if key in self.cache:
+        with self._cache_lock:
+            p = self.cache.get(key)
+        if p is not None:
             self.stats["cache_hits"] += 1
-            p = self.cache[key]
+            # a background-solved plan lands here on the next step of
+            # its bucket — no blocking, the daemon already swapped it in
+            self._maybe_submit_solve(params, batch, key, p)
             return p.as_actions(), PlanInfo(s, qs, True, False, p)
         self.stats["cache_misses"] += 1
 
@@ -521,7 +551,10 @@ class MimosePlanner(PlannerBase):
                     est = truth
                     res = audit_res          # exact vectors for this plan
                     self.stats["refits"] += 1
-                    self.cache.clear()      # stale plans out
+                    with self._cache_lock:
+                        self.cache.clear()  # stale plans out — also
+                    # invalidates in-flight solves: their swap is
+                    # identity-checked against the evicted objects
 
         t0 = time.perf_counter()
         # analytic recompute cost at this bucket's geometry (pure python
@@ -554,10 +587,52 @@ class MimosePlanner(PlannerBase):
         t_sch = time.perf_counter() - t0
         self.stats["schedule_time_s"] += t_sch
 
-        self.cache[key] = plan
+        with self._cache_lock:
+            self.cache[key] = plan
         self.stats["evictions"] = self.cache.evictions
+        self._maybe_submit_solve(params, batch, key, plan)
         return plan.as_actions(), PlanInfo(s, qs, False, collected, plan,
                                            t_est, t_sch, t_col)
+
+    # ------------------------------------------------------------------
+    def _maybe_submit_solve(self, params, batch, key, plan) -> None:
+        """Queue an exact background solve for this bucket (the
+        optimal-plan tier, ``repro.core.solver``).  Greedy already
+        served the step — this never blocks.  Skipped while the
+        estimator is warming up (the sheltered plans are exact for
+        their collections), for plans the solver already produced or
+        checked, and for OOM-escalated buckets (their repaired plan
+        encodes information the simulator does not have).  The
+        planning vectors are materialised HERE, on the training
+        thread, so the daemon stays numpy-only."""
+        bs = self.background_solver
+        if (bs is None or not self.estimator.ready
+                or getattr(plan, "solver_checked", False)
+                or plan.source == "dp"
+                or self._escalation.get(key, 0)
+                or bs.pending(key)):
+            return
+        s = input_size_of(batch)
+        est1 = self.estimator.predict(s)
+        flops1 = plan_unit_flops(self.lm, batch) if self.cost_aware else None
+        ks = self.candidate_microbatches(batch)
+        vectors = {int(k): self._microbatch_vectors(params, batch, k,
+                                                    est1, flops1, None)
+                   for k in ks}
+        req = SolveRequest(key=key, bucket=self.bucket_key(batch),
+                           vectors=vectors,
+                           budget_bytes=self.budget_bytes,
+                           fixed_bytes=self.resolve_fixed_bytes(params),
+                           candidate_ks=tuple(ks),
+                           pcie_bytes_per_s=self.pcie_gbps * 1e9,
+                           offload_overlap=self.offload_overlap,
+                           accum_overhead_s=self.microbatch_overhead_s,
+                           baseline=plan)
+        if bs.submit(req):
+            # one submission per cached plan object; the daemon re-marks
+            # it after the solve completes (covers the queue-full path,
+            # where a later hit may retry)
+            plan.solver_checked = True
 
     # ------------------------------------------------------------------
     def escalate(self, params, batch) -> bool:
@@ -603,7 +678,8 @@ class MimosePlanner(PlannerBase):
                  else plan_unit_flops(self.lm, batch))
         fixed = self.resolve_fixed_bytes(params)
         budget = self.budget_bytes * (self.escalate_shrink ** level)
-        prev = self.cache.get(key)
+        with self._cache_lock:
+            prev = self.cache.get(key)
         prev_k = max(int(getattr(prev, "microbatch", 1) or 1), 1)
 
         if level == 1 and prev_k == 1:
@@ -644,9 +720,13 @@ class MimosePlanner(PlannerBase):
                 offload_overlap=self.offload_overlap,
                 accum_overhead_s=self.microbatch_overhead_s)
 
-        if key in self.cache:
-            self.stats["poisoned_plans"] += 1
-        self.cache[key] = plan
+        plan.source = "escalated"
+        with self._cache_lock:
+            if key in self.cache:
+                self.stats["poisoned_plans"] += 1
+            # installing a NEW object also invalidates any in-flight
+            # solve for this key (identity-checked swap)
+            self.cache[key] = plan
         self._escalation[key] = level
         self.stats["escalations"] += 1
         by = self.stats.setdefault("escalations_by_bucket", {})

@@ -97,6 +97,10 @@ class Plan:
     # > 1, the per-unit byte quantities above are PER-MICROBATCH while
     # ``recompute_flops`` / ``offload_bytes`` stay full-step totals.
     microbatch: int = 1
+    # which tier produced the plan: "greedy" (density heuristic),
+    # "escalated" (OOM-watchdog repair), or "dp" (background solver).
+    # Rides snapshots so a restored cache keeps its provenance.
+    source: str = "greedy"
 
     def __post_init__(self):
         if self.actions is None:
@@ -157,6 +161,73 @@ def build_buckets(est_mem: Sequence[float], tol: float = 0.10
             for s, e in zip(bounds[:-1], bounds[1:])]
 
 
+@dataclasses.dataclass(frozen=True)
+class ActionTables:
+    """Per-unit quantities every action-aware planner tier works from.
+
+    One construction shared by the density greedy (``_hybrid_plan``),
+    the DTR-style escalation ladder (``escalate_plan``) and the exact
+    DP solver (``repro.core.solver``), so the three tiers price
+    KEEP/REMAT/OFFLOAD identically: remat cost = forward FLOPs /
+    ``PEAK_FLOPS``, offload cost = the non-overlapped share of the
+    round-trip PCIe transfer, freed bytes per the simulator's liveness
+    model (REMAT keeps the boundary tensor, OFFLOAD evicts the
+    offloadable bytes outright).  ``off`` is pre-clipped to
+    ``[0, est]`` exactly as ``simulate`` clips it.
+    """
+    est: np.ndarray        # per-unit activation bytes
+    out: np.ndarray        # per-unit boundary-tensor bytes
+    off: np.ndarray        # per-unit offloadable bytes, clipped to [0, est]
+    fl: np.ndarray         # per-unit forward FLOPs
+    t_re: np.ndarray       # per-unit recompute seconds (REMAT cost)
+    t_off: np.ndarray      # per-unit exposed transfer seconds (OFFLOAD cost)
+    freed_re: np.ndarray   # bytes REMAT frees: max(est - out, 0)
+    freed_off: np.ndarray  # bytes OFFLOAD frees: off
+
+
+def action_tables(est_mem, output_bytes=None, offload_bytes=None,
+                  flops=None, *, pcie_bytes_per_s: float = PCIE_BW,
+                  offload_overlap: float = 0.5) -> ActionTables:
+    """Build the shared per-unit cost/freed tables (missing vectors
+    default to zeros, which disables the corresponding action)."""
+    est = np.asarray(est_mem, dtype=np.float64)
+    n = est.size
+    out = (np.asarray(output_bytes, dtype=np.float64)
+           if output_bytes is not None else np.zeros(n))
+    fl = (np.asarray(flops, dtype=np.float64)
+          if flops is not None else np.zeros(n))
+    off = (np.clip(np.asarray(offload_bytes, dtype=np.float64), 0.0, est)
+           if offload_bytes is not None else np.zeros(n))
+    assert est.shape == out.shape == off.shape == fl.shape, \
+        (est.shape, out.shape, off.shape, fl.shape)
+    t_re = fl / PEAK_FLOPS
+    t_off = (2.0 * off / float(pcie_bytes_per_s)
+             * max(0.0, min(1.0, 1.0 - offload_overlap)))
+    return ActionTables(est=est, out=out, off=off, fl=fl, t_re=t_re,
+                        t_off=t_off,
+                        freed_re=np.maximum(est - out, 0.0),
+                        freed_off=off)
+
+
+def action_candidates(tables: ActionTables,
+                      allow_offload: bool = True) -> List[tuple]:
+    """(density, unit, action-code) triples, best density first; ties
+    break to earlier timestamps (the paper's earlier-is-cheaper
+    preference), then REMAT before OFFLOAD.  The same enumeration
+    orders the greedy walk, the escalation ladder, and the solver's
+    DP transitions."""
+    cand = []
+    for i in range(tables.est.size):
+        if tables.freed_re[i] > 0:
+            cand.append((tables.freed_re[i] / max(tables.t_re[i], 1e-12),
+                         i, 1))
+        if allow_offload and tables.freed_off[i] > 0:
+            cand.append((tables.freed_off[i] / max(tables.t_off[i], 1e-12),
+                         i, 2))
+    cand.sort(key=lambda c: (-c[0], c[1], c[2]))
+    return cand
+
+
 def greedy_plan(est_mem: Sequence[float], budget_bytes: float,
                 fixed_bytes: float = 0.0, tol: float = 0.10, *,
                 flops: Sequence[float] | None = None,
@@ -215,42 +286,22 @@ def _hybrid_plan(est_mem, output_bytes, offload_bytes, flops,
     """
     from repro.core.simulator import simulate
 
-    est = np.asarray(est_mem, dtype=np.float64)
+    tabs = action_tables(est_mem, output_bytes, offload_bytes, flops,
+                         pcie_bytes_per_s=pcie, offload_overlap=overlap)
+    est, out, off, fl = tabs.est, tabs.out, tabs.off, tabs.fl
+    freed_re, freed_off = tabs.freed_re, tabs.freed_off
     n = est.size
-    out = (np.asarray(output_bytes, dtype=np.float64)
-           if output_bytes is not None else np.zeros(n))
-    fl = np.asarray(flops, dtype=np.float64)
-    off = np.clip(np.asarray(offload_bytes, dtype=np.float64), 0.0, est)
-    assert est.shape == fl.shape == out.shape == off.shape
     total = float(est.sum())
     excess = total + float(fixed_bytes) - float(budget_bytes)
     if n == 0:
         return Plan([], excess, 0.0, total)
-
-    t_re = fl / PEAK_FLOPS
-    t_off = 2.0 * off / float(pcie) * max(0.0, min(1.0, 1.0 - overlap))
-    freed_re = np.maximum(est - out, 0.0)
-    freed_off = off
-
-    def candidates(allow_offload: bool) -> List[tuple]:
-        """(density, unit, action-code) triples, best density first;
-        ties break to earlier timestamps (the paper's earlier-is-cheaper
-        preference), then REMAT before OFFLOAD."""
-        cand = []
-        for i in range(n):
-            if freed_re[i] > 0:
-                cand.append((freed_re[i] / max(t_re[i], 1e-12), i, 1))
-            if allow_offload and freed_off[i] > 0:
-                cand.append((freed_off[i] / max(t_off[i], 1e-12), i, 2))
-        cand.sort(key=lambda c: (-c[0], c[1], c[2]))
-        return cand
 
     def density_greedy(allow_offload: bool) -> Plan:
         actions = [Action.KEEP] * n
         freed_by = [0.0] * n
         covered = 0.0
         picks: List[int] = []
-        for _, i, code in candidates(allow_offload):
+        for _, i, code in action_candidates(tabs, allow_offload):
             if covered >= excess:
                 break
             if actions[i] is not Action.KEEP:
@@ -336,29 +387,15 @@ def escalate_plan(actions, est_mem, flops, budget_bytes: float,
     """
     from repro.core.simulator import simulate
 
-    est = np.asarray(est_mem, dtype=np.float64)
+    tabs = action_tables(est_mem, output_bytes, offload_bytes, flops,
+                         pcie_bytes_per_s=pcie_bytes_per_s,
+                         offload_overlap=offload_overlap)
+    est, out, off, fl = tabs.est, tabs.out, tabs.off, tabs.fl
+    freed_re, freed_off = tabs.freed_re, tabs.freed_off
     n = est.size
-    fl = (np.asarray(flops, dtype=np.float64) if flops is not None
-          else np.zeros(n))
-    out = (np.asarray(output_bytes, dtype=np.float64)
-           if output_bytes is not None else np.zeros(n))
-    off = (np.clip(np.asarray(offload_bytes, dtype=np.float64), 0.0, est)
-           if offload_bytes is not None else np.zeros(n))
     total = float(est.sum())
     excess = total + float(fixed_bytes) - float(budget_bytes)
-
-    t_re = fl / PEAK_FLOPS
-    t_off = (2.0 * off / float(pcie_bytes_per_s)
-             * max(0.0, min(1.0, 1.0 - offload_overlap)))
-    freed_re = np.maximum(est - out, 0.0)
-    freed_off = off
-    cand = []
-    for i in range(n):
-        if freed_re[i] > 0:
-            cand.append((freed_re[i] / max(t_re[i], 1e-12), i, 1))
-        if freed_off[i] > 0:
-            cand.append((freed_off[i] / max(t_off[i], 1e-12), i, 2))
-    cand.sort(key=lambda c: (-c[0], c[1], c[2]))
+    cand = action_candidates(tabs, allow_offload=True)
 
     def finish(acts) -> Plan:
         arr = np.array([int(a) for a in acts], dtype=np.int64)

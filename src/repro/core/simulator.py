@@ -178,6 +178,94 @@ def simulate(act_bytes: Sequence[float], remat: Sequence,
 
 
 @dataclasses.dataclass
+class BatchSimResult:
+    """Vectorised replay of many action plans over ONE byte vector.
+
+    Row ``j`` of every array is exactly ``simulate(act, plans[j], ...)``
+    on the same inputs (same clipping, same per-action liveness model),
+    up to float summation order — the agreement is fuzz-locked by
+    ``tests/test_core.py::test_simulate_many_matches_simulate``.  Used
+    by the solver tier (``repro.core.solver``) to score exhaustive
+    plan enumerations in one numpy pass instead of ``3^n`` python
+    replays.
+    """
+    peak_bytes: np.ndarray          # (m,) per-plan peak footprint
+    step_overhead_s: np.ndarray     # (m,) recompute + exposed + accum
+    recompute_flops: np.ndarray     # (m,) full-step recomputed FLOPs
+    offload_bytes: np.ndarray       # (m,) full-step one-way host traffic
+    exposed_transfer_s: np.ndarray  # (m,) non-overlapped transfer time
+    microbatches: int
+    accum_overhead_s: float         # (k - 1) x per-microbatch overhead
+
+
+def simulate_many(act_bytes: Sequence[float], plans,
+                  fixed_bytes: float = 0.0,
+                  output_bytes: Sequence[float] | None = None,
+                  flops: Sequence[float] | None = None, *,
+                  offload_bytes: Sequence[float] | None = None,
+                  pcie_bytes_per_s: float = PCIE_BW,
+                  overlap: float = 0.5,
+                  microbatch: int = 1,
+                  accum_overhead_s: float = 0.0) -> BatchSimResult:
+    """Replay ``m`` plans at once.  ``plans`` is an ``(m, n)`` array of
+    action codes (0 KEEP / 1 REMAT / 2 OFFLOAD).  Semantically each row
+    is ``simulate`` on the same vectors; see ``BatchSimResult``.
+
+    The closed form this vectorises (with ``c_j`` the plan's forward
+    contribution of unit j — KEEP ``act``, REMAT ``out``, OFFLOAD
+    ``act - off`` — and ``restore_j`` the backward restore — 0 /
+    ``act`` / ``off``):
+
+    * forward transient at i:  ``fixed + sum_{j<i} c_j + act_i + out_i``
+    * end of forward:          ``fixed + sum_j c_j``
+    * backward at i:  ``fixed + sum_j c_j + sum_{j>i}(restore_j - act_j)
+      + restore_i + act_i``
+    """
+    A = np.asarray(plans, dtype=np.int64)
+    if A.ndim != 2:
+        raise ValueError(f"plans must be (m, n), got shape {A.shape}")
+    m, n = A.shape
+    act = np.asarray(act_bytes, dtype=np.float64)
+    assert act.size == n, (act.size, n)
+    out = (np.asarray(output_bytes, dtype=np.float64)
+           if output_bytes is not None else np.zeros(n))
+    fl = (np.asarray(flops, dtype=np.float64)
+          if flops is not None else np.zeros(n))
+    off = (np.minimum(np.asarray(offload_bytes, dtype=np.float64), act)
+           if offload_bytes is not None else act.copy())
+    fixed = float(fixed_bytes)
+
+    re_mask = A == 1
+    off_mask = A == 2
+    c = np.where(re_mask, out, np.where(off_mask, act - off, act))
+    restore = np.where(re_mask, act, np.where(off_mask, off, 0.0))
+
+    if n:
+        pre = np.cumsum(c, axis=1) - c               # exclusive prefix
+        fwd_peak = (pre + act + out).max(axis=1)
+        total = c.sum(axis=1)
+        d = restore - act
+        suf = np.cumsum(d[:, ::-1], axis=1)[:, ::-1] - d  # exclusive suffix
+        bwd_peak = (total[:, None] + suf + restore + act).max(axis=1)
+        peak = fixed + np.maximum(
+            0.0, np.maximum(np.maximum(fwd_peak, total), bwd_peak))
+    else:
+        peak = np.full(m, fixed)
+
+    k = max(int(microbatch), 1)
+    rec_fl = (re_mask * fl).sum(axis=1) * k
+    moved = (off_mask * off).sum(axis=1) * k
+    t_xfer = 2.0 * moved / float(pcie_bytes_per_s)
+    exposed = t_xfer * max(0.0, min(1.0, 1.0 - overlap))
+    accum = (k - 1) * float(accum_overhead_s)
+    overhead = rec_fl / PEAK_FLOPS + exposed + accum
+    return BatchSimResult(peak_bytes=peak, step_overhead_s=overhead,
+                          recompute_flops=rec_fl, offload_bytes=moved,
+                          exposed_transfer_s=exposed, microbatches=k,
+                          accum_overhead_s=accum)
+
+
+@dataclasses.dataclass
 class ShardedSimResult:
     """Per-device replay of one plan across a mesh.
 

@@ -51,6 +51,24 @@ def engine_report(trainer, planner=None) -> str:
         lines.append(f"plan cache: {stats['cache_hits']} hits, "
                      f"{stats['cache_misses']} misses, "
                      f"{stats['collections']} collections")
+    # background-solver tier — only when solves actually ran, so runs
+    # with --solver off keep the report unchanged
+    if stats and (stats.get("solves") or stats.get("solver_timeouts")):
+        lines.append(f"solver: {stats.get('solves', 0)} solve(s), "
+                     f"{stats.get('solver_wins', 0)} win(s), "
+                     f"{stats.get('solver_swaps', 0)} swap(s), "
+                     f"{stats.get('solver_timeouts', 0)} timeout(s)")
+        deltas = stats.get("solver_delta_by_bucket", {})
+        if deltas:
+            lines.append("")
+            lines.append("| bucket S | greedy overhead s | solved overhead s "
+                         "| delta % |")
+            lines.append("|---|---|---|---|")
+            for b in sorted(deltas):
+                d = deltas[b]
+                lines.append(f"| {b} | {d['greedy_s']:.6f} "
+                             f"| {d['solved_s']:.6f} "
+                             f"| {d['improvement_pct']:.2f} |")
     # elastic-resilience counters (repro.train.resilience) — only when
     # something actually happened, so quiet runs keep a quiet report
     wd = getattr(trainer, "watchdog", None)

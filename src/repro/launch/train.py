@@ -71,6 +71,17 @@ def main(argv=None):
                          "simulated step time — or alone fits the "
                          "budget (k=1 always competes, so enabling "
                          "this never loses at equal budget)")
+    ap.add_argument("--solver", default="off", choices=["off", "dp"],
+                    help="optimal-plan tier: a background thread solves "
+                         "each bucket's (k, action) assignment exactly "
+                         "(DP over the layer chain, exhaustive on small "
+                         "instances) and swaps the improved plan into the "
+                         "cache — greedy still serves the first steps "
+                         "instantly")
+    ap.add_argument("--solver-budget-ms", type=float, default=50.0,
+                    help="per-bucket wall-clock budget for the background "
+                         "solve; on timeout the best plan found so far "
+                         "still competes")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -149,6 +160,9 @@ def main(argv=None):
     if args.offload and args.byte_only_remat:
         ap.error("--offload needs the cost-aware selector "
                  "(drop --byte-only-remat)")
+    if args.solver != "off" and args.planner != "mimose":
+        ap.error("--solver needs --planner mimose (the solver tier swaps "
+                 "plans into the Mimose bucket cache)")
     if args.offload and mesh is not None:
         # same guard as launch/steps.py: current XLA cannot shard the
         # host-offload custom-calls under SPMD — plan with OFFLOAD
@@ -161,7 +175,9 @@ def main(argv=None):
                                         cost_aware=not args.byte_only_remat,
                                         offload=args.offload,
                                         pcie_gbps=args.pcie_gbps,
-                                        max_microbatches=args.max_microbatches),
+                                        max_microbatches=args.max_microbatches,
+                                        solver=args.solver,
+                                        solver_budget_ms=args.solver_budget_ms),
         "sublinear": lambda: SublinearPlanner(lm, budget,
                                               max_input_size=max_size,
                                               mesh_budget=mesh_budget,
@@ -227,6 +243,11 @@ def main(argv=None):
             print(f"step {i:4d} loss {loss:.4f} S={batch['tokens'].shape[1]}"
                   f" remat={st.remat_units} offload={st.offload_units}"
                   f" k={st.microbatches} step_s={st.step_time_s:.3f}")
+    bs = getattr(planner, "background_solver", None)
+    if bs is not None:
+        # let in-flight solves land so the final snapshot and report see
+        # the solved plans (bounded wait; training is already done)
+        bs.drain(timeout=5.0)
     if snapshots is not None:
         final = snapshots.save(step=trainer.global_step, params=params,
                                opt_state=opt_state, planner=planner,

@@ -223,7 +223,8 @@ def _plan_to_dict(plan: Plan) -> dict:
             "est_activation_bytes": float(plan.est_activation_bytes),
             "recompute_flops": float(plan.recompute_flops),
             "offload_bytes": float(plan.offload_bytes),
-            "microbatch": int(plan.microbatch)}
+            "microbatch": int(plan.microbatch),
+            "source": str(getattr(plan, "source", "greedy"))}
 
 
 def _plan_from_dict(d: dict) -> Plan:
@@ -232,7 +233,8 @@ def _plan_from_dict(d: dict) -> Plan:
                 recompute_flops=float(d.get("recompute_flops", 0.0)),
                 actions=tuple(Action(int(a)) for a in d["actions"]),
                 offload_bytes=float(d.get("offload_bytes", 0.0)),
-                microbatch=int(d.get("microbatch", 1)))
+                microbatch=int(d.get("microbatch", 1)),
+                source=str(d.get("source", "greedy")))
 
 
 def planner_state(planner) -> dict:
@@ -254,9 +256,11 @@ def planner_state(planner) -> dict:
     plans = []
     esc = getattr(planner, "_escalation", {})
     for key in list(planner.cache.keys()):
-        bucket, sig, max_mb = key
+        bucket, sig, max_mb, pcie, overlap = key
         plans.append({"bucket": int(bucket), "mesh_sig": repr(sig),
                       "max_microbatches": int(max_mb),
+                      "pcie_gbps": float(pcie),
+                      "offload_overlap": float(overlap),
                       "escalation": int(esc.get(key, 0)),
                       "plan": _plan_to_dict(planner.cache[key])})
     state["plans"] = plans
@@ -314,13 +318,25 @@ def restore_planner_state(planner, state: dict, params=None) -> dict:
             planner.est_output.fit()
             planner.est_offload.fit()
     # plans: rebuild keys from the LIVE planner's signature; entries from
-    # another mesh are per-device math for the wrong mesh — drop them
+    # another mesh are per-device math for the wrong mesh — drop them.
+    # Same for the roofline constants: a plan solved under different
+    # PCIe bandwidth / overlap assumptions would resurrect a stale
+    # cost model, so mismatches are dropped rather than re-keyed.
+    # (Older snapshots lack the fields; default to the live values.)
+    live_pcie = round(float(getattr(planner, "pcie_gbps", 0.0)), 6)
+    live_overlap = round(float(getattr(planner, "offload_overlap", 0.0)), 6)
     for rec in state.get("plans", []):
         if rec.get("mesh_sig") != live_sig:
             summary["dropped_plans"] += 1
             continue
+        rec_pcie = round(float(rec.get("pcie_gbps", live_pcie)), 6)
+        rec_overlap = round(float(rec.get("offload_overlap",
+                                          live_overlap)), 6)
+        if rec_pcie != live_pcie or rec_overlap != live_overlap:
+            summary["dropped_plans"] += 1
+            continue
         key = (int(rec["bucket"]), planner.mesh_sig(),
-               int(rec["max_microbatches"]))
+               int(rec["max_microbatches"]), live_pcie, live_overlap)
         planner.cache[key] = _plan_from_dict(rec["plan"])
         if rec.get("escalation"):
             planner._escalation[key] = int(rec["escalation"])

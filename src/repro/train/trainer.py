@@ -365,4 +365,14 @@ class Trainer:
             "escalations_by_bucket": dict(
                 getattr(self.planner, "stats", {})
                 .get("escalations_by_bucket", {})),
+            # background-solver counters (zero for planners without the
+            # solver tier, or with --solver off)
+            "solves": int(getattr(self.planner, "stats", {})
+                          .get("solves", 0)),
+            "solver_swaps": int(getattr(self.planner, "stats", {})
+                                .get("solver_swaps", 0)),
+            "solver_wins": int(getattr(self.planner, "stats", {})
+                               .get("solver_wins", 0)),
+            "solver_timeouts": int(getattr(self.planner, "stats", {})
+                                   .get("solver_timeouts", 0)),
         }

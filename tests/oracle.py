@@ -1,0 +1,101 @@
+"""Brute-force ground truth for the optimal-plan solver tier.
+
+``oracle()`` enumerates EVERY (microbatch k, action assignment) pair —
+all ``3^n`` rows per candidate k, ``n <= 8`` — replays each through the
+scalar liveness simulator, and returns the optimum under exactly the
+conventions ``repro.core.solver.solve`` uses:
+
+* feasibility is ``peak_bytes <= budget + 1e-6`` (the scheduler's
+  replay tolerance);
+* the score is ``step_overhead_s + pad_overhead_s`` at the plan's k,
+  with the SAME ``accum_overhead_s`` passed everywhere (the planner
+  and the simulator default differently — a differential test that
+  lets them diverge compares apples to oranges);
+* ties break on ``(score, k, n_offload)``, matching the solver's
+  preference for the smaller split and fewer host round-trips.
+
+The differential suite (``tests/test_solver.py``) pins
+``solve() == oracle()`` on randomized instances and
+``solve() <= greedy()`` always; the exhaustive fallback inside
+``solve`` shares ``enumerate_plans`` with this module, so the oracle
+deliberately does its own independent ``itertools.product`` walk —
+two enumerators agreeing is evidence, one enumerator agreeing with
+itself is not.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.simulator import simulate
+
+_FEAS_TOL = 1e-6
+_INF = float("inf")
+_MAX_UNITS = 8
+
+
+@dataclasses.dataclass
+class OracleResult:
+    """Ground-truth optimum over every (k, action) assignment."""
+    actions: Optional[Tuple[int, ...]]
+    microbatch: int
+    feasible: bool
+    score: float                  # step overhead + pad overhead
+    peak_bytes: float
+    n_evaluated: int              # how many plans the walk replayed
+
+
+def oracle(vectors_of_k, budget_bytes: float, fixed_bytes: float = 0.0, *,
+           candidate_ks: Sequence[int] = (1,),
+           pcie_bytes_per_s: float = 16e9, offload_overlap: float = 0.5,
+           accum_overhead_s: float = 0.0) -> OracleResult:
+    """Exhaustively optimal (k, actions) under ``budget_bytes``.
+
+    Same ``vectors_of_k(k)`` contract as ``greedy_plan_adaptive`` and
+    ``solve``: ``est_mem`` required, ``output_bytes`` / ``flops`` /
+    ``offload_bytes`` / ``pad_overhead_s`` optional.  Returns the
+    infeasible min-peak assignment (``feasible=False``) when nothing
+    fits — mirroring the solver's fallback so the differential tests
+    can compare that path too.
+    """
+    budget = float(budget_bytes)
+    fixed = float(fixed_bytes)
+    best = None                   # (score, k, n_off, actions, peak)
+    best_peak = None              # (peak, k, actions) when nothing fits
+    n_eval = 0
+    for k in sorted(set(int(k) for k in candidate_ks)):
+        v = vectors_of_k(k)
+        est = np.asarray(v["est_mem"], dtype=float)
+        n = est.size
+        if n > _MAX_UNITS:
+            raise ValueError(
+                f"oracle enumerates 3^n plans; n={n} > {_MAX_UNITS}")
+        pad = float(v.get("pad_overhead_s", 0.0))
+        for acts in itertools.product((0, 1, 2), repeat=n):
+            sim = simulate(est, acts, fixed, v.get("output_bytes"),
+                           v.get("flops"),
+                           offload_bytes=v.get("offload_bytes"),
+                           pcie_bytes_per_s=pcie_bytes_per_s,
+                           overlap=offload_overlap, microbatch=k,
+                           accum_overhead_s=accum_overhead_s)
+            n_eval += 1
+            if sim.peak_bytes <= budget + _FEAS_TOL:
+                cand = (sim.step_overhead_s + pad, k,
+                        sum(1 for a in acts if a == 2), acts,
+                        sim.peak_bytes)
+                if best is None or cand[:3] < best[:3]:
+                    best = cand
+            elif best is None:
+                cand_peak = (sim.peak_bytes, k, acts)
+                if best_peak is None or cand_peak[0] < best_peak[0]:
+                    best_peak = cand_peak
+    if best is not None:
+        score, k, _n_off, acts, peak = best
+        return OracleResult(tuple(acts), k, True, score, peak, n_eval)
+    if best_peak is not None:
+        peak, k, acts = best_peak
+        return OracleResult(tuple(acts), k, False, _INF, peak, n_eval)
+    return OracleResult(None, 0, False, _INF, _INF, n_eval)

@@ -162,6 +162,113 @@ def test_dtr_sim_plan_ops_positive_when_evicting(act, budget):
     assert not mask[-1] or len(act) == 1
 
 
+# randomized (act, out, off, actions) instances for the invariant fuzz
+_sim_instances = st.composite(lambda draw: {
+    "act": (act := [1.0 + draw(st.floats(min_value=0.0, max_value=1e8,
+                                         allow_nan=False,
+                                         allow_infinity=False))
+                    for _ in range(draw(st.integers(min_value=1,
+                                                    max_value=24)))]),
+    "out": [0.3 * a * draw(st.floats(min_value=0.0, max_value=1.0,
+                                     allow_nan=False,
+                                     allow_infinity=False))
+            for a in act],
+    "off": [1.2 * a * draw(st.floats(min_value=0.0, max_value=1.0,
+                                     allow_nan=False,
+                                     allow_infinity=False))
+            for a in act],
+    "fl": [draw(st.floats(min_value=0.0, max_value=1e12,
+                          allow_nan=False, allow_infinity=False))
+           for _ in act],
+    "actions": [draw(st.integers(min_value=0, max_value=2)) for _ in act],
+    "fixed": draw(st.floats(min_value=0.0, max_value=1e8,
+                            allow_nan=False, allow_infinity=False)),
+})()
+
+
+@given(_sim_instances)
+@settings(max_examples=100, deadline=None)
+def test_simulate_peak_bounded_by_kept_plus_transient(inst):
+    """The liveness peak never exceeds the bytes the plan actually
+    keeps plus the bounded per-unit transients: KEEP holds ``act``,
+    REMAT only ``out``, OFFLOAD ``act - off`` (the checkpoint streams
+    to host); on top ride the forward transient (``act + out`` of one
+    unit), the backward restore (``restore + act`` of one unit), and
+    the remat-outputs a backward pass can resurrect at once."""
+    act, out, off = inst["act"], inst["out"], inst["off"]
+    acts = inst["actions"]
+    sim = simulate(act, acts, inst["fixed"], out, inst["fl"],
+                   offload_bytes=off)
+    kept = sum(o if a == 1 else (x - min(f, x) if a == 2 else x)
+               for x, o, f, a in zip(act, out, off, acts))
+    remat_out = sum(o for o, a in zip(out, acts) if a == 1)
+    fwd_transient = max(x + o for x, o in zip(act, out))
+    restore = [x if a == 1 else (min(f, x) if a == 2 else 0.0)
+               for x, f, a in zip(act, off, acts)]
+    bwd_transient = max(r + x for r, x in zip(restore, act))
+    bound = (inst["fixed"] + kept + remat_out
+             + max(fwd_transient, bwd_transient))
+    assert sim.peak_bytes <= bound + 1e-6
+
+
+@given(_sim_instances)
+@settings(max_examples=50, deadline=None)
+def test_simulate_agrees_with_sharded_on_1x1_mesh(inst):
+    """A 1-device "mesh" is no mesh at all: the per-device replay must
+    reproduce the scalar simulator exactly."""
+    from repro.core import simulate_sharded
+    sim = simulate(inst["act"], inst["actions"], inst["fixed"],
+                   inst["out"], inst["fl"], offload_bytes=inst["off"])
+    shd = simulate_sharded(inst["act"], inst["actions"], inst["fixed"], 1,
+                          inst["out"], inst["fl"],
+                          offload_bytes=inst["off"])
+    assert shd.peak_bytes_per_device == pytest.approx(sim.peak_bytes)
+    assert shd.per_device.recompute_flops == \
+        pytest.approx(sim.recompute_flops)
+    assert shd.per_device.step_overhead_s == \
+        pytest.approx(sim.step_overhead_s)
+
+
+@given(_sim_instances, st.integers(min_value=2, max_value=6))
+@settings(max_examples=50, deadline=None)
+def test_simulate_overhead_additive_across_microbatch_k(inst, k):
+    """A k-way accumulated step is k sequential microbatches plus the
+    accumulation bookkeeping: overhead(k) = k * overhead(1) + (k-1) *
+    accum, on the SAME per-microbatch vectors."""
+    accum = 5e-4
+    one = simulate(inst["act"], inst["actions"], inst["fixed"],
+                   inst["out"], inst["fl"], offload_bytes=inst["off"],
+                   microbatch=1, accum_overhead_s=0.0)
+    many = simulate(inst["act"], inst["actions"], inst["fixed"],
+                    inst["out"], inst["fl"], offload_bytes=inst["off"],
+                    microbatch=k, accum_overhead_s=accum)
+    assert many.step_overhead_s == pytest.approx(
+        k * one.step_overhead_s + (k - 1) * accum)
+    # splitting never changes the peak at fixed per-microbatch vectors
+    assert many.peak_bytes == pytest.approx(one.peak_bytes)
+
+
+@given(_sim_instances)
+@settings(max_examples=50, deadline=None)
+def test_simulate_many_matches_scalar_simulate(inst):
+    """The batched evaluator the solver's exhaustive fallback leans on
+    must agree with the scalar simulator row for row."""
+    from repro.core import simulate_many
+    rows = [inst["actions"], [0] * len(inst["act"]),
+            [1] * len(inst["act"]), [2] * len(inst["act"])]
+    bs = simulate_many(inst["act"], rows, inst["fixed"], inst["out"],
+                       inst["fl"], offload_bytes=inst["off"],
+                       microbatch=2, accum_overhead_s=5e-4)
+    for i, row in enumerate(rows):
+        sim = simulate(inst["act"], row, inst["fixed"], inst["out"],
+                       inst["fl"], offload_bytes=inst["off"],
+                       microbatch=2, accum_overhead_s=5e-4)
+        assert bs.peak_bytes[i] == pytest.approx(sim.peak_bytes)
+        assert bs.step_overhead_s[i] == pytest.approx(sim.step_overhead_s)
+        assert bs.recompute_flops[i] == pytest.approx(sim.recompute_flops)
+        assert bs.offload_bytes[i] == pytest.approx(sim.offload_bytes)
+
+
 # ---------------------------------------------------------------------------
 # collector + planner integration (small real model)
 # ---------------------------------------------------------------------------
@@ -304,3 +411,23 @@ def test_fixed_train_bytes_accounts_adam(small):
     n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
     fb = fixed_train_bytes(params)
     assert fb == pytest.approx(n * 4 + n * 4 + 8 * n)   # f32 params
+
+
+def test_plan_cache_key_includes_roofline_constants(small):
+    """Regression: the plan-cache key must carry the roofline knobs
+    (``pcie_gbps``, ``offload_overlap``) — a background-solved plan
+    priced at one link speed must not be resurrected after a CLI knob
+    change re-prices OFFLOAD actions."""
+    _, lm, _ = small
+    batch = _batch(64)
+    base = MimosePlanner(lm, 1e12, quantum=32, warmup_samples=1)
+    slow_link = MimosePlanner(lm, 1e12, quantum=32, warmup_samples=1,
+                              pcie_gbps=4.0)
+    no_overlap = MimosePlanner(lm, 1e12, quantum=32, warmup_samples=1,
+                               offload_overlap=0.0)
+    assert base.plan_key(batch) != slow_link.plan_key(batch)
+    assert base.plan_key(batch) != no_overlap.plan_key(batch)
+    # same knobs -> same key; bucket + mesh prefix stays shared
+    same = MimosePlanner(lm, 1e12, quantum=32, warmup_samples=1)
+    assert base.plan_key(batch) == same.plan_key(batch)
+    assert base.plan_key(batch)[:2] == slow_link.plan_key(batch)[:2]

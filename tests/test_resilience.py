@@ -280,6 +280,40 @@ def test_planner_state_mesh_reshape_replays_samples(small):
                                fresh.estimator.predict(128), rtol=1e-6)
 
 
+def test_planner_state_drops_roofline_mismatched_plans(small):
+    """A plan priced at one PCIe link / overlap must not be restored
+    into a planner with different roofline knobs — the solved (or
+    greedy-hybrid) cost model behind it no longer holds."""
+    cfg, lm, params = small
+    src = MimosePlanner(lm, HBM, quantum=64, warmup_samples=1,
+                        pcie_gbps=16.0)
+    src.plan(params, _batch(64))
+    state = planner_state(src)
+    assert state["plans"] and state["plans"][0]["pcie_gbps"] == 16.0
+    assert "source" in state["plans"][0]["plan"]
+
+    dst = MimosePlanner(lm, HBM, quantum=64, warmup_samples=1,
+                        pcie_gbps=4.0)
+    summary = restore_planner_state(dst, state)
+    assert summary["restored_plans"] == 0
+    assert summary["dropped_plans"] == len(state["plans"])
+    # matching knobs restore verbatim, provenance included
+    same = MimosePlanner(lm, HBM, quantum=64, warmup_samples=1,
+                         pcie_gbps=16.0)
+    summary = restore_planner_state(same, state)
+    assert summary["restored_plans"] == len(state["plans"])
+    key = same.plan_key(_batch(64))
+    assert same.cache[key].source == "greedy"
+    # pre-PR-7 snapshots lack the fields: default to the live knobs
+    for rec in state["plans"]:
+        del rec["pcie_gbps"], rec["offload_overlap"]
+        del rec["plan"]["source"]
+    legacy = MimosePlanner(lm, HBM, quantum=64, warmup_samples=1,
+                           pcie_gbps=4.0)
+    summary = restore_planner_state(legacy, state)
+    assert summary["restored_plans"] == len(state["plans"])
+
+
 def test_planner_state_mesh_reshape_requires_params(small):
     cfg, lm, params = small
     src = MimosePlanner(lm, None, quantum=64, warmup_samples=1,

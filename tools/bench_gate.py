@@ -39,6 +39,9 @@ DRIFT_METRICS = [
     (("collector", "speedup"), True),
     (("ragged", "sweep", "pad_50pct", "flash", "modeled_recovered"), True),
     (("ragged", "sweep", "pad_50pct", "ssd", "modeled_recovered"), True),
+    # greedy -> solved overhead improvement at the tight heterogeneous
+    # point (deterministic simulator math, identical in smoke and full)
+    (("solver", "sweep", "m0.09_pcie4.0_ov0.75", "improvement_pct"), True),
 ]
 
 
