@@ -40,6 +40,14 @@ writes everything to ``BENCH_engine.json``:
      fits, and an equal-budget sweep where the adaptive planner's
      simulated step overhead never exceeds the k=1 planner's (k=1
      always competes in the candidate search).
+  9. offload_exec — MEASURED wall-clock of real double-buffered offload
+     (repro.train.transfer.TransferLane) vs rematerialisation on a
+     transfer-bound synthetic matmul chain: offload must beat remat at
+     the point where recompute dwarfs the (hidden) transfer, and the
+     lane's measured exposed transfer time must stay within the
+     simulator's zero-overlap bound at the bandwidth the step actually
+     achieved — the lane's own measured copy wall time — with a
+     x1.5 + 5 ms tolerance band.
 
 Usage:
     PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] \
@@ -854,6 +862,153 @@ def bench_solver(smoke: bool) -> dict:
     return res
 
 
+def bench_offload_exec(smoke: bool) -> dict:
+    """(j) real overlapped offload, MEASURED — not simulated.
+
+    A synthetic n-unit matmul chain where each unit's backward needs a
+    d x d residual the forward produced.  Two executions of the SAME
+    math (final gradients compared bitwise-close):
+
+      * offload — the residual streams to host on the TransferLane
+        right after the forward dispatches the next unit, and streams
+        back (prefetched one unit ahead) behind the backward's compute:
+        the double-buffered path the trainer's OFFLOAD_OPT choreography
+        uses.
+      * remat  — the residual is discarded and the backward re-runs the
+        unit's forward chain to regenerate it (keeping only the unit's
+        boundary input, exactly what a REMAT action keeps on device).
+
+    The point is transfer-bound by construction: the recompute chain
+    costs r heavy matmuls per unit while the residual is ~1 d^2 buffer,
+    so hidden transfer must beat recompute on wall-clock.  The second
+    gate holds the lane's measured exposed time to the simulator's
+    zero-overlap exposure evaluated at the bandwidth the step actually
+    achieved — i.e. the lane's own measured copy wall time (``copy_s``,
+    == bytes / realised GB/s) — with a x1.5 + 5 ms tolerance band
+    (documented in docs/ARCHITECTURE.md "Real overlapped offload").  A
+    caller can wait each copy out at most once, so exposure above the
+    band means the accounting broke (double-charged waits), not just a
+    slow link; below it is overlap doing its job.  The idle-link
+    calibration (``measure_pcie_gbps``) is reported alongside as a
+    ``contention_factor`` — ~1 on hosts with a real DMA engine, large
+    on this CPU container where copies and compute share cores.
+    """
+    from repro.train.transfer import TransferLane, measure_pcie_gbps
+
+    d = 256 if smoke else 384        # residual is one d x d f32 buffer
+    r = 4                            # matmuls per unit chain (recompute)
+    n = 4 if smoke else 6            # units
+    reps = 2 if smoke else 3
+    scale = np.float32(1.0 / np.sqrt(d))
+    W = jax.random.normal(jax.random.PRNGKey(0), (d, d), jnp.float32) * scale
+    h0 = jax.random.normal(jax.random.PRNGKey(1), (d, d), jnp.float32)
+
+    @jax.jit
+    def chain(h):                     # the unit's heavy forward
+        z = h
+        for _ in range(r):
+            z = jnp.tanh(z @ W)
+        return z
+
+    @jax.jit
+    def boundary(z):                  # unit output handed to unit i+1
+        return jnp.tanh(z @ W)
+
+    @jax.jit
+    def unit_bwd(z, g):               # backward consumes the residual
+        for _ in range(r):
+            g = jnp.tanh(g @ W.T) + z * np.float32(1e-3)
+        return g
+
+    def run_offload(lane):
+        handles = []
+        h = h0
+        for _ in range(n):
+            z = chain(h)
+            h = boundary(z)           # next unit dispatches async...
+            handles.append(lane.offload(z))   # ...the copy rides behind it
+        g = jnp.ones_like(h)
+        pre = list(handles)
+        pre[n - 1] = lane.prefetch(handles[n - 1])
+        for i in reversed(range(n)):
+            if i > 0:                 # start the next return copy early
+                pre[i - 1] = lane.prefetch(handles[i - 1])
+            z = lane.fetch(pre[i])
+            g = unit_bwd(z, g)
+        jax.block_until_ready(g)
+        lane.drain()
+        return g
+
+    def run_remat():
+        ins = []                      # REMAT keeps only boundary inputs
+        h = h0
+        for _ in range(n):
+            ins.append(h)
+            z = chain(h)
+            h = boundary(z)
+        g = jnp.ones_like(h)
+        for i in reversed(range(n)):
+            z = chain(ins[i])         # regenerate the residual: recompute
+            g = unit_bwd(z, g)
+        jax.block_until_ready(g)
+        return g
+
+    # warm-up: compile both paths + first-touch the lane's worker thread
+    warm_lane = TransferLane()
+    g_off = run_offload(warm_lane)
+    warm_lane.close()
+    g_rm = run_remat()
+    results_match = bool(np.allclose(np.asarray(g_off), np.asarray(g_rm),
+                                     rtol=1e-5, atol=1e-5))
+
+    best_off, best_exposed, best_copy, moved = float("inf"), 0.0, 0.0, 0.0
+    for _ in range(reps):
+        lane = TransferLane()
+        t0 = time.perf_counter()
+        run_offload(lane)
+        dt = time.perf_counter() - t0
+        st = lane.reset_stats()
+        lane.close()
+        if dt < best_off:
+            best_off = dt
+            best_exposed = float(st["exposed_s"])
+            best_copy = float(st["copy_s"])
+            moved = float(st["bytes_out"] + st["bytes_in"])
+    best_rm = _time_best(run_remat, (), reps)
+
+    # simulator-side bound at the bandwidth the step ACTUALLY achieved:
+    # at zero overlap every copy's wall time is exposed, and a caller
+    # can wait each copy out at most once, so measured exposure must sit
+    # inside [0, 1.5 x copy_s + 5 ms] — above the band the exposure
+    # accounting double-charged waits.  The idle-link calibration is
+    # reported as a contention factor, not gated on: without a DMA
+    # engine (CPU containers) contended copies run far below idle
+    # bandwidth, while on real accelerators copy_s ~= bytes/pcie and
+    # this band collapses onto the bandwidth model.
+    tol_s = 1.5 * best_copy + 5e-3
+    cal = measure_pcie_gbps(size_mb=4 if smoke else 16, repeats=2)
+    idle_round_trip_s = moved / (cal["pcie_gbps"] * 1e9)
+    return {
+        "units": n, "chain_matmuls": r, "residual_bytes": d * d * 4,
+        "results_match": results_match,
+        "offload_step_s": round(best_off, 6),
+        "remat_step_s": round(best_rm, 6),
+        "speedup": round(best_rm / max(best_off, 1e-12), 4),
+        "bytes_moved": int(moved),
+        "measured_exposed_s": round(best_exposed, 6),
+        "measured_copy_s": round(best_copy, 6),
+        "tolerance_s": round(tol_s, 6),
+        "exposed_within_tolerance": bool(0.0 <= best_exposed <= tol_s),
+        "overlap_measured": round(
+            max(0.0, 1.0 - best_exposed / max(best_copy, 1e-12)), 4),
+        "idle_round_trip_s": round(idle_round_trip_s, 6),
+        "contention_factor": round(
+            best_copy / max(idle_round_trip_s, 1e-12), 2),
+        "calibrated_pcie_gbps": cal["pcie_gbps"],
+        "pinned_host": cal["pinned_host"],
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -872,6 +1027,7 @@ def main(argv=None) -> int:
         "hybrid": bench_hybrid(args.smoke),
         "microbatch": bench_microbatch(args.smoke),
         "solver": bench_solver(args.smoke),
+        "offload_exec": bench_offload_exec(args.smoke),
     }
     sched96 = report["scheduler"]["units_96"]
     coll = report["collector"]
@@ -882,6 +1038,7 @@ def main(argv=None) -> int:
     hyb = report["hybrid"]
     mb = report["microbatch"]
     sv = report["solver"]["sweep"]
+    ox = report["offload_exec"]
     report["acceptance"] = {
         "compile_count_bounded_by_buckets":
             eng["mimose"]["compiles"] <= eng["mimose"]["buckets_seen"]
@@ -953,6 +1110,18 @@ def main(argv=None) -> int:
             any(r["strict_win"] for r in sv.values()),
         "solver_dp_matches_exhaustive":
             all(r["dp_matches_exhaustive"] for r in sv.values()),
+        # MEASURED, not simulated: at the transfer-bound point the
+        # double-buffered offload execution beats rematerialisation on
+        # wall-clock (same math both ways — gated on the outputs
+        # matching too)
+        "measured_offload_beats_remat_only":
+            ox["results_match"]
+            and ox["offload_step_s"] < ox["remat_step_s"],
+        # and the lane's measured exposed transfer stays inside the
+        # simulator's zero-overlap bound at the realised bandwidth —
+        # the lane's own copy wall time (x1.5 + 5 ms band)
+        "measured_transfer_within_tolerance":
+            ox["exposed_within_tolerance"],
     }
 
     with open(args.out, "w") as f:

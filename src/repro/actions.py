@@ -14,6 +14,13 @@ vocabulary, so a plan is now a tuple of ``Action`` values:
   the forward pass and fetch them back for the backward, cost = 2 x
   offloaded bytes over the PCIe link (partially overlappable with
   compute).
+* ``OFFLOAD_OPT`` — park the unit's *optimizer moments* (fp32 AdamW
+  m + v) in pinned host memory, ZeRO-Offload style.  Residual liveness
+  is identical to KEEP; what shrinks is the FIXED footprint (the
+  resident optimizer shard), so this action reaches budgets no
+  residual-side action can.  Cost = one round trip of the moment bytes
+  per step (the update reads and rewrites them), NOT scaled by the
+  microbatch split — the optimizer runs once per step.
 
 ``Action`` is an ``IntEnum`` with ``KEEP == 0`` and ``REMAT == 1`` on
 purpose: a plain bool mask converts value-exactly (``True -> REMAT``),
@@ -32,10 +39,12 @@ from typing import Iterable, Tuple
 
 
 class Action(enum.IntEnum):
-    """What to do with one plan unit's saved residuals."""
+    """What to do with one plan unit's saved residuals (and, for
+    ``OFFLOAD_OPT``, its optimizer-state shard)."""
     KEEP = 0
     REMAT = 1
     OFFLOAD = 2
+    OFFLOAD_OPT = 3
 
 
 def as_actions(mask: Iterable) -> Tuple[Action, ...]:

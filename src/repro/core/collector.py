@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.launch.roofline import plan_unit_flops
 from repro.models.lm import LM, PlanUnit
-from repro.sharding.budget import MeshBudget
+from repro.sharding.budget import MeshBudget, unit_moment_bytes
 
 
 def _tree_bytes(tree) -> int:
@@ -64,6 +64,11 @@ class UnitRecord:
     device_offloadable_bytes: int = 0
     # per-device boundary-tensor bytes (the checkpoint REMAT must keep)
     device_output_bytes: int = 0
+    # fp32 AdamW moment bytes (m + v) owned by the unit — what an
+    # OFFLOAD_OPT action parks on the host.  Param-shape-determined
+    # (input-size-independent), ZeRO-divided in the device_ variant.
+    opt_bytes: int = 0
+    device_opt_bytes: int = 0
 
 
 @dataclasses.dataclass
@@ -106,6 +111,17 @@ class CollectionResult:
 
     def device_offloadable_vector(self) -> np.ndarray:
         return np.array([r.device_offloadable_bytes for r in self.records],
+                        dtype=np.float64)
+
+    def opt_vector(self) -> np.ndarray:
+        """Per-unit fp32 AdamW moment bytes — the OFFLOAD_OPT action's
+        price vector.  Input-size-independent (param shapes only)."""
+        return np.array([r.opt_bytes for r in self.records],
+                        dtype=np.float64)
+
+    def device_opt_vector(self) -> np.ndarray:
+        """Per-device (ZeRO-divided) counterpart of ``opt_vector``."""
+        return np.array([r.device_opt_bytes for r in self.records],
                         dtype=np.float64)
 
     def total_activation_bytes(self) -> int:
@@ -265,6 +281,14 @@ class ShuttlingCollector:
             # timings must be measured per unit, never replayed from the
             # trace cache (they feed the paper's Table 2 overhead data)
             t_fwd = self._time_unit(u, xs) if self.measure_time else 0.0
+            # optimizer-moment bytes are param-shape math (no tracing):
+            # scan chunks carry stacked leaves whose leading layer axis
+            # needs the synthetic ``blocks`` path prefix
+            scanned_u = u.name.startswith("chunk")
+            opt_b = unit_moment_bytes(u.params, None, scanned=scanned_u)
+            dev_opt_b = (unit_moment_bytes(u.params, self.mesh_budget,
+                                           scanned=scanned_u)
+                         if self.mesh_budget is not None else opt_b)
             rec = UnitRecord(u.name, u.index, info["activation_bytes"],
                              info["output_bytes"], info["param_bytes"],
                              t_fwd, info["device_activation_bytes"],
@@ -272,7 +296,9 @@ class ShuttlingCollector:
                              offloadable_bytes=info["offloadable_bytes"],
                              device_offloadable_bytes=info[
                                  "device_offloadable_bytes"],
-                             device_output_bytes=info["device_output_bytes"])
+                             device_output_bytes=info["device_output_bytes"],
+                             opt_bytes=int(opt_b),
+                             device_opt_bytes=int(dev_opt_b))
             records.append(rec)
         self.stats["traces"] += traced
         self.stats["dedup_hits"] += hits

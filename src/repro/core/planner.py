@@ -109,6 +109,10 @@ class PlannerBase:
     offload: bool = False
     pcie_gbps: float = 16.0
     offload_overlap: float = 0.5
+    # optimizer-state offload (ZeRO-Offload style): let the scheduler
+    # park a unit's fp32 AdamW moments on the host for the whole step
+    opt_offload: bool = False
+    _opt_vector = None        # cached: moment bytes are input-independent
     # adaptive microbatching: largest gradient-accumulation split the
     # planner may pick per bucket (1 = plain full-batch steps), and the
     # fixed per-extra-microbatch cost it prices the split at
@@ -171,6 +175,13 @@ class PlannerBase:
                 if self.mesh_budget is not None
                 else res.offloadable_vector())
 
+    def collected_opt_vector(self, res) -> np.ndarray:
+        """Optimizer-moment bytes per unit (fp32 AdamW m+v), same frame
+        as above.  Input-size independent — pure parameter-shape math."""
+        return (res.device_opt_vector()
+                if self.mesh_budget is not None
+                else res.opt_vector())
+
     def planning_flops(self, flops):
         """Recompute-cost vector in the SAME frame as the byte vectors:
         per-device under a mesh budget (SPMD divides every unit's
@@ -186,7 +197,8 @@ class PlannerBase:
     # -- shared hybrid remat+offload state (Mimose + Sublinear) ----------
     def _init_hybrid(self, *, offload: bool, pcie_gbps: float,
                      offload_overlap: float, cost_aware: bool,
-                     degree: int, min_samples: int) -> None:
+                     degree: int, min_samples: int,
+                     opt_offload: bool = False) -> None:
         """One implementation of the offload knobs + the two extra
         per-unit fits (boundary and offloadable bytes) the hybrid
         scheduler needs, so the planners cannot drift apart."""
@@ -194,15 +206,28 @@ class PlannerBase:
             raise ValueError("offload=True needs cost_aware=True: the "
                              "hybrid selection compares remat FLOPs "
                              "against transfer time")
+        if opt_offload and not offload:
+            raise ValueError("opt_offload=True needs offload=True: "
+                             "moment parking rides the same host link "
+                             "and link pricing as residual offload")
         self.offload = offload
+        self.opt_offload = opt_offload
         self.pcie_gbps = pcie_gbps
         self.offload_overlap = offload_overlap
         self.est_output = PolyEstimator(degree, min_samples=min_samples)
         self.est_offload = PolyEstimator(degree, min_samples=min_samples)
+        # NOT an estimator: moment bytes depend only on the parameter
+        # shapes, so the first collection pins the vector exactly (and
+        # the snapshot estimator dict keeps its three-key format)
+        self._opt_vector = None
 
     def _feed_hybrid_estimators(self, s: int, res) -> None:
         self.est_output.add_sample(s, self.collected_output_vector(res))
         self.est_offload.add_sample(s, self.collected_offload_vector(res))
+        if self._opt_vector is None:
+            v = self.collected_opt_vector(res)
+            if v is not None and len(v):
+                self._opt_vector = np.asarray(v, dtype=np.float64)
 
     def _hybrid_vectors(self, size: int, res=None):
         """Boundary/offloadable byte vectors in the planning frame —
@@ -217,6 +242,22 @@ class PlannerBase:
                  else self.est_offload.predict(size))
         return out_v / div, off_v / div
 
+    def _opt_bytes_planning(self):
+        """The moment-bytes vector in the planning frame, or ``None``
+        when optimizer offload is off / not yet pinned.  The per-device
+        frame is already divided by the mesh moment sharding, so only
+        the legacy scalar divisor applies here."""
+        if not self.opt_offload or self._opt_vector is None:
+            return None
+        cfg = getattr(getattr(self, "lm", None), "cfg", None)
+        if cfg is not None and getattr(cfg, "remat_mode", "") == "scan":
+            # scan-mode moments are stacked across a chunk's layers in
+            # ONE leaf — parking a chunk cannot free a slice of a live
+            # buffer, so the trainer could not realise the bytes the
+            # plan would claim; don't offer the action
+            return None
+        return self._opt_vector / self.activation_divisor_scalar()
+
     def _hybrid_kwargs(self, size: int, res=None) -> dict:
         """The extra ``greedy_plan`` arguments for hybrid selection:
         the ``_hybrid_vectors`` plus the link pricing.  Empty when
@@ -224,10 +265,14 @@ class PlannerBase:
         v = self._hybrid_vectors(size, res)
         if v is None:
             return {}
-        return dict(output_bytes=v[0],
-                    offload_bytes=v[1],
-                    pcie_bytes_per_s=self.pcie_gbps * 1e9,
-                    offload_overlap=self.offload_overlap)
+        d = dict(output_bytes=v[0],
+                 offload_bytes=v[1],
+                 pcie_bytes_per_s=self.pcie_gbps * 1e9,
+                 offload_overlap=self.offload_overlap)
+        ov = self._opt_bytes_planning()
+        if ov is not None:
+            d["opt_bytes"] = ov
+        return d
 
     def resolve_fixed_bytes(self, params) -> float:
         """Resident (input-independent) bytes, resolved lazily from the
@@ -357,6 +402,7 @@ class MimosePlanner(PlannerBase):
                  bucket_tol: float = 0.10,
                  cost_aware: bool = True,
                  offload: bool = False,
+                 opt_offload: bool = False,
                  pcie_gbps: float = 16.0,
                  offload_overlap: float = 0.5,
                  max_microbatches: int = 1,
@@ -389,7 +435,8 @@ class MimosePlanner(PlannerBase):
         self._init_hybrid(offload=offload, pcie_gbps=pcie_gbps,
                           offload_overlap=offload_overlap,
                           cost_aware=cost_aware, degree=degree,
-                          min_samples=warmup_samples)
+                          min_samples=warmup_samples,
+                          opt_offload=opt_offload)
         # adaptive-estimator extension (the paper's §4.3 future work):
         # every ``audit_every``-th unseen size, re-collect abstractly and
         # re-fit if the prediction drifted beyond ``audit_tol``.
@@ -420,7 +467,7 @@ class MimosePlanner(PlannerBase):
                       "poisoned_plans": 0, "restored_samples": 0,
                       "restored_plans": 0, "dropped_plans": 0,
                       "solves": 0, "solver_swaps": 0, "solver_wins": 0,
-                      "solver_timeouts": 0}
+                      "solver_timeouts": 0, "offload_fallbacks": 0}
         # optimal-plan tier: a daemon thread solves the (k, action)
         # assignment exactly and swaps strictly better plans into the
         # cache above — all cache access goes through _cache_lock so
@@ -496,6 +543,9 @@ class MimosePlanner(PlannerBase):
         hv = self._hybrid_vectors(size, res_k)
         if hv is not None:
             d["output_bytes"], d["offload_bytes"] = hv
+        ov = self._opt_bytes_planning()
+        if ov is not None:
+            d["opt_bytes"] = ov
         return d
 
     def plan(self, params, batch):
@@ -702,7 +752,8 @@ class MimosePlanner(PlannerBase):
                                  self.planning_flops(flops), budget, fixed,
                                  output_bytes=out_v, offload_bytes=off_v,
                                  pcie_bytes_per_s=self.pcie_gbps * 1e9,
-                                 offload_overlap=self.offload_overlap)
+                                 offload_overlap=self.offload_overlap,
+                                 opt_bytes=self._opt_bytes_planning())
         else:
             # rung 3+: gradient accumulation — shrink the per-microbatch
             # footprint itself, the one lever that reaches below the

@@ -91,6 +91,10 @@ class Plan:
     # one-way bytes the plan streams to host (0.0 without OFFLOAD units)
     offload_bytes: float = 0.0
     n_offload: int = 0
+    # optimizer-moment bytes OFFLOAD_OPT units park on the host (ZeRO-
+    # Offload style; reduces the FIXED footprint, not the residual side)
+    opt_offload_bytes: float = 0.0
+    n_opt: int = 0
     # gradient-accumulation split factor: execute the step as this many
     # sequential microbatches (1 = the plain full-batch step).  Chosen
     # jointly with the action plan by ``greedy_plan_adaptive``; when
@@ -111,6 +115,8 @@ class Plan:
             self.remat = [a is Action.REMAT for a in self.actions]
         self.n_remat = sum(1 for a in self.actions if a is Action.REMAT)
         self.n_offload = sum(1 for a in self.actions if a is Action.OFFLOAD)
+        self.n_opt = sum(1 for a in self.actions
+                         if a is Action.OFFLOAD_OPT)
 
     def as_tuple(self) -> Tuple[bool, ...]:
         """Legacy bool view (True == REMAT).  Equals the old boolean
@@ -183,10 +189,18 @@ class ActionTables:
     t_off: np.ndarray      # per-unit exposed transfer seconds (OFFLOAD cost)
     freed_re: np.ndarray   # bytes REMAT frees: max(est - out, 0)
     freed_off: np.ndarray  # bytes OFFLOAD frees: off
+    # OFFLOAD_OPT tables (appended with defaults for back-compat with
+    # positional 3-action constructions; ``action_tables`` always fills
+    # them).  ``t_opt`` is per STEP — the optimizer runs once per step,
+    # so unlike ``t_off`` it never scales with the microbatch split.
+    opt: np.ndarray = None        # per-unit optimizer-moment bytes
+    t_opt: np.ndarray = None      # per-unit exposed opt round-trip seconds
+    freed_opt: np.ndarray = None  # fixed bytes OFFLOAD_OPT frees: opt
 
 
 def action_tables(est_mem, output_bytes=None, offload_bytes=None,
-                  flops=None, *, pcie_bytes_per_s: float = PCIE_BW,
+                  flops=None, *, opt_bytes=None,
+                  pcie_bytes_per_s: float = PCIE_BW,
                   offload_overlap: float = 0.5) -> ActionTables:
     """Build the shared per-unit cost/freed tables (missing vectors
     default to zeros, which disables the corresponding action)."""
@@ -198,15 +212,19 @@ def action_tables(est_mem, output_bytes=None, offload_bytes=None,
           if flops is not None else np.zeros(n))
     off = (np.clip(np.asarray(offload_bytes, dtype=np.float64), 0.0, est)
            if offload_bytes is not None else np.zeros(n))
-    assert est.shape == out.shape == off.shape == fl.shape, \
-        (est.shape, out.shape, off.shape, fl.shape)
+    opt = (np.maximum(np.asarray(opt_bytes, dtype=np.float64), 0.0)
+           if opt_bytes is not None else np.zeros(n))
+    assert est.shape == out.shape == off.shape == fl.shape == opt.shape, \
+        (est.shape, out.shape, off.shape, fl.shape, opt.shape)
     t_re = fl / PEAK_FLOPS
-    t_off = (2.0 * off / float(pcie_bytes_per_s)
-             * max(0.0, min(1.0, 1.0 - offload_overlap)))
+    hidden = max(0.0, min(1.0, 1.0 - offload_overlap))
+    t_off = 2.0 * off / float(pcie_bytes_per_s) * hidden
+    t_opt = 2.0 * opt / float(pcie_bytes_per_s) * hidden
     return ActionTables(est=est, out=out, off=off, fl=fl, t_re=t_re,
                         t_off=t_off,
                         freed_re=np.maximum(est - out, 0.0),
-                        freed_off=off)
+                        freed_off=off,
+                        opt=opt, t_opt=t_opt, freed_opt=opt)
 
 
 def action_candidates(tables: ActionTables,
@@ -224,6 +242,10 @@ def action_candidates(tables: ActionTables,
         if allow_offload and tables.freed_off[i] > 0:
             cand.append((tables.freed_off[i] / max(tables.t_off[i], 1e-12),
                          i, 2))
+        if (allow_offload and tables.freed_opt is not None
+                and tables.freed_opt[i] > 0):
+            cand.append((tables.freed_opt[i] / max(tables.t_opt[i], 1e-12),
+                         i, 3))
     cand.sort(key=lambda c: (-c[0], c[1], c[2]))
     return cand
 
@@ -234,6 +256,7 @@ def greedy_plan(est_mem: Sequence[float], budget_bytes: float,
                 byte_only: bool = False,
                 output_bytes: Sequence[float] | None = None,
                 offload_bytes: Sequence[float] | None = None,
+                opt_bytes: Sequence[float] | None = None,
                 pcie_bytes_per_s: float = PCIE_BW,
                 offload_overlap: float = 0.5) -> Plan:
     """Plan which units to rematerialise/offload under ``budget_bytes``.
@@ -257,12 +280,18 @@ def greedy_plan(est_mem: Sequence[float], budget_bytes: float,
     the remat-only plan always competes, so hybrid is never worse at
     equal budget.  Requires ``flops`` (and is skipped by
     ``byte_only=True``).
+
+    ``opt_bytes`` (per-unit optimizer-moment bytes, e.g.
+    ``CollectionResult.opt_vector``) additionally enables OFFLOAD_OPT —
+    parking a unit's moments on the host, which shrinks the fixed
+    footprint at one per-step round trip of the moment bytes.
     """
     if (offload_bytes is not None and flops is not None
             and not byte_only):
         return _hybrid_plan(est_mem, output_bytes, offload_bytes, flops,
                             budget_bytes, fixed_bytes, tol,
-                            pcie_bytes_per_s, offload_overlap)
+                            pcie_bytes_per_s, offload_overlap,
+                            opt_bytes=opt_bytes)
     if flops is not None and not byte_only:
         return _cost_aware_plan(est_mem, flops, budget_bytes, fixed_bytes,
                                 tol)
@@ -272,7 +301,8 @@ def greedy_plan(est_mem: Sequence[float], budget_bytes: float,
 
 def _hybrid_plan(est_mem, output_bytes, offload_bytes, flops,
                  budget_bytes: float, fixed_bytes: float, tol: float,
-                 pcie: float, overlap: float) -> Plan:
+                 pcie: float, overlap: float, *,
+                 opt_bytes=None) -> Plan:
     """Action-aware density greedy: score every (unit, action) candidate
     by bytes freed per cost-second, validate the resulting plans with
     the liveness simulator, and return the feasible plan with the
@@ -287,14 +317,17 @@ def _hybrid_plan(est_mem, output_bytes, offload_bytes, flops,
     from repro.core.simulator import simulate
 
     tabs = action_tables(est_mem, output_bytes, offload_bytes, flops,
+                         opt_bytes=opt_bytes,
                          pcie_bytes_per_s=pcie, offload_overlap=overlap)
     est, out, off, fl = tabs.est, tabs.out, tabs.off, tabs.fl
     freed_re, freed_off = tabs.freed_re, tabs.freed_off
+    opt, freed_opt = tabs.opt, tabs.freed_opt
     n = est.size
     total = float(est.sum())
     excess = total + float(fixed_bytes) - float(budget_bytes)
     if n == 0:
         return Plan([], excess, 0.0, total)
+    freed_of_code = {1: freed_re, 2: freed_off, 3: freed_opt}
 
     def density_greedy(allow_offload: bool) -> Plan:
         actions = [Action.KEEP] * n
@@ -307,7 +340,7 @@ def _hybrid_plan(est_mem, output_bytes, offload_bytes, flops,
             if actions[i] is not Action.KEEP:
                 continue
             actions[i] = Action(code)
-            freed_by[i] = freed_re[i] if code == 1 else freed_off[i]
+            freed_by[i] = freed_of_code[code][i]
             covered += freed_by[i]
             picks.append(i)
         # trim: drop the worst-density picks the coverage does not need
@@ -321,16 +354,18 @@ def _hybrid_plan(est_mem, output_bytes, offload_bytes, flops,
     def finish(actions) -> Plan:
         arr = np.array([int(a) for a in actions])
         covered = float(freed_re[arr == 1].sum()
-                        + freed_off[arr == 2].sum())
+                        + freed_off[arr == 2].sum()
+                        + freed_opt[arr == 3].sum())
         plan = Plan([], excess, covered, total, actions=tuple(actions))
         plan.recompute_flops = float(fl[arr == 1].sum())
         plan.offload_bytes = float(off[arr == 2].sum())
+        plan.opt_offload_bytes = float(opt[arr == 3].sum())
         return plan
 
     def replay(plan: Plan):
         return simulate(est, plan.actions, fixed_bytes, out, fl,
-                        offload_bytes=off, pcie_bytes_per_s=pcie,
-                        overlap=overlap)
+                        offload_bytes=off, opt_bytes=opt,
+                        pcie_bytes_per_s=pcie, overlap=overlap)
 
     def escalate(plan: Plan) -> Plan:
         """Repair against the liveness replay: the byte bookkeeping
@@ -340,7 +375,8 @@ def _hybrid_plan(est_mem, output_bytes, offload_bytes, flops,
         (shared with the OOM watchdog's DTR-style recovery ladder)."""
         return escalate_plan(plan.actions, est, fl, budget_bytes,
                              fixed_bytes, output_bytes=out,
-                             offload_bytes=off, pcie_bytes_per_s=pcie,
+                             offload_bytes=off, opt_bytes=opt,
+                             pcie_bytes_per_s=pcie,
                              offload_overlap=overlap)
 
     # candidates: hybrid density greedy (plus its replay-repaired
@@ -357,7 +393,7 @@ def _hybrid_plan(est_mem, output_bytes, offload_bytes, flops,
     if any(fits):
         best = min((i for i in range(len(cands)) if fits[i]),
                    key=lambda i: (sims[i].step_overhead_s,
-                                  cands[i].n_offload))
+                                  cands[i].n_offload + cands[i].n_opt))
     else:
         best = min(range(len(cands)), key=lambda i: sims[i].peak_bytes)
     return cands[best]
@@ -367,6 +403,7 @@ def escalate_plan(actions, est_mem, flops, budget_bytes: float,
                   fixed_bytes: float = 0.0, *,
                   output_bytes: Sequence[float] | None = None,
                   offload_bytes: Sequence[float] | None = None,
+                  opt_bytes: Sequence[float] | None = None,
                   pcie_bytes_per_s: float = PCIE_BW,
                   offload_overlap: float = 0.5) -> Plan:
     """DTR-style escalation of an existing action plan.
@@ -388,10 +425,12 @@ def escalate_plan(actions, est_mem, flops, budget_bytes: float,
     from repro.core.simulator import simulate
 
     tabs = action_tables(est_mem, output_bytes, offload_bytes, flops,
+                         opt_bytes=opt_bytes,
                          pcie_bytes_per_s=pcie_bytes_per_s,
                          offload_overlap=offload_overlap)
     est, out, off, fl = tabs.est, tabs.out, tabs.off, tabs.fl
     freed_re, freed_off = tabs.freed_re, tabs.freed_off
+    opt, freed_opt = tabs.opt, tabs.freed_opt
     n = est.size
     total = float(est.sum())
     excess = total + float(fixed_bytes) - float(budget_bytes)
@@ -399,10 +438,12 @@ def escalate_plan(actions, est_mem, flops, budget_bytes: float,
 
     def finish(acts) -> Plan:
         arr = np.array([int(a) for a in acts], dtype=np.int64)
-        covered = float(freed_re[arr == 1].sum() + freed_off[arr == 2].sum())
+        covered = float(freed_re[arr == 1].sum() + freed_off[arr == 2].sum()
+                        + freed_opt[arr == 3].sum())
         plan = Plan([], excess, covered, total, actions=tuple(acts))
         plan.recompute_flops = float(fl[arr == 1].sum())
         plan.offload_bytes = float(off[arr == 2].sum())
+        plan.opt_offload_bytes = float(opt[arr == 3].sum())
         return plan
 
     acts = (list(as_actions(actions)) if actions is not None
@@ -410,15 +451,19 @@ def escalate_plan(actions, est_mem, flops, budget_bytes: float,
     assert len(acts) == n, (len(acts), n)
     for _, i, code in cand:
         peak = simulate(est, tuple(acts), fixed_bytes, out, fl,
-                        offload_bytes=off,
+                        offload_bytes=off, opt_bytes=opt,
                         pcie_bytes_per_s=pcie_bytes_per_s,
                         overlap=offload_overlap).peak_bytes
         if peak <= budget_bytes:
             break
         if code == 1 and acts[i] is Action.KEEP:
             acts[i] = Action.REMAT
-        elif code == 2 and acts[i] is not Action.OFFLOAD:
+        elif code == 2 and acts[i] in (Action.KEEP, Action.REMAT):
+            # upgrade rung — but never downgrade an OFFLOAD_OPT unit:
+            # its freed fixed bytes would come back, raising the peak
             acts[i] = Action.OFFLOAD
+        elif code == 3 and acts[i] is Action.KEEP:
+            acts[i] = Action.OFFLOAD_OPT
     return finish(acts)
 
 
@@ -542,6 +587,7 @@ def greedy_plan_sharded(device_est_mem: Sequence[float], mesh_budget,
                         byte_only: bool = False,
                         output_bytes: Sequence[float] | None = None,
                         offload_bytes: Sequence[float] | None = None,
+                        opt_bytes: Sequence[float] | None = None,
                         pcie_bytes_per_s: float = PCIE_BW,
                         offload_overlap: float = 0.5) -> Plan:
     """``greedy_plan`` against a *per-device* budget.
@@ -563,7 +609,7 @@ def greedy_plan_sharded(device_est_mem: Sequence[float], mesh_budget,
     return greedy_plan(device_est_mem, mesh_budget.hbm_per_device_bytes,
                        fixed_device_bytes, tol=tol, flops=flops,
                        byte_only=byte_only, output_bytes=output_bytes,
-                       offload_bytes=offload_bytes,
+                       offload_bytes=offload_bytes, opt_bytes=opt_bytes,
                        pcie_bytes_per_s=pcie_bytes_per_s,
                        offload_overlap=offload_overlap)
 
@@ -616,12 +662,14 @@ def greedy_plan_adaptive(vectors_of_k, budget_bytes: float,
                            byte_only=byte_only,
                            output_bytes=v.get("output_bytes"),
                            offload_bytes=v.get("offload_bytes"),
+                           opt_bytes=v.get("opt_bytes"),
                            pcie_bytes_per_s=pcie_bytes_per_s,
                            offload_overlap=offload_overlap)
         plan.microbatch = k
         sim = simulate(v["est_mem"], plan.actions, fixed_bytes,
                        v.get("output_bytes"), v.get("flops"),
                        offload_bytes=v.get("offload_bytes"),
+                       opt_bytes=v.get("opt_bytes"),
                        pcie_bytes_per_s=pcie_bytes_per_s,
                        overlap=offload_overlap, microbatch=k,
                        accum_overhead_s=accum_overhead_s)

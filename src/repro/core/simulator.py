@@ -21,6 +21,14 @@ Plans may be the legacy boolean remat mask or a typed ``Action`` tuple
   is charged at the PCIe link (``offload_time_s`` = 2 x bytes / BW);
   ``overlap`` models the fraction hidden under compute, leaving
   ``exposed_transfer_s`` on the critical path.
+* OFFLOAD_OPT — the unit's optimizer moments (``opt_bytes[i]``) are
+  parked in pinned host memory across steps (ZeRO-Offload style).
+  Residual liveness is identical to KEEP; instead the FIXED footprint
+  drops by the parked bytes for the whole step.  The traffic is one
+  round trip of the moment bytes per step — the optimizer update
+  fetches and rewrites them — charged at the same link and overlap
+  model but NOT scaled by the microbatch split (the update runs once
+  per step, not once per microbatch).
 
 Microbatching (``microbatch=k``): the step runs ``k`` sequential
 forward+backward passes with gradient accumulation, so the liveness
@@ -67,6 +75,11 @@ class SimResult:
     offload_time_s: float = 0.0
     # transfer time NOT hidden under compute ((1 - overlap) x round trip)
     exposed_transfer_s: float = 0.0
+    # optimizer-state offload (OFFLOAD_OPT): moment bytes parked on the
+    # host, units parked, and the per-step round-trip update traffic
+    opt_offload_bytes: float = 0.0
+    opt_offload_units: int = 0
+    opt_transfer_s: float = 0.0
     # gradient-accumulation split factor of the replayed step (1 = the
     # plain full-batch step) and the fixed accumulation cost it adds to
     # the critical path ((k - 1) x per-microbatch overhead)
@@ -97,6 +110,7 @@ def simulate(act_bytes: Sequence[float], remat: Sequence,
              output_bytes: Sequence[float] | None = None,
              flops: Sequence[float] | None = None, *,
              offload_bytes: Sequence[float] | None = None,
+             opt_bytes: Sequence[float] | None = None,
              pcie_bytes_per_s: float = PCIE_BW,
              overlap: float = 0.5,
              microbatch: int = 1,
@@ -104,13 +118,18 @@ def simulate(act_bytes: Sequence[float], remat: Sequence,
     """Replay one training step's liveness under ``remat`` (a bool mask
     or an ``Action`` plan).  ``offload_bytes[i]`` is the unit's
     offloadable residual bytes (defaults to all of ``act_bytes[i]``);
-    only consulted for units the plan marks OFFLOAD.
+    only consulted for units the plan marks OFFLOAD.  ``opt_bytes[i]``
+    is the unit's optimizer-moment bytes (defaults to zeros — which
+    makes OFFLOAD_OPT a free no-op, so plans without a moment vector
+    replay exactly as before); only consulted for OFFLOAD_OPT units,
+    whose parked bytes leave the fixed footprint for the whole step.
 
     With ``microbatch=k > 1`` the byte/FLOP vectors must be the
     *per-microbatch* quantities; the replayed peak covers one
     microbatch (gradient accumulation runs them sequentially) while the
     per-step totals scale by ``k`` and ``(k - 1) * accum_overhead_s``
-    is charged as fixed accumulation cost."""
+    is charged as fixed accumulation cost.  Optimizer-state traffic
+    does NOT scale by ``k`` — the update runs once per step."""
     actions = as_actions(remat)
     n = len(act_bytes)
     act = [float(a) for a in act_bytes]
@@ -119,7 +138,15 @@ def simulate(act_bytes: Sequence[float], remat: Sequence,
     fl = ([float(f) for f in flops] if flops is not None else [0.0] * n)
     off = ([min(float(o), act[i]) for i, o in enumerate(offload_bytes)]
            if offload_bytes is not None else list(act))
-    live = fixed_bytes
+    opt = ([max(float(o), 0.0) for o in opt_bytes]
+           if opt_bytes is not None else [0.0] * n)
+    # OFFLOAD_OPT parks moment shards on the host for the WHOLE step
+    # (they live there across steps), so the fixed footprint drops
+    # before the forward pass begins
+    opt_moved = sum(opt[i] for i in range(n)
+                    if actions[i] is Action.OFFLOAD_OPT)
+    n_opt = sum(1 for a in actions if a is Action.OFFLOAD_OPT)
+    live = fixed_bytes - opt_moved
     peak = live
     timeline: List[Tuple[str, float]] = []
 
@@ -169,10 +196,15 @@ def simulate(act_bytes: Sequence[float], remat: Sequence,
     recompute_fl *= k
     moved *= k
     t_xfer = 2.0 * moved / float(pcie_bytes_per_s)
-    exposed = t_xfer * max(0.0, min(1.0, 1.0 - overlap))
+    # optimizer-state round trip is per STEP, not per microbatch
+    t_opt = 2.0 * opt_moved / float(pcie_bytes_per_s)
+    hidden = max(0.0, min(1.0, 1.0 - overlap))
+    exposed = (t_xfer + t_opt) * hidden
     return SimResult(peak, recompute, n_re, timeline, recompute_fl,
                      offload_bytes=moved, offload_units=n_off,
                      offload_time_s=t_xfer, exposed_transfer_s=exposed,
+                     opt_offload_bytes=opt_moved, opt_offload_units=n_opt,
+                     opt_transfer_s=t_opt,
                      microbatches=k,
                      accum_overhead_s=(k - 1) * float(accum_overhead_s))
 
@@ -196,6 +228,9 @@ class BatchSimResult:
     exposed_transfer_s: np.ndarray  # (m,) non-overlapped transfer time
     microbatches: int
     accum_overhead_s: float         # (k - 1) x per-microbatch overhead
+    # (m,) optimizer-moment bytes parked on host (zeros without an
+    # opt_bytes vector — back-compat with 3-action consumers)
+    opt_offload_bytes: np.ndarray = None
 
 
 def simulate_many(act_bytes: Sequence[float], plans,
@@ -203,23 +238,28 @@ def simulate_many(act_bytes: Sequence[float], plans,
                   output_bytes: Sequence[float] | None = None,
                   flops: Sequence[float] | None = None, *,
                   offload_bytes: Sequence[float] | None = None,
+                  opt_bytes: Sequence[float] | None = None,
                   pcie_bytes_per_s: float = PCIE_BW,
                   overlap: float = 0.5,
                   microbatch: int = 1,
                   accum_overhead_s: float = 0.0) -> BatchSimResult:
     """Replay ``m`` plans at once.  ``plans`` is an ``(m, n)`` array of
-    action codes (0 KEEP / 1 REMAT / 2 OFFLOAD).  Semantically each row
-    is ``simulate`` on the same vectors; see ``BatchSimResult``.
+    action codes (0 KEEP / 1 REMAT / 2 OFFLOAD / 3 OFFLOAD_OPT).
+    Semantically each row is ``simulate`` on the same vectors; see
+    ``BatchSimResult``.
 
     The closed form this vectorises (with ``c_j`` the plan's forward
-    contribution of unit j — KEEP ``act``, REMAT ``out``, OFFLOAD
-    ``act - off`` — and ``restore_j`` the backward restore — 0 /
-    ``act`` / ``off``):
+    contribution of unit j — KEEP/OFFLOAD_OPT ``act``, REMAT ``out``,
+    OFFLOAD ``act - off`` — and ``restore_j`` the backward restore —
+    0 / ``act`` / ``off`` / 0):
 
-    * forward transient at i:  ``fixed + sum_{j<i} c_j + act_i + out_i``
-    * end of forward:          ``fixed + sum_j c_j``
-    * backward at i:  ``fixed + sum_j c_j + sum_{j>i}(restore_j - act_j)
+    * forward transient at i:  ``fixed' + sum_{j<i} c_j + act_i + out_i``
+    * end of forward:          ``fixed' + sum_j c_j``
+    * backward at i:  ``fixed' + sum_j c_j + sum_{j>i}(restore_j - act_j)
       + restore_i + act_i``
+
+    where ``fixed' = fixed - sum_{j OFFLOAD_OPT} opt_j`` (the parked
+    moment shards leave the device for the whole step).
     """
     A = np.asarray(plans, dtype=np.int64)
     if A.ndim != 2:
@@ -233,12 +273,18 @@ def simulate_many(act_bytes: Sequence[float], plans,
           if flops is not None else np.zeros(n))
     off = (np.minimum(np.asarray(offload_bytes, dtype=np.float64), act)
            if offload_bytes is not None else act.copy())
+    opt = (np.maximum(np.asarray(opt_bytes, dtype=np.float64), 0.0)
+           if opt_bytes is not None else np.zeros(n))
     fixed = float(fixed_bytes)
 
     re_mask = A == 1
     off_mask = A == 2
+    opt_mask = A == 3
     c = np.where(re_mask, out, np.where(off_mask, act - off, act))
     restore = np.where(re_mask, act, np.where(off_mask, off, 0.0))
+    # per-row fixed footprint: parked moment shards live on the host
+    opt_moved = (opt_mask * opt).sum(axis=1)
+    fixed_row = fixed - opt_moved
 
     if n:
         pre = np.cumsum(c, axis=1) - c               # exclusive prefix
@@ -247,22 +293,26 @@ def simulate_many(act_bytes: Sequence[float], plans,
         d = restore - act
         suf = np.cumsum(d[:, ::-1], axis=1)[:, ::-1] - d  # exclusive suffix
         bwd_peak = (total[:, None] + suf + restore + act).max(axis=1)
-        peak = fixed + np.maximum(
+        peak = fixed_row + np.maximum(
             0.0, np.maximum(np.maximum(fwd_peak, total), bwd_peak))
     else:
-        peak = np.full(m, fixed)
+        peak = fixed_row + np.zeros(m)
 
     k = max(int(microbatch), 1)
     rec_fl = (re_mask * fl).sum(axis=1) * k
     moved = (off_mask * off).sum(axis=1) * k
     t_xfer = 2.0 * moved / float(pcie_bytes_per_s)
-    exposed = t_xfer * max(0.0, min(1.0, 1.0 - overlap))
+    # optimizer-state round trip is per STEP, not per microbatch
+    t_opt = 2.0 * opt_moved / float(pcie_bytes_per_s)
+    hidden = max(0.0, min(1.0, 1.0 - overlap))
+    exposed = (t_xfer + t_opt) * hidden
     accum = (k - 1) * float(accum_overhead_s)
     overhead = rec_fl / PEAK_FLOPS + exposed + accum
     return BatchSimResult(peak_bytes=peak, step_overhead_s=overhead,
                           recompute_flops=rec_fl, offload_bytes=moved,
                           exposed_transfer_s=exposed, microbatches=k,
-                          accum_overhead_s=accum)
+                          accum_overhead_s=accum,
+                          opt_offload_bytes=opt_moved)
 
 
 @dataclasses.dataclass
@@ -319,6 +369,7 @@ def simulate_sharded(device_act_bytes: Sequence[float],
                      output_bytes: Sequence[float] | None = None,
                      flops: Sequence[float] | None = None, *,
                      offload_bytes: Sequence[float] | None = None,
+                     opt_bytes: Sequence[float] | None = None,
                      pcie_bytes_per_s: float = PCIE_BW,
                      overlap: float = 0.5,
                      microbatch: int = 1,
@@ -333,7 +384,9 @@ def simulate_sharded(device_act_bytes: Sequence[float],
     without hardware — the multi-device analogue of ``simulate``.
     ``flops`` should be the *per-device* per-unit recompute FLOPs
     (global FLOPs / n_devices under SPMD); ``offload_bytes`` the
-    per-device offloadable residual bytes.  ``microbatch=k`` replays a
+    per-device offloadable residual bytes; ``opt_bytes`` the per-device
+    optimizer-moment bytes (already ZeRO-divided — see
+    ``MeshBudget.unit_moment_bytes``).  ``microbatch=k`` replays a
     k-way gradient-accumulation step per device (the vectors must then
     be per-microbatch per-device bytes) — under SPMD every device runs
     the same k sequential microbatches, so one per-device microbatched
@@ -341,6 +394,7 @@ def simulate_sharded(device_act_bytes: Sequence[float],
     """
     base = simulate(device_act_bytes, remat, fixed_device_bytes,
                     output_bytes, flops, offload_bytes=offload_bytes,
+                    opt_bytes=opt_bytes,
                     pcie_bytes_per_s=pcie_bytes_per_s, overlap=overlap,
                     microbatch=microbatch,
                     accum_overhead_s=accum_overhead_s)

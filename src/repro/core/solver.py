@@ -131,6 +131,8 @@ def _dp_actions(tabs: ActionTables, headroom: float, *,
     est, out, off = tabs.est, tabs.out, tabs.off
     t_re, t_off = tabs.t_re, tabs.t_off
     n = est.size
+    opt = tabs.opt if tabs.opt is not None else np.zeros(n)
+    t_opt = tabs.t_opt if tabs.t_opt is not None else np.zeros(n)
     B = float(headroom) + _FEAS_TOL
     g = float(grid_bytes)
     v = np.zeros(1)
@@ -142,11 +144,22 @@ def _dp_actions(tabs: ActionTables, headroom: float, *,
         if deadline is not None and time.monotonic() > deadline:
             raise SolveTimeout
         a_i, o_i, f_i = float(est[i]), float(out[i]), float(off[i])
+        p_i = float(opt[i])
         ok_fwd = v + (a_i + o_i) <= B      # forward transient of unit i
         # (contribution, restore, remat-out, unit cost) per action code
-        trans = ((a_i, 0.0, 0.0, 0.0),                      # KEEP
+        trans = [(a_i, 0.0, 0.0, 0.0),                      # KEEP
                  (o_i, a_i, o_i, float(t_re[i])),           # REMAT
-                 (a_i - f_i, f_i, 0.0, float(t_off[i])))    # OFFLOAD
+                 (a_i - f_i, f_i, 0.0, float(t_off[i]))]    # OFFLOAD
+        if p_i > 0:
+            # OFFLOAD_OPT: KEEP liveness, but the parked moment bytes
+            # raise the headroom.  Folding the credit into the forward
+            # contribution grants it to positions >= i only (prefix-only
+            # credit — conservative: the DP can over-, never
+            # under-estimate a peak, and the winner is re-scored by the
+            # exact scalar simulate).  ``t_opt`` is per STEP while
+            # t_re/t_off are per microbatch, a ranking skew at k > 1
+            # the exact replay also corrects.
+            trans.append((a_i - p_i, 0.0, 0.0, float(t_opt[i])))
         cat: list = []
         for code, (cc, rr, qq, ww) in enumerate(trans):
             v2 = v + cc
@@ -200,32 +213,44 @@ def _dp_actions(tabs: ActionTables, headroom: float, *,
     return tuple(codes), float(cost[best])
 
 
-def enumerate_plans(n: int) -> np.ndarray:
-    """All ``3^n`` action-code rows, lexicographic — the shared
-    enumeration of the exhaustive fallback and ``tests/oracle.py``."""
+def enumerate_plans(n: int, base: int = 3) -> np.ndarray:
+    """All ``base^n`` action-code rows, lexicographic — the shared
+    enumeration of the exhaustive fallback and ``tests/oracle.py``.
+    ``base=3`` covers KEEP/REMAT/OFFLOAD (n <= 12); ``base=4`` adds
+    OFFLOAD_OPT (n <= 8: 4^8 = 65536 rows)."""
     if n == 0:
         return np.zeros((1, 0), dtype=np.int64)
-    if n > 12:
-        raise ValueError(f"3^{n} plans is too many to enumerate")
-    codes = np.arange(3 ** n, dtype=np.int64)
-    place = 3 ** np.arange(n - 1, -1, -1, dtype=np.int64)
-    return (codes[:, None] // place) % 3
+    limit = 12 if base <= 3 else 8
+    if n > limit:
+        raise ValueError(f"{base}^{n} plans is too many to enumerate")
+    codes = np.arange(base ** n, dtype=np.int64)
+    place = base ** np.arange(n - 1, -1, -1, dtype=np.int64)
+    return (codes[:, None] // place) % base
 
 
 def _exhaustive_actions(tabs: ActionTables, budget: float, fixed: float,
                         k: int, pcie: float, overlap: float,
                         accum: float) -> Tuple[int, ...]:
-    """Brute force all ``3^n`` plans through ``simulate_many``; returns
-    the feasible row with the lowest (overhead, n_offload, index), or
-    the min-peak row when nothing fits."""
-    A = enumerate_plans(tabs.est.size)
+    """Brute force all plans through ``simulate_many``; returns the
+    feasible row with the lowest (overhead, n_host_actions, index), or
+    the min-peak row when nothing fits.  Enumerates base 4 (OFFLOAD_OPT
+    included) only when the opt vector has positive entries and the
+    chain is short enough (n <= 8); otherwise base 3, bit-identical to
+    the pre-opt solver."""
+    n = tabs.est.size
+    has_opt = tabs.opt is not None and bool(np.any(tabs.opt > 0))
+    base = 4 if has_opt and n <= 8 else 3
+    A = enumerate_plans(n, base=base)
     bs = simulate_many(tabs.est, A, fixed, tabs.out, tabs.fl,
-                       offload_bytes=tabs.off, pcie_bytes_per_s=pcie,
+                       offload_bytes=tabs.off, opt_bytes=tabs.opt,
+                       pcie_bytes_per_s=pcie,
                        overlap=overlap, microbatch=k,
                        accum_overhead_s=accum)
     feas = np.nonzero(bs.peak_bytes <= budget + _FEAS_TOL)[0]
     if feas.size:
-        n_off = (A[feas] == 2).sum(axis=1)
+        # ties prefer fewer host-involved units (OFFLOAD + OFFLOAD_OPT;
+        # identical to the old (A == 2) count for base-3 enumerations)
+        n_off = (A[feas] >= 2).sum(axis=1)
         order = np.lexsort((feas, n_off, bs.step_overhead_s[feas]))
         best = int(feas[order[0]])
     else:
@@ -292,11 +317,13 @@ def solve(vectors_of_k, budget_bytes: float, fixed_bytes: float = 0.0, *,
         sim = simulate(v["est_mem"], plan.actions, fixed,
                        v.get("output_bytes"), v.get("flops"),
                        offload_bytes=v.get("offload_bytes"),
+                       opt_bytes=v.get("opt_bytes"),
                        pcie_bytes_per_s=pcie_bytes_per_s,
                        overlap=offload_overlap, microbatch=k,
                        accum_overhead_s=accum_overhead_s)
         plan.recompute_flops = sim.recompute_flops
         plan.offload_bytes = sim.offload_bytes
+        plan.opt_offload_bytes = sim.opt_offload_bytes
         cands.append((plan, sim, float(v.get("pad_overhead_s", 0.0)),
                       origin))
 
@@ -321,6 +348,7 @@ def solve(vectors_of_k, budget_bytes: float, fixed_bytes: float = 0.0, *,
         v = vectors_of_k(k)
         tabs = action_tables(v["est_mem"], v.get("output_bytes"),
                              v.get("offload_bytes"), v.get("flops"),
+                             opt_bytes=v.get("opt_bytes"),
                              pcie_bytes_per_s=pcie_bytes_per_s,
                              offload_overlap=offload_overlap)
         n = tabs.est.size
@@ -345,7 +373,8 @@ def solve(vectors_of_k, budget_bytes: float, fixed_bytes: float = 0.0, *,
         total = float(tabs.est.sum())
         arr = np.asarray(codes, dtype=np.int64)
         covered = float(tabs.freed_re[arr == 1].sum()
-                        + tabs.freed_off[arr == 2].sum())
+                        + tabs.freed_off[arr == 2].sum()
+                        + tabs.freed_opt[arr == 3].sum())
         plan = Plan([], total + fixed - budget, covered, total,
                     actions=tuple(Action(int(c)) for c in codes))
         plan.microbatch = k
@@ -473,6 +502,7 @@ class BackgroundSolver:
         sim = simulate(v["est_mem"], plan.actions, req.fixed_bytes,
                        v.get("output_bytes"), v.get("flops"),
                        offload_bytes=v.get("offload_bytes"),
+                       opt_bytes=v.get("opt_bytes"),
                        pcie_bytes_per_s=req.pcie_bytes_per_s,
                        overlap=req.offload_overlap, microbatch=k,
                        accum_overhead_s=req.accum_overhead_s)

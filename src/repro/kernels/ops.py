@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import offload_dma as _dma
 from repro.kernels import ssd_scan as _ssd
 
 
@@ -36,6 +37,16 @@ def flash_attention(q, k, v, kv_len=None, *, causal: bool = True,
     vt = v.transpose(0, 2, 1, 3)
     o = _fa.flash_attention(qt, kt, vt, kv_len, causal, window, not _on_tpu())
     return o.transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk_elems",))
+def residual_dma_copy(x, *, chunk_elems: int = 1 << 15):
+    """Stage a residual checkpoint through the double-buffered DMA
+    pipeline (``offload_dma``): chunk ``i+1``'s fetch overlaps chunk
+    ``i``'s drain.  Value-identical to ``x`` — the schedule, not the
+    data, is the product."""
+    return _dma.dma_copy(x, chunk_elems=chunk_elems,
+                         interpret=not _on_tpu())
 
 
 @partial(jax.jit, static_argnames=("chunk", "chunks_per_block"))

@@ -69,6 +69,24 @@ def engine_report(trainer, planner=None) -> str:
                 lines.append(f"| {b} | {d['greedy_s']:.6f} "
                              f"| {d['solved_s']:.6f} "
                              f"| {d['improvement_pct']:.2f} |")
+    # real-offload execution — only when something moved or degraded,
+    # so remat-only runs keep the report unchanged.  The degradation
+    # line is the anti-silent-failure guarantee: a mesh that cannot
+    # shard the host-offload calls shows up HERE, not as a mystery
+    # step-time regression
+    hist = getattr(trainer, "history", [])
+    degraded = sum(getattr(s, "offload_degraded", False) for s in hist)
+    exposed = sum(getattr(s, "exposed_transfer_s", 0.0) for s in hist)
+    sim_x = sum(getattr(s, "sim_transfer_s", 0.0) for s in hist)
+    fallbacks = (stats or {}).get("offload_fallbacks", 0)
+    if exposed or degraded or fallbacks:
+        lines.append(f"offload: exposed transfer {exposed:.4f}s measured "
+                     f"vs {sim_x:.4f}s simulated")
+    if degraded or fallbacks:
+        lines.append(f"offload degraded to remat: {degraded} step(s), "
+                     f"{fallbacks} mesh/bucket fallback(s) — host offload "
+                     f"unavailable on this runtime (plans keep their "
+                     f"typed actions)")
     # elastic-resilience counters (repro.train.resilience) — only when
     # something actually happened, so quiet runs keep a quiet report
     wd = getattr(trainer, "watchdog", None)

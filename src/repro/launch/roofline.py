@@ -39,6 +39,15 @@ PCIE_BW = 16e9               # bytes/s host<->device
 MICROBATCH_OVERHEAD_S = 5e-4
 
 
+def calibrated_pcie_gbps(default: float = PCIE_BW / 1e9) -> float:
+    """The host link bandwidth planning should actually price:
+    ``$MIMOSE_PCIE_GBPS`` wins, then this host's measured calibration
+    file (``tools/bench_offload_bw.py`` writes it), then ``default`` —
+    the 16 GB/s roofline constant unless a caller knows better."""
+    from repro.train.transfer import calibrated_pcie_gbps as _measured
+    return _measured(default)
+
+
 def offload_transfer_s(bytes_moved: float,
                        pcie_bytes_per_s: float = PCIE_BW) -> float:
     """Round-trip host-offload time for ``bytes_moved`` residual bytes.

@@ -142,11 +142,14 @@ def build_setup(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
                 max_microbatches: int = 1) -> Setup:
     lm = build_model(arch_cfg, attn_impl=attn_impl)
     lm.logits_f32 = logits_f32
-    if offload and mesh.devices.size > 1:
-        # current XLA cannot shard host-offload custom-calls under SPMD:
-        # plan with OFFLOAD actions (the budget math is the point of the
-        # dry-run) but execute them as plain remat on multi-device meshes
-        lm.offload_exec = False
+    if offload:
+        # probe whether THIS (jaxlib, backend, mesh) can shard the
+        # host-offload custom-calls; only degrade OFFLOAD execution to
+        # remat where the probe compile genuinely fails (warn-once per
+        # mesh signature instead of silently dropping the offload axis
+        # on every multi-device mesh)
+        from repro.models.lm import configure_offload
+        configure_offload(lm, mesh)
     if prefill_last_only and shape.kind == "prefill":
         lm.last_logits_only = True
     if seq_parallel:

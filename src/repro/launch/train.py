@@ -61,9 +61,17 @@ def main(argv=None):
                     help="hybrid remat+offload plans: units may stream "
                          "residuals to pinned host memory when that beats "
                          "recompute (never worse at equal budget)")
-    ap.add_argument("--pcie-gbps", type=float, default=16.0,
+    ap.add_argument("--pcie-gbps", type=float, default=None,
                     help="host<->device link bandwidth (GB/s) the planner "
-                         "prices OFFLOAD actions at")
+                         "prices OFFLOAD actions at; default: this host's "
+                         "measured calibration (tools/bench_offload_bw.py "
+                         "writes it; $MIMOSE_PCIE_GBPS overrides), else 16")
+    ap.add_argument("--opt-offload", action="store_true",
+                    help="ZeRO-Offload-style fourth action: a plan may "
+                         "park a unit's fp32 optimizer moments in host "
+                         "memory for the whole step when the freed fixed "
+                         "bytes beat the per-step link round trip "
+                         "(needs --offload)")
     ap.add_argument("--max-microbatches", type=int, default=1,
                     help="adaptive microbatching: the planner may split "
                          "a bucket's step into up to K gradient-"
@@ -160,20 +168,34 @@ def main(argv=None):
     if args.offload and args.byte_only_remat:
         ap.error("--offload needs the cost-aware selector "
                  "(drop --byte-only-remat)")
+    if args.opt_offload and not args.offload:
+        ap.error("--opt-offload needs --offload (moment parking rides "
+                 "the same host link)")
+    if args.opt_offload and args.planner != "mimose":
+        ap.error("--opt-offload needs --planner mimose")
     if args.solver != "off" and args.planner != "mimose":
         ap.error("--solver needs --planner mimose (the solver tier swaps "
                  "plans into the Mimose bucket cache)")
-    if args.offload and mesh is not None:
-        # same guard as launch/steps.py: current XLA cannot shard the
-        # host-offload custom-calls under SPMD — plan with OFFLOAD
-        # actions but execute them as plain remat under a live mesh
-        lm.offload_exec = False
+    if args.pcie_gbps is None:
+        # price the link at what THIS host measured, not the roofline
+        # constant (tools/bench_offload_bw.py writes the calibration)
+        from repro.launch.roofline import PCIE_BW, calibrated_pcie_gbps
+        args.pcie_gbps = calibrated_pcie_gbps(PCIE_BW / 1e9)
+    offload_degraded = False
+    if args.offload:
+        # probe-based: only degrade OFFLOAD execution to remat where a
+        # minimal offloaded grad genuinely fails to compile under this
+        # mesh (warn-once per mesh signature; the plan keeps its typed
+        # actions either way)
+        from repro.models.lm import configure_offload
+        offload_degraded = configure_offload(lm, mesh)
     planner = {
         "mimose": lambda: MimosePlanner(lm, budget, quantum=args.quantum,
                                         mesh_budget=mesh_budget,
                                         warmup_samples=3,
                                         cost_aware=not args.byte_only_remat,
                                         offload=args.offload,
+                                        opt_offload=args.opt_offload,
                                         pcie_gbps=args.pcie_gbps,
                                         max_microbatches=args.max_microbatches,
                                         solver=args.solver,
@@ -189,6 +211,9 @@ def main(argv=None):
                                      max_microbatches=args.max_microbatches),
         "none": lambda: NonePlanner(lm),
     }[args.planner]()
+    if offload_degraded and isinstance(getattr(planner, "stats", None), dict):
+        planner.stats["offload_fallbacks"] = (
+            planner.stats.get("offload_fallbacks", 0) + 1)
 
     opt = AdamW(lr=cosine_schedule(args.lr, 10, args.steps))
     snapshots = None

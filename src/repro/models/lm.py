@@ -75,6 +75,82 @@ def _offload_unit(fn):
 
 
 # ---------------------------------------------------------------------------
+# SPMD offload capability probe
+#
+# Older launch paths degraded EVERY multi-device mesh to offload_exec =
+# False because some XLA builds cannot shard the host-offload
+# custom-calls.  That threw the offload axis away on runtimes that CAN
+# shard them.  The probe below compiles a minimal offloaded grad under
+# the actual mesh once (cached per mesh signature) and only falls back
+# where the compile genuinely fails — with a single warning per mesh so
+# the degradation is never silent (the planner keeps emitting typed
+# OFFLOAD actions either way; execution just prices them as remat).
+# ---------------------------------------------------------------------------
+
+_spmd_offload_cache: Dict[tuple, bool] = {}
+_spmd_offload_warned: set = set()
+
+
+def _mesh_probe_sig(mesh) -> tuple:
+    d = mesh.devices
+    return (tuple(mesh.axis_names), tuple(int(s) for s in d.shape),
+            str(getattr(d.flat[0], "platform", "cpu")))
+
+
+def spmd_offload_supported(mesh=None) -> bool:
+    """True when OFFLOAD actions can execute as real host offload under
+    ``mesh``.  Single device (or no mesh): just needs the offload
+    policy.  SPMD: try-compiling a tiny offloaded grad under the mesh
+    answers for this exact (jaxlib, backend, mesh-shape) combination."""
+    if host_offload_policy() is None:
+        return False
+    if mesh is None or int(mesh.devices.size) <= 1:
+        return True
+    sig = _mesh_probe_sig(mesh)
+    hit = _spmd_offload_cache.get(sig)
+    if hit is not None:
+        return hit
+    try:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        def unit(y):
+            y = checkpoint_name(y, OFFLOAD_RESIDUAL_NAME)
+            return (jnp.sin(y) * y).sum()
+
+        ckpt = jax.checkpoint(unit, policy=host_offload_policy())
+        sh = NamedSharding(mesh, PartitionSpec(tuple(mesh.axis_names)))
+        x = jnp.zeros((int(mesh.devices.size), 8), jnp.float32)
+        jax.jit(jax.grad(ckpt), in_shardings=sh,
+                out_shardings=sh).lower(x).compile()
+        ok = True
+    except Exception:
+        ok = False
+    _spmd_offload_cache[sig] = ok
+    return ok
+
+
+def configure_offload(lm: "LM", mesh=None) -> bool:
+    """Set ``lm.offload_exec`` from the probe.  Returns True when the
+    mesh lost real offload execution (OFFLOAD will degrade to remat) —
+    callers count that as an offload fallback; the warning fires once
+    per mesh signature."""
+    ok = spmd_offload_supported(mesh)
+    lm.offload_exec = ok
+    if not ok:
+        sig = (_mesh_probe_sig(mesh) if mesh is not None
+               else ("<no-mesh>",))
+        if sig not in _spmd_offload_warned:
+            _spmd_offload_warned.add(sig)
+            import warnings
+            warnings.warn(
+                f"host offload unavailable under mesh {sig}: OFFLOAD "
+                f"actions will execute as plain remat (plans keep their "
+                f"typed actions; step time loses the offload axis)",
+                RuntimeWarning, stacklevel=2)
+    return not ok
+
+
+# ---------------------------------------------------------------------------
 # per-family block init / apply
 # ---------------------------------------------------------------------------
 

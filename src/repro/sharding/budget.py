@@ -216,6 +216,41 @@ class MeshBudget:
         return div
 
 
+def unit_moment_bytes(unit_params, budget: Optional[MeshBudget] = None, *,
+                      scanned: bool = False) -> float:
+    """Fp32 AdamW moment bytes (m + v) owned by ONE plan unit — the
+    per-unit price vector of the ``OFFLOAD_OPT`` action.
+
+    ``unit_params`` is the unit's parameter subtree (one block in
+    unrolled mode, a scan-stacked layer slice in scan mode — the
+    stacked leaves count every layer in the chunk, which is exactly
+    what parking the chunk's moments frees).  Without a budget the
+    bytes are global (``2 x 4 x n`` per leaf); with a ``MeshBudget``
+    each leaf divides by its moment divisor (param sharding plus the
+    ZeRO-1 data sharding), matching ``fixed_train_bytes_per_device``'s
+    accounting leaf for leaf so the freed bytes subtract consistently
+    from the fixed footprint.  ``scanned=True`` prepends a synthetic
+    ``blocks`` path entry so ``specs.param_spec`` sees the stacked
+    leaves' leading layer axis.
+    """
+    prefix = (jax.tree_util.DictKey("blocks"),) if scanned else ()
+    total = 0.0
+
+    def one(path, leaf):
+        nonlocal total
+        if not hasattr(leaf, "shape"):
+            return leaf
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        div = (budget._moment_divisor(prefix + tuple(path), leaf,
+                                      scanned=scanned)
+               if budget is not None else 1)
+        total += 2 * 4 * n / div                     # fp32 m + v
+        return leaf
+
+    jax.tree_util.tree_map_with_path(one, unit_params)
+    return float(total)
+
+
 def fixed_train_bytes_per_device(params, budget: MeshBudget, *,
                                  scanned: bool = False,
                                  optimizer: str = "adamw",

@@ -52,7 +52,8 @@ from repro.core.planner import PlannerBase
 from repro.data.pipeline import pad_batch
 from repro.models.lm import LM
 from repro.optim.adamw import AdamW, AdamWState
-from repro.train.accumulate import build_accumulated_step
+from repro.train.accumulate import accumulated_grads, build_accumulated_step
+from repro.train.transfer import TransferLane
 
 
 @dataclasses.dataclass
@@ -67,6 +68,18 @@ class StepStats:
     padded_tokens: int = 0     # bucket-shape tokens actually computed over
     offload_units: int = 0     # units whose residuals went to host memory
     microbatches: int = 1      # gradient-accumulation split of the step
+    opt_offload_units: int = 0  # units whose optimizer moments were parked
+    # True when the plan carried OFFLOAD actions but this runtime/mesh
+    # cannot execute real host offload (lm.offload_exec == False): the
+    # step ran them as plain remat — the silent SPMD degradation, made
+    # visible (see launch/report.engine_report)
+    offload_degraded: bool = False
+    # measured wall time this step spent BLOCKED on host<->device
+    # moment traffic (TransferLane accounting), and what the simulator's
+    # pricing predicts for the same bytes — the pair the bench gate
+    # holds to a tolerance band
+    exposed_transfer_s: float = 0.0
+    sim_transfer_s: float = 0.0
 
 
 class Trainer:
@@ -92,6 +105,14 @@ class Trainer:
         self.global_step = 0              # across restarts (set on resume)
         self.data_cursor = 0              # batches consumed from the stream
         self.restores = 0                 # snapshots restored into this run
+        # real offload execution: one dedicated transfer lane (lazy —
+        # only plans with OFFLOAD_OPT units ever create it) moves
+        # optimizer moments device<->host with double buffering; the
+        # parked-unit set is the execution-side record of which units'
+        # moments currently live on the host
+        self.transfer_lane: Optional[TransferLane] = None
+        self._parked: set = set()
+        self._degraded_buckets: set = set()
         # bounded LRU: a long-tailed bucket distribution must not pin a
         # compiled executable per rare bucket forever
         self._step_cache = LRUCache(max_cached_steps)
@@ -143,6 +164,38 @@ class Trainer:
         opt = self.optimizer
         lm = self.lm
         policy = self.remat_policy
+        opt_units = tuple(i for i, m in enumerate(mask) if int(m) == 3)
+        if opt_units and lm.cfg.remat_mode != "scan":
+            # OFFLOAD_OPT (ZeRO-Offload style): the step splits into a
+            # grad phase and an update phase, because the parked units'
+            # moments must be OFF the device exactly while activations
+            # peak (forward/backward) and on it only for opt.update.
+            # The trainer runs the choreography (_run_opt_split): grads
+            # dispatch async, the TransferLane uploads parked moments
+            # behind the backward pass, update runs, fresh moments
+            # stream back out.
+            if microbatch > 1:
+                def grad_fn(p, b):
+                    return accumulated_grads(lm, p, b, microbatch,
+                                             actions=mask,
+                                             remat_policy=policy)
+            else:
+                def grad_fn(p, b):
+                    def loss_fn(pp):
+                        return lm.loss(pp, b, remat_mask=mask,
+                                       remat_policy=policy)
+                    (loss, metrics), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True)(p)
+                    return loss, metrics, grads
+
+            # donate grads (aliases new_params) and the moment state;
+            # params must NOT be donated too — outputs consume only two
+            # params-worth of buffers, a third donated set would just
+            # warn as unusable
+            update_fn = jax.jit(
+                lambda g, s, p: opt.update(g, s, p),
+                donate_argnums=(0, 1))
+            return ("opt_split", jax.jit(grad_fn), update_fn, opt_units)
         if microbatch > 1:
             # k-way gradient accumulation: one lax.scan over the split
             # batch, token-weighted so loss/grads match the full-batch
@@ -191,6 +244,101 @@ class Trainer:
         self.cache_stats["jit_hits"] += 1
         return fn, False
 
+    # -- optimizer-moment parking (OFFLOAD_OPT execution) ---------------
+    def _lane(self) -> TransferLane:
+        if self.transfer_lane is None:
+            self.transfer_lane = TransferLane(
+                mesh_sig=self.planner.mesh_sig())
+        return self.transfer_lane
+
+    def _moment_get(self, tree, u: int):
+        """The moment subtree of plan unit ``u`` (unrolled mode: enc
+        units first, then decoder blocks — mirrors LM.plan_units)."""
+        enc = self.lm._num_enc_units()
+        if u < enc:
+            return tree["encoder"]["blocks"][u]
+        return tree["blocks"][u - enc]
+
+    def _moment_set(self, tree, u: int, val):
+        enc = self.lm._num_enc_units()
+        t = dict(tree)
+        if u < enc:
+            te = dict(t["encoder"])
+            bl = list(te["blocks"])
+            bl[u] = val
+            te["blocks"] = bl
+            t["encoder"] = te
+        else:
+            bl = list(t["blocks"])
+            bl[u - enc] = val
+            t["blocks"] = bl
+        return t
+
+    def _park_moments(self, opt_state: AdamWState, opt_units) -> AdamWState:
+        """Stream the fp32 AdamW m/v of every OFFLOAD_OPT unit to host
+        memory on the transfer lane and splice the host buffers into the
+        state tree — those bytes are genuinely off the device until the
+        next update phase.  All copies are started before any is waited
+        on, so the lane double-buffers across units."""
+        if not opt_units:
+            self._parked = set()
+            return opt_state
+        lane = self._lane()
+        m, v = opt_state.m, opt_state.v
+        pending = []
+        for u in opt_units:
+            for which, tree in (("m", m), ("v", v)):
+                leaves, tdef = jax.tree_util.tree_flatten(
+                    self._moment_get(tree, u))
+                pending.append((u, which, tdef,
+                                [lane.offload(x) for x in leaves]))
+        for u, which, tdef, hs in pending:
+            sub = jax.tree_util.tree_unflatten(
+                tdef, [lane.host_value(h) for h in hs])
+            if which == "m":
+                m = self._moment_set(m, u, sub)
+            else:
+                v = self._moment_set(v, u, sub)
+        self._parked = set(opt_units)
+        return opt_state._replace(m=m, v=v)
+
+    def _unpark_moments(self, opt_state: AdamWState) -> AdamWState:
+        """Bring every parked moment subtree back to the device (called
+        with the backward pass already dispatched, so the lane's H2D
+        copies ride behind device compute)."""
+        if not self._parked:
+            return opt_state
+        lane = self._lane()
+        m, v = opt_state.m, opt_state.v
+        pending = []
+        for u in sorted(self._parked):
+            for which, tree in (("m", m), ("v", v)):
+                leaves, tdef = jax.tree_util.tree_flatten(
+                    self._moment_get(tree, u))
+                pending.append((u, which, tdef,
+                                [lane.upload(x) for x in leaves]))
+        for u, which, tdef, hs in pending:
+            sub = jax.tree_util.tree_unflatten(
+                tdef, [lane.fetch(h) for h in hs])
+            if which == "m":
+                m = self._moment_set(m, u, sub)
+            else:
+                v = self._moment_set(v, u, sub)
+        self._parked = set()
+        return opt_state._replace(m=m, v=v)
+
+    def _run_opt_split(self, fn, params, opt_state, batch):
+        """Execute one OFFLOAD_OPT step: grads dispatch asynchronously,
+        parked moments stream home behind the backward pass, the update
+        runs with everything on device, and the new plan's moments
+        stream back out."""
+        _tag, grad_fn, update_fn, opt_units = fn
+        loss, metrics, grads = grad_fn(params, batch)
+        opt_state = self._unpark_moments(opt_state)
+        new_params, new_opt = update_fn(grads, opt_state, params)
+        new_opt = self._park_moments(new_opt, opt_units)
+        return new_params, new_opt, loss, metrics
+
     # ------------------------------------------------------------------
     def prewarm(self, params, opt_state: AdamWState,
                 seq_lens: Iterable[int], batch_size: int,
@@ -224,8 +372,16 @@ class Trainer:
                 continue
             fn = self._build_step(mask, k)
             with self._mesh_ctx():
-                self._step_cache[key] = fn.lower(params, opt_state,
-                                                 batch).compile()
+                if isinstance(fn, tuple):
+                    # opt-split step: AOT-compile the grad phase (the
+                    # memory-critical one); the small update phase jits
+                    # on first use
+                    tag, gf, uf, units = fn
+                    gf = gf.lower(params, batch).compile()
+                    self._step_cache[key] = (tag, gf, uf, units)
+                else:
+                    self._step_cache[key] = fn.lower(params, opt_state,
+                                                     batch).compile()
             self.cache_stats["prewarm_compiles"] += 1
             self.cache_stats["evictions"] = self._step_cache.evictions
             n += 1
@@ -244,6 +400,8 @@ class Trainer:
         while True:
             k = max(int(getattr(info.plan, "microbatch", 1)), 1)
             fn, is_new = self._get_step_fn(mask, batch, k)
+            if self.transfer_lane is not None:
+                self.transfer_lane.reset_stats()
             t1 = time.perf_counter()
             try:
                 if wd is not None:
@@ -251,8 +409,13 @@ class Trainer:
                     # donated buffer is consumed by a simulated failure
                     wd.maybe_inject(step=self.global_step, bucket=bucket)
                 with self._mesh_ctx():
-                    params, opt_state, loss, metrics = fn(params, opt_state,
-                                                          batch)
+                    if isinstance(fn, tuple) and fn[0] == "opt_split":
+                        params, opt_state, loss, metrics = \
+                            self._run_opt_split(fn, params, opt_state,
+                                                batch)
+                    else:
+                        params, opt_state, loss, metrics = fn(
+                            params, opt_state, batch)
                 # device sync: an async allocation failure surfaces here,
                 # inside the try, not on a later unrelated line
                 loss = float(loss)
@@ -294,11 +457,38 @@ class Trainer:
         bt[1] += eff_tokens
         bm = self.cache_stats["bucket_microbatch"]
         bm[bucket] = max(bm.get(bucket, 1), k)
+        # transfer telemetry: what the lane measured this step vs what
+        # the simulator's (1 - overlap) pricing predicts for the SAME
+        # bytes — the bench gate holds the pair to a tolerance band
+        exposed_s = 0.0
+        sim_s = 0.0
+        if self.transfer_lane is not None:
+            xfer = self.transfer_lane.reset_stats()
+            exposed_s = float(xfer["exposed_s"])
+            moved = float(xfer["bytes_out"] + xfer["bytes_in"])
+            if moved:
+                pcie = float(getattr(self.planner, "pcie_gbps", 16.0)) * 1e9
+                ov = float(getattr(self.planner, "offload_overlap", 0.5))
+                sim_s = (1.0 - ov) * moved / pcie
+        degraded = bool(info.plan.n_offload and not self.lm.offload_exec)
+        if degraded and bucket not in self._degraded_buckets:
+            # surface the silent SPMD offload->remat degradation: once
+            # per bucket into the planner's stats (engine_report reads
+            # it), every step into StepStats
+            self._degraded_buckets.add(bucket)
+            st = getattr(self.planner, "stats", None)
+            if isinstance(st, dict):
+                st["offload_fallbacks"] = st.get("offload_fallbacks", 0) + 1
         self.history.append(StepStats(loss, t_step, t_plan, is_new,
                                       info.plan.n_remat, eff_tokens, bucket,
                                       padded_tokens,
                                       offload_units=info.plan.n_offload,
-                                      microbatches=k))
+                                      microbatches=k,
+                                      opt_offload_units=getattr(
+                                          info.plan, "n_opt", 0),
+                                      offload_degraded=degraded,
+                                      exposed_transfer_s=exposed_s,
+                                      sim_transfer_s=sim_s))
         self.global_step += 1
         self.data_cursor += 1
         if self.snapshots is not None and self.snapshots.due(self.global_step):
@@ -340,8 +530,21 @@ class Trainer:
             "mean_remat_units": float(np.mean([s.remat_units for s in h])),
             "mean_offload_units": float(np.mean([s.offload_units
                                                  for s in h])),
+            "mean_opt_offload_units": float(np.mean([s.opt_offload_units
+                                                     for s in h])),
             "mean_microbatches": float(np.mean([s.microbatches
                                                 for s in h])),
+            # real-offload telemetry: measured lane blocking vs the
+            # simulator's pricing of the same traffic, and how often
+            # OFFLOAD plans degraded to remat at execution time
+            "exposed_transfer_s": float(np.sum([s.exposed_transfer_s
+                                                for s in h])),
+            "sim_transfer_s": float(np.sum([s.sim_transfer_s
+                                            for s in h])),
+            "offload_degraded_steps": int(sum(s.offload_degraded
+                                              for s in h)),
+            "offload_fallbacks": int(getattr(self.planner, "stats", {})
+                                     .get("offload_fallbacks", 0)),
             # throughput over *effective* (unpadded) tokens — the number
             # padded and ragged runs are comparable on; the raw padded
             # rate rides along as a secondary diagnostic

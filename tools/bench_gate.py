@@ -42,6 +42,9 @@ DRIFT_METRICS = [
     # greedy -> solved overhead improvement at the tight heterogeneous
     # point (deterministic simulator math, identical in smoke and full)
     (("solver", "sweep", "m0.09_pcie4.0_ov0.75", "improvement_pct"), True),
+    # measured offload-vs-remat step-time ratio at the transfer-bound
+    # point (wall-clock, so warn-only drift absorbs runner variance)
+    (("offload_exec", "speedup"), True),
 ]
 
 

@@ -1,0 +1,63 @@
+"""Micro-benchmark: measure real device<->host offload bandwidth.
+
+The planner prices OFFLOAD / OFFLOAD_OPT actions at ``--pcie-gbps``,
+defaulting to the 16 GB/s roofline constant — a fine number for a TPU
+host and a fantasy for most dev boxes.  This tool times actual transfers
+through the same copy path the execution-side ``TransferLane`` uses
+(pinned ``device_put`` where the build supports it, ``device_get``
+otherwise) and writes the measured figure to the calibration file that
+``repro.launch.roofline.calibrated_pcie_gbps`` — and therefore the
+``--pcie-gbps`` default of ``repro.launch.train`` — reads.
+
+    PYTHONPATH=src python tools/bench_offload_bw.py [--size-mb 64]
+        [--repeats 3] [--out .mimose_calibration.json] [--no-write]
+
+Override hierarchy at plan time: ``$MIMOSE_PCIE_GBPS`` > calibration
+file (``$MIMOSE_CALIBRATION`` relocates it) > 16 GB/s default.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="measure device<->host bandwidth and calibrate the "
+                    "planner's PCIe pricing")
+    ap.add_argument("--size-mb", type=int, default=64,
+                    help="payload per timed transfer (float32 MB)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed repeats; best-of is reported (bandwidth "
+                         "is a capability, not an average)")
+    ap.add_argument("--out", default=None,
+                    help="calibration JSON path (default: "
+                         "$MIMOSE_CALIBRATION or ./.mimose_calibration.json)")
+    ap.add_argument("--no-write", action="store_true",
+                    help="measure and print only; leave the calibration "
+                         "file untouched")
+    args = ap.parse_args(argv)
+
+    from repro.train.transfer import (calibration_path, measure_pcie_gbps,
+                                      write_calibration)
+
+    cal = measure_pcie_gbps(size_mb=args.size_mb, repeats=args.repeats)
+    print(json.dumps(cal, indent=2, sort_keys=True))
+    print(f"\nround-trip link: {cal['pcie_gbps']} GB/s "
+          f"(D2H {cal['device_to_host_gbps']} / "
+          f"H2D {cal['host_to_device_gbps']}, "
+          f"pinned_host={'yes' if cal['pinned_host'] else 'no'}, "
+          f"backend={cal['backend']})")
+    if args.no_write:
+        return 0
+    path = write_calibration(cal, args.out)
+    print(f"wrote {path} — repro.launch.train now prices OFFLOAD at "
+          f"{cal['pcie_gbps']} GB/s unless --pcie-gbps/$MIMOSE_PCIE_GBPS "
+          f"override it")
+    assert path == (args.out or calibration_path())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
