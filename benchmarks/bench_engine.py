@@ -40,7 +40,13 @@ writes everything to ``BENCH_engine.json``:
      fits, and an equal-budget sweep where the adaptive planner's
      simulated step overhead never exceeds the k=1 planner's (k=1
      always competes in the candidate search).
-  9. offload_exec — MEASURED wall-clock of real double-buffered offload
+  9. serve      — continuous-batching serve engine vs sequential
+     generation at equal HBM budget on one deterministic open-loop
+     trace (warm pass both ways): throughput, token-for-token output
+     equality, admission ledger (predicted peak bounds actual peak
+     bounds budget), estimator accuracy on unsampled buckets, decode
+     compile geometries vs the O(#buckets x #tiers) bound.
+ 10. offload_exec — MEASURED wall-clock of real double-buffered offload
      (repro.train.transfer.TransferLane) vs rematerialisation on a
      transfer-bound synthetic matmul chain: offload must beat remat at
      the point where recompute dwarfs the (hidden) transfer, and the
@@ -1009,6 +1015,113 @@ def bench_offload_exec(smoke: bool) -> dict:
     }
 
 
+def bench_serve(smoke: bool) -> dict:
+    """(k) continuous-batching serve engine vs sequential generation.
+
+    One deterministic open-loop trace (``repro.data.trace.gen_trace``,
+    the same generator the serve tests use) is served twice at equal
+    HBM budget:
+
+      * engine     — ``ServeEngine``: bucketed cache pools, input-aware
+                     admission, batched multi-token decode;
+      * sequential — the old path: one ``generate()`` per request in
+                     arrival order, cache bucketed to the same quantum
+                     so both paths compile the same geometry family.
+
+    Both paths run twice; the second (warm — every executable cached on
+    the LM) pass is timed, so the comparison is steady-state serving
+    throughput, not XLA compile time.  Alongside throughput:
+
+      * admission  — the engine's predicted peak HBM must stay under
+                     the budget AND bound the actual allocated peak
+                     (admit-before-allocate is only safe if the
+                     prediction is conservative);
+      * estimator  — per-slot cache bytes predicted for buckets the
+                     estimator never sampled vs the exact eval_shape
+                     truth (relative error);
+      * compiles   — decode geometries seen vs the O(#buckets x #tiers)
+                     bound and vs #requests (continuous batching must
+                     NOT compile per request).
+    """
+    from repro.data.trace import gen_trace
+    from repro.train.engine import ServeEngine, cache_leaf_bytes
+    from repro.train.serve import generate
+
+    cfg = get_config("bert_base_paper").reduced(
+        num_layers=2, d_model=96 if smoke else 128,
+        d_ff=192 if smoke else 256, vocab_size=512, dtype="float32")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+
+    quantum, max_slots = 32, 4
+    n_req = 8 if smoke else 16
+    new_tok = 8 if smoke else 16
+    hbm = 64e6
+    # burst trace (all arrive at t=0): throughput is service-bound, so
+    # the engine/sequential comparison measures batching, not idle time
+    trace = gen_trace(num_requests=n_req, vocab_size=cfg.vocab_size,
+                      rate_rps=0.0, max_new_tokens=new_tok,
+                      prompt_scale=0.25, seed=7)
+
+    def run_engine():
+        eng = ServeEngine(lm, params, hbm_bytes=hbm, quantum=quantum,
+                          max_slots=max_slots, prefill_chunk=16,
+                          decode_steps=4)
+        return eng, eng.run(trace)
+
+    def run_sequential():
+        t0 = time.perf_counter()
+        outs, total = {}, 0
+        for r in trace:
+            bucket = -(-(len(r.prompt) + r.max_new_tokens)
+                       // quantum) * quantum
+            out = generate(lm, params, jnp.asarray(r.prompt[None, :]),
+                           r.max_new_tokens, cache_len=bucket)
+            outs[r.rid] = np.asarray(out)[0]
+            total += out.shape[1]
+        jax.block_until_ready(out)
+        return outs, total, time.perf_counter() - t0
+
+    eng_cold, res_cold = run_engine()          # compile pass
+    run_sequential()
+    eng, res = run_engine()                    # warm: executables cached
+    seq_outs, seq_tokens, seq_wall = run_sequential()
+
+    outputs_match = all(
+        np.array_equal(seq_outs[r.rid], np.asarray(res.outputs[r.rid]))
+        for r in trace)
+
+    # estimator accuracy on buckets it never sampled (warm-fit uses
+    # quantum * {1, 3, 5}): predicted per-slot bytes vs eval_shape truth
+    errs = []
+    for bucket in (2 * quantum, 4 * quantum, 8 * quantum):
+        truth = float(cache_leaf_bytes(lm, bucket).sum())
+        errs.append(abs(eng.slot_bytes(bucket) - truth) / truth)
+
+    n_buckets = len({eng.bucket_of(r) for r in trace})
+    decode_geoms = res.compile_counts.get("decode", 0)
+    eng_tps = res.total_tokens / res.wall_s
+    seq_tps = seq_tokens / seq_wall
+    return {
+        "requests": n_req, "new_tokens": new_tok, "quantum": quantum,
+        "max_slots": max_slots, "hbm_budget_mb": hbm / 1e6,
+        "engine": res.summary(),
+        "cold_wall_s": round(res_cold.wall_s, 4),
+        "sequential_wall_s": round(seq_wall, 4),
+        "sequential_tokens_per_s": round(seq_tps, 1),
+        "engine_tokens_per_s": round(eng_tps, 1),
+        "speedup_vs_sequential": round(eng_tps / seq_tps, 3),
+        "outputs_match_sequential": bool(outputs_match),
+        "peak_predicted_bytes": int(res.stats["peak_predicted_bytes"]),
+        "peak_actual_bytes": int(res.stats["peak_actual_bytes"]),
+        "budget_bytes": int(hbm),
+        "estimator_max_rel_err": round(max(errs), 5),
+        "buckets_seen": n_buckets,
+        "decode_geometries": decode_geoms,
+        "decode_geometry_bound": n_buckets * len(eng.tiers),
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -1028,6 +1141,7 @@ def main(argv=None) -> int:
         "microbatch": bench_microbatch(args.smoke),
         "solver": bench_solver(args.smoke),
         "offload_exec": bench_offload_exec(args.smoke),
+        "serve": bench_serve(args.smoke),
     }
     sched96 = report["scheduler"]["units_96"]
     coll = report["collector"]
@@ -1039,6 +1153,7 @@ def main(argv=None) -> int:
     mb = report["microbatch"]
     sv = report["solver"]["sweep"]
     ox = report["offload_exec"]
+    srv = report["serve"]
     report["acceptance"] = {
         "compile_count_bounded_by_buckets":
             eng["mimose"]["compiles"] <= eng["mimose"]["buckets_seen"]
@@ -1122,6 +1237,27 @@ def main(argv=None) -> int:
         # the lane's own copy wall time (x1.5 + 5 ms band)
         "measured_transfer_within_tolerance":
             ox["exposed_within_tolerance"],
+        # continuous batching strictly beats one-generate-per-request
+        # at equal HBM budget (warm pass both ways), token-for-token
+        # identical outputs
+        "serve_engine_beats_sequential":
+            srv["outputs_match_sequential"]
+            and srv["speedup_vs_sequential"] > 1.0,
+        # admit-before-allocate safety: the admission ledger's peak
+        # prediction bounds the actual allocated peak AND the budget —
+        # zero admission OOMs by construction
+        "serve_admission_within_budget":
+            srv["peak_actual_bytes"] <= srv["peak_predicted_bytes"]
+            <= srv["budget_bytes"],
+        # the estimator's per-slot cache-bytes prediction tracks the
+        # eval_shape ground truth on buckets it never sampled
+        "serve_predicted_tracks_actual":
+            srv["estimator_max_rel_err"] <= 0.05,
+        # compile-once under serving: decode geometries bounded by
+        # #buckets x #slot-tiers, and NOT one per request
+        "serve_decode_compiles_bounded_by_buckets":
+            srv["decode_geometries"] <= srv["decode_geometry_bound"]
+            and srv["decode_geometries"] < srv["requests"],
     }
 
     with open(args.out, "w") as f:

@@ -1,24 +1,40 @@
-"""Batched serving example: prefill a prompt batch, then decode with the
-per-family cache (attention KV / SSM state / hybrid both).
+"""Serving example: continuous batching by default, classic batched
+prefill+decode with ``--sequential``.
 
     PYTHONPATH=src python examples/serve_decode.py --arch qwen3-1.7b
     PYTHONPATH=src python examples/serve_decode.py --arch mamba2-1.3b
+    PYTHONPATH=src python examples/serve_decode.py --sequential
+
+The default path drives ``repro.train.engine.ServeEngine`` with a
+concurrent open-loop trace (Poisson arrivals): requests of different
+lengths share bucketed cache pools, admission is input-aware under
+``--hbm-gb``, and the report shows tokens/s, latency percentiles, and
+the compile audit.  ``--sequential`` keeps the old one-request-batch
+``generate`` path for comparison at the same budget.
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
+from repro.data.trace import gen_trace
+from repro.launch.report import serve_report
 from repro.models.lm import build_model
 from repro.models.registry import get_config
-from repro.train.serve import generate, make_serve_step
+from repro.train.engine import ServeEngine
+from repro.train.serve import cached_serve_step, generate
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="qwen3-1.7b")
+ap.add_argument("--sequential", action="store_true",
+                help="old path: one batched generate(), no engine")
 ap.add_argument("--batch", type=int, default=4)
 ap.add_argument("--prompt-len", type=int, default=16)
 ap.add_argument("--new-tokens", type=int, default=32)
+ap.add_argument("--num-requests", type=int, default=12)
+ap.add_argument("--rate-rps", type=float, default=16.0)
+ap.add_argument("--hbm-gb", type=float, default=0.5)
 args = ap.parse_args()
 
 cfg = get_config(args.arch).reduced(num_layers=4, d_model=256,
@@ -28,25 +44,42 @@ params = lm.init(jax.random.PRNGKey(0))
 print(f"serving {cfg.name} (reduced: {cfg.num_layers}L d={cfg.d_model}, "
       f"family={cfg.family})")
 
-prompt = jax.random.randint(jax.random.PRNGKey(1),
-                            (args.batch, args.prompt_len), 1, cfg.vocab_size)
-t0 = time.time()
-out = generate(lm, params, prompt, args.new_tokens, temperature=0.8)
-dt = time.time() - t0
-total = args.batch * args.new_tokens
-print(f"generated {out.shape} in {dt:.2f}s "
-      f"({total / dt:.1f} tok/s incl. prefill + compile)")
+if args.sequential:
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 1,
+                                cfg.vocab_size)
+    t0 = time.time()
+    out = generate(lm, params, prompt, args.new_tokens, temperature=0.8)
+    dt = time.time() - t0
+    total = args.batch * args.new_tokens
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s incl. prefill + compile)")
 
-# steady-state decode rate
-step = jax.jit(make_serve_step(lm))
-cache = lm.init_cache(args.batch, args.prompt_len + args.new_tokens + 8)
-tok = prompt[:, :1]
-logits, cache = step(params, tok, cache, 0)   # compile
-t0 = time.time()
-N = 20
-for i in range(N):
-    logits, cache = step(params, tok, cache, i + 1)
-logits.block_until_ready()
-print(f"steady-state decode: {1e3 * (time.time() - t0) / N:.1f} ms/step "
-      f"({args.batch * N / (time.time() - t0):.1f} tok/s)")
-print("sample tokens:", out[0, :16].tolist())
+    # steady-state decode rate on the shared compiled step
+    step = cached_serve_step(lm)
+    cache = lm.init_cache(args.batch, args.prompt_len + args.new_tokens + 8)
+    tok = prompt[:, :1]
+    logits, cache = step(params, tok, cache, 0)   # compile
+    t0 = time.time()
+    N = 20
+    for i in range(N):
+        logits, cache = step(params, tok, cache, i + 1)
+    logits.block_until_ready()
+    print(f"steady-state decode: {1e3 * (time.time() - t0) / N:.1f} ms/step "
+          f"({args.batch * N / (time.time() - t0):.1f} tok/s)")
+    print("sample tokens:", out[0, :16].tolist())
+else:
+    trace = gen_trace(num_requests=args.num_requests,
+                      vocab_size=cfg.vocab_size, rate_rps=args.rate_rps,
+                      max_new_tokens=args.new_tokens, prompt_scale=0.25,
+                      seed=1)
+    lens = [len(r.prompt) for r in trace]
+    print(f"trace: {len(trace)} concurrent requests, prompt lens "
+          f"{min(lens)}..{max(lens)}")
+    engine = ServeEngine(lm, params, hbm_bytes=args.hbm_gb * 1e9,
+                         quantum=64, max_slots=4)
+    result = engine.run(trace)
+    print(serve_report(engine, result))
+    rid = trace[0].rid
+    print("sample tokens (rid 0):",
+          np.asarray(result.outputs.get(rid, []))[:16].tolist())

@@ -109,6 +109,42 @@ def engine_report(trainer, planner=None) -> str:
     return "\n".join(lines)
 
 
+def serve_report(engine, result) -> str:
+    """Markdown report of one continuous-batching serve run.
+
+    ``engine``: the ``repro.train.engine.ServeEngine`` after ``run``;
+    ``result``: the ``ServeResult`` it returned.  Shows throughput and
+    latency percentiles, the admission ledger (admitted / deferred /
+    rejected and predicted-vs-actual peak HBM), and the compile audit —
+    the serving analogue of ``engine_report``'s jit-cache line
+    (``launch/serve.py`` prints it).
+    """
+    s = result.stats
+    lines = ["| metric | value |", "|---|---|"]
+    lines.append(f"| completed / rejected | {result.completed} / "
+                 f"{result.rejected} |")
+    lines.append(f"| tokens | {result.total_tokens} "
+                 f"({result.tokens_per_s:.1f} tok/s) |")
+    lines.append(f"| TTFT p50 / p99 | {result.ttft_p50_s * 1e3:.1f} / "
+                 f"{result.ttft_p99_s * 1e3:.1f} ms |")
+    lines.append(f"| inter-token p50 / p99 | {result.itl_p50_s * 1e3:.2f} / "
+                 f"{result.itl_p99_s * 1e3:.2f} ms |")
+    lines.append(f"| admission | {s['admitted']} admitted, "
+                 f"{s['deferrals']} deferral(s), "
+                 f"{s['rejected']} rejected |")
+    lines.append(f"| peak HBM predicted / actual | "
+                 f"{s['peak_predicted_bytes'] / 1e6:.2f} / "
+                 f"{s['peak_actual_bytes'] / 1e6:.2f} MB "
+                 f"(budget {engine.hbm_bytes / 1e6:.0f} MB) |")
+    lines.append(f"| pools | {s['pool_grows']} grow(s), "
+                 f"{s['decode_batches']} decode batch(es), "
+                 f"{s['prefill_chunks']} prefill chunk(s) |")
+    comp = ", ".join(f"{k}: {v}" for k, v in
+                     sorted(result.compile_counts.items()))
+    lines.append(f"| compiled geometries | {comp} |")
+    return "\n".join(lines)
+
+
 def load(path):
     recs = [json.loads(l) for l in open(path)]
     seen = OrderedDict()

@@ -239,10 +239,21 @@ def attention_apply(params: dict, cfg: ModelConfig, x: Array, *,
     if kv_cache is not None:
         # decode / chunked prefill: insert the Sq new k/v rows at
         # cache_index (Sq == 1 for token decode, a whole block for
-        # chunked prefill — same compiled shape family either way)
+        # chunked prefill — same compiled shape family either way).
+        # A (B,) cache_index is the continuous-batching serve path:
+        # every batch row is a different request at its own position,
+        # inserted by one scatter at static shapes.  Out-of-range
+        # indices drop the write — the engine parks empty slots at
+        # index == cache length so they never touch the cache.
         ck, cv = kv_cache["k"], kv_cache["v"]
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, axis=1)
+        if getattr(cache_index, "ndim", 0) >= 1:
+            rows = jnp.arange(B)[:, None]
+            cols = cache_index[:, None] + jnp.arange(Sq)[None, :]
+            ck = ck.at[rows, cols].set(k.astype(ck.dtype), mode="drop")
+            cv = cv.at[rows, cols].set(v.astype(cv.dtype), mode="drop")
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, axis=1)
         new_cache = {"k": ck, "v": cv}
         k, v = ck, cv
         Sk = k.shape[1]

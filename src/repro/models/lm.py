@@ -656,16 +656,63 @@ class LM:
             return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
         return caches
 
+    # -- batched cache slots (continuous-batching serve engine) -------------
+    # A pool cache is just ``init_cache(slots, max_len)``: batch rows are
+    # request slots.  The three operations below move whole rows between
+    # a staging cache (one prefilling request) and a pool at STATIC
+    # shapes — ``slot`` is a traced scalar, so the engine compiles one
+    # executable per (bucket, slots) geometry, never per slot index.
+
+    def cache_batch_axis(self) -> int:
+        """Axis of the request/batch dimension in every cache leaf
+        (scan mode stacks a leading layer axis)."""
+        return 1 if self.cfg.remat_mode == "scan" else 0
+
+    def cache_insert(self, pool: Any, rows: Any, slot) -> Any:
+        """Write ``rows`` (a cache whose batch dim holds >= 1 request
+        rows, e.g. a prefill staging cache) into ``pool`` starting at
+        batch row ``slot``.  Shapes must match outside the batch axis."""
+        ax = self.cache_batch_axis()
+        return jax.tree_util.tree_map(
+            lambda p, r: jax.lax.dynamic_update_slice_in_dim(
+                p, r.astype(p.dtype), slot, axis=ax), pool, rows)
+
+    def cache_extract(self, pool: Any, slot) -> Any:
+        """Read one request row out of ``pool`` as a batch-1 cache."""
+        ax = self.cache_batch_axis()
+        return jax.tree_util.tree_map(
+            lambda p: jax.lax.dynamic_slice_in_dim(p, slot, 1, axis=ax),
+            pool)
+
+    def cache_evict(self, pool: Any, slot) -> Any:
+        """Zero one request row of ``pool`` (slot freed: no stale state
+        survives into the next tenant — insert overwrites the row anyway,
+        this keeps freed slots inert and debuggable)."""
+        ax = self.cache_batch_axis()
+        return jax.tree_util.tree_map(
+            lambda p: jax.lax.dynamic_update_slice_in_dim(
+                p, jnp.zeros_like(
+                    jax.lax.dynamic_slice_in_dim(p, slot, 1, axis=ax)),
+                slot, axis=ax), pool)
+
     def decode_step(self, params, tokens, cache, index):
         """tokens: (B, C) int32 — C == 1 for token-by-token decode, a
         whole block for chunked prefill (``train.serve``); index: scalar
-        position of the first token.  Returns (logits (B,C,V),
-        new_cache) — the cache advances by C positions."""
+        position of the first token, or a (B,) int32 vector of per-row
+        positions — the continuous-batching engine's form, where every
+        batch row is a different request at its own decode position
+        (rows parked at index == cache length write nothing).  Returns
+        (logits (B,C,V), new_cache) — the cache advances by C positions."""
         cfg = self.cfg
         B, C = tokens.shape
         x = params["embed"][tokens]
-        positions = index + jnp.broadcast_to(
-            jnp.arange(C, dtype=jnp.int32), (B, C))
+        idx = jnp.asarray(index, jnp.int32)
+        if idx.ndim >= 1:
+            positions = idx[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+            index = idx
+        else:
+            positions = index + jnp.broadcast_to(
+                jnp.arange(C, dtype=jnp.int32), (B, C))
         mrope_positions = None
         if cfg.mrope:
             mrope_positions = jnp.broadcast_to(positions[None], (3, B, C))

@@ -1,0 +1,514 @@
+"""Continuous-batching serve engine with input-aware admission (ROADMAP 1).
+
+The training side of Mimose predicts per-bucket activation bytes to
+choose remat plans; serving has the same input dynamics — prompt
+lengths vary per request, so KV/SSM cache footprint is dynamic, and a
+static batch size either wastes HBM or OOMs.  This engine makes the
+prediction drive *admission* instead:
+
+* **Quantum-keyed cache pools.**  Every request is bucketed by its
+  padded total length (prompt + decode budget, rounded up to the engine
+  quantum).  In-flight requests of a bucket share one pooled cache
+  (``LM.init_cache(slots, bucket)``) whose batch rows are request
+  slots; slot counts grow through a fixed power-of-two tier ladder.
+  All device shapes — decode (slots, 1), prefill chunks (1, c) with c
+  from a fixed power-of-two set, slot insert/evict — are therefore
+  drawn from O(#buckets) geometries, so the compile-once property holds
+  for serving exactly as it does for training.
+
+* **Input-aware admission.**  A ``PolyEstimator`` (the paper's §4.3
+  lightning estimator, reused verbatim) is fitted on per-cache-leaf
+  bytes vs bucket length and predicts the HBM cost of admitting each
+  queued request: its staging row, its pool slot (including any tier
+  growth), and its prefill-chunk workspace.  The engine admits when
+  ``predicted_bytes + cost <= hbm_bytes``, otherwise the request waits
+  in a deferred queue — it never allocates first and OOMs later.
+  Prefill chunk sizes are chosen the same way: the largest
+  power-of-two chunk whose predicted workspace fits the current
+  headroom.
+
+* **Scheduler loop.**  Each iteration releases due arrivals, admits
+  what fits (FIFO), advances every prefilling request by one chunk,
+  then runs ``decode_steps`` batched decode steps over every active
+  pool — one dispatch decodes a token for every slot in the pool
+  (per-row cache positions via the vector ``cache_index`` path in
+  ``models/lm.py``; empty slots park at index == bucket so their
+  writes drop).  Greedy sampling is token-for-token identical to
+  sequential ``train.serve.generate`` (``tests/test_serve.py``).
+
+The wall clock fast-forwards over idle gaps (open-loop arrivals far
+apart), so tests and benches never sleep; latency percentiles use the
+same engine clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.estimator import PolyEstimator
+from repro.data.pipeline import bucket_length
+from repro.data.trace import TraceRequest
+from repro.models.lm import LM
+from repro.train.serve import cached_serve_step
+
+
+def tree_device_bytes(tree) -> int:
+    """Total bytes of every array leaf of ``tree`` (live device state)."""
+    return int(sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(tree)
+                   if hasattr(l, "dtype")))
+
+
+def cache_leaf_bytes(lm: LM, max_len: int) -> np.ndarray:
+    """Exact per-leaf bytes of a one-slot cache at ``max_len`` — the
+    ground truth the admission estimator is fitted on (and validated
+    against: ``bench_engine`` gates predicted vs actual).  Abstract
+    (``eval_shape``): nothing allocates."""
+    shapes = jax.eval_shape(lambda: lm.init_cache(1, int(max_len)))
+    return np.array([math.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                     for l in jax.tree_util.tree_leaves(shapes)],
+                    dtype=np.float64)
+
+
+def _percentile(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def _make_decode_core(lm: LM):
+    """Greedy batched decode step: next token per row + advanced cache.
+    Argmax lives inside the jit so only (slots,) int32 leaves the device
+    per step, not (slots, vocab) logits."""
+    def decode_core(params, tokens, cache, index):
+        logits, cache = lm.decode_step(params, tokens, cache, index)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+    return decode_core
+
+
+@dataclasses.dataclass
+class _Live:
+    """Engine-side state of one admitted request."""
+    req: TraceRequest
+    bucket: int
+    arrival_s: float
+    t_admit: float
+    staging: Any = None            # (1, bucket) cache during prefill
+    pos: int = 0                   # prompt tokens prefilled so far
+    pool: Optional["BucketPool"] = None
+    slot: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    t_done: float = 0.0
+
+
+class BucketPool:
+    """One bucket's pooled cache: batch rows are request slots."""
+
+    def __init__(self, lm: LM, bucket: int, slots: int):
+        self.bucket = bucket
+        self.slots = slots
+        self.cache = lm.init_cache(slots, bucket)
+        # empty slots park one past the last cache row: decode writes
+        # at their index drop (scatter mode="drop"), reads are masked
+        self.index = np.full((slots,), bucket, np.int32)
+        self.last_tok = np.zeros((slots,), np.int32)
+        self.live: List[Optional[_Live]] = [None] * slots
+
+    def n_active(self) -> int:
+        """Rows actually decoding (a reserved row still prefilling has
+        ``staging`` set and is skipped by the decode harvest)."""
+        return sum(l is not None and l.staging is None for l in self.live)
+
+    def free_slot(self) -> int:
+        for i, l in enumerate(self.live):
+            if l is None:
+                return i
+        return -1
+
+    def cache_bytes(self) -> int:
+        return tree_device_bytes(self.cache)
+
+
+class ServeEngine:
+    """Continuous-batching scheduler over bucketed cache pools.
+
+    Parameters
+    ----------
+    hbm_bytes:       serve HBM budget (params + caches + workspace).
+    quantum:         bucket granularity for padded total length.
+    max_slots:       per-bucket slot ceiling (tier ladder 1,2,4,..).
+    prefill_chunk:   largest prefill chunk (power of two).
+    decode_steps:    decode iterations per scheduler loop (multi-token
+                     decode amortises scheduler overhead).
+    warmup_buckets:  how many seed lengths the admission estimator is
+                     fitted on (exact eval_shape samples).
+    """
+
+    def __init__(self, lm: LM, params, *, hbm_bytes: float,
+                 quantum: int = 64, max_slots: int = 4,
+                 prefill_chunk: int = 32, decode_steps: int = 4,
+                 warmup_buckets: int = 3, estimator_degree: int = 2):
+        if lm.kind == "dec":
+            raise ValueError(
+                "encoder/decoder serving needs encoder frames per request;"
+                " the continuous-batching engine serves decoder-only "
+                "families (dense/moe/ssm/hybrid)")
+        self.lm = lm
+        self.params = params
+        self.hbm_bytes = float(hbm_bytes)
+        self.quantum = max(int(quantum), 1)
+        self.max_slots = max(int(max_slots), 1)
+        self.prefill_chunk = max(int(prefill_chunk), 1)
+        self.decode_steps = max(int(decode_steps), 1)
+        self.tiers = self._slot_tiers(self.max_slots)
+        cfg = lm.cfg
+        self._token_ws = (4 * cfg.vocab_size
+                          + 8 * cfg.d_model * jnp.dtype(lm.dtype).itemsize)
+        self._chunks = [1 << i for i in
+                        range(int(math.log2(self.prefill_chunk)) + 1)]
+
+        # the paper's lightning estimator, re-aimed at cache bytes:
+        # per-leaf bytes vs bucket length (linear for KV, constant for
+        # SSM state — degree-2 covers both), fitted on a few exact
+        # abstract samples and predicting every other bucket
+        self.estimator = PolyEstimator(degree=estimator_degree)
+        for i in range(max(warmup_buckets, estimator_degree + 1)):
+            s = self.quantum * (1 + 2 * i)
+            self.estimator.add_sample(s, cache_leaf_bytes(lm, s))
+        self.estimator.fit()
+
+        self.param_bytes = tree_device_bytes(params)
+        if self.param_bytes >= self.hbm_bytes:
+            raise ValueError(
+                f"serve budget {self.hbm_bytes / 1e9:.3f} GB below the "
+                f"model's parameter bytes ({self.param_bytes / 1e9:.3f} GB)")
+
+        self.pools: Dict[int, BucketPool] = {}
+        self.waiting: List[_Live] = []       # admitted = removed from here
+        self.prefilling: List[_Live] = []
+        self.done: List[_Live] = []
+        self.rejected: List[_Live] = []
+
+        # compiled entry points — ONE jitted callable each (executables
+        # keyed by shape inside jit), cached ON THE LM exactly like
+        # ``train.serve.cached_serve_step``: a second engine over the
+        # same model reuses every compiled executable instead of
+        # re-tracing.  ``compile_keys`` mirrors the shape geometries
+        # seen so compile counts are auditable per kind.
+        jits = getattr(lm, "_engine_jits", None)
+        if jits is None:
+            jits = {"decode": jax.jit(_make_decode_core(lm)),
+                    "prefill": cached_serve_step(lm),
+                    "insert": jax.jit(lm.cache_insert),
+                    "evict": jax.jit(lm.cache_evict)}
+            lm._engine_jits = jits
+        self._decode_jit = jits["decode"]
+        self._prefill_jit = jits["prefill"]
+        self._insert_jit = jits["insert"]
+        self._evict_jit = jits["evict"]
+        self.compile_keys: set = set()
+
+        self.stats: Dict[str, Any] = dict(
+            admitted=0, deferrals=0, rejected=0, completed=0,
+            prefill_chunks=0, decode_batches=0, decode_tokens=0,
+            pool_grows=0, peak_predicted_bytes=0.0, peak_actual_bytes=0,
+            admission_checks=0)
+        self._t0 = time.perf_counter()
+        self._clock_skip = 0.0
+
+    # -- geometry / prediction --------------------------------------------
+    @staticmethod
+    def _slot_tiers(max_slots: int) -> List[int]:
+        tiers, t = [], 1
+        while t < max_slots:
+            tiers.append(t)
+            t *= 2
+        tiers.append(max_slots)
+        return tiers
+
+    def bucket_of(self, req: TraceRequest) -> int:
+        return bucket_length(len(req.prompt) + req.max_new_tokens,
+                             self.quantum)
+
+    def slot_bytes(self, bucket: int) -> float:
+        """Predicted per-slot cache bytes at ``bucket`` (estimator)."""
+        return float(self.estimator.predict_total(bucket))
+
+    def predicted_bytes(self) -> float:
+        """The admission ledger: params + every pool + every staging
+        cache + in-flight workspace, all via the estimator's per-slot
+        prediction (never the allocated arrays — admission must work
+        *before* allocating)."""
+        total = float(self.param_bytes)
+        for pool in self.pools.values():
+            total += pool.slots * (self.slot_bytes(pool.bucket)
+                                   + self._token_ws)
+        for lv in self.prefilling:
+            total += self.slot_bytes(lv.bucket)
+            total += self.prefill_chunk * self._token_ws
+        return total
+
+    def actual_bytes(self) -> int:
+        """Ground truth: bytes of the device state the engine holds."""
+        total = self.param_bytes
+        for pool in self.pools.values():
+            total += pool.cache_bytes()
+        for lv in self.prefilling:
+            if lv.staging is not None:
+                total += tree_device_bytes(lv.staging)
+        return total
+
+    def _note_bytes(self) -> None:
+        self.stats["peak_predicted_bytes"] = max(
+            self.stats["peak_predicted_bytes"], self.predicted_bytes())
+        self.stats["peak_actual_bytes"] = max(
+            self.stats["peak_actual_bytes"], self.actual_bytes())
+
+    # -- admission ---------------------------------------------------------
+    def _admit_cost(self, bucket: int) -> Optional[float]:
+        """Predicted extra bytes of admitting one request at ``bucket``:
+        staging row + chunk workspace + pool slot (tier growth included).
+        None when the bucket has no free capacity at ``max_slots``."""
+        cost = self.slot_bytes(bucket) + self.prefill_chunk * self._token_ws
+        pool = self.pools.get(bucket)
+        if pool is None:
+            cost += self.tiers[0] * (self.slot_bytes(bucket)
+                                     + self._token_ws)
+        elif pool.free_slot() < 0:
+            if pool.slots >= self.max_slots:
+                return None
+            new = next(t for t in self.tiers if t > pool.slots)
+            cost += (new - pool.slots) * (self.slot_bytes(bucket)
+                                          + self._token_ws)
+        return cost
+
+    def _grow_pool(self, bucket: int) -> BucketPool:
+        pool = self.pools.get(bucket)
+        if pool is None:
+            pool = BucketPool(self.lm, bucket, self.tiers[0])
+            self.pools[bucket] = pool
+            self.compile_keys.add(("pool", bucket, pool.slots))
+            return pool
+        if pool.free_slot() >= 0:
+            return pool
+        new_slots = next(t for t in self.tiers if t > pool.slots)
+        grown = BucketPool(self.lm, bucket, new_slots)
+        self.compile_keys.add(("insert", bucket, pool.slots, new_slots))
+        grown.cache = self._insert_jit(grown.cache, pool.cache, 0)
+        grown.index[:pool.slots] = pool.index
+        grown.last_tok[:pool.slots] = pool.last_tok
+        grown.live[:pool.slots] = pool.live
+        for lv in grown.live:
+            if lv is not None:
+                lv.pool = grown
+        self.pools[bucket] = grown
+        self.stats["pool_grows"] += 1
+        self.compile_keys.add(("pool", bucket, new_slots))
+        return grown
+
+    def _try_admit(self, lv: _Live, now: float) -> bool:
+        self.stats["admission_checks"] += 1
+        cost = self._admit_cost(lv.bucket)
+        if cost is None or self.predicted_bytes() + cost > self.hbm_bytes:
+            return False
+        pool = self._grow_pool(lv.bucket)
+        slot = pool.free_slot()
+        assert slot >= 0, "admission grew the pool for this request"
+        lv.staging = self.lm.init_cache(1, lv.bucket)
+        pool.live[slot] = lv              # claim the slot up front —
+        lv.pool, lv.slot = pool, slot     # parked (index == bucket)
+        lv.t_admit = now                  # until prefill completes
+        self.prefilling.append(lv)
+        self.stats["admitted"] += 1
+        return True
+
+    # -- prefill -----------------------------------------------------------
+    def _next_chunk(self, remaining: int) -> int:
+        """Largest power-of-two chunk <= remaining whose predicted
+        workspace fits the headroom (admission charged the base chunk,
+        so the smallest candidate always fits)."""
+        head = self.hbm_bytes - (self.predicted_bytes()
+                                 - self.prefill_chunk * self._token_ws)
+        for c in reversed(self._chunks):
+            if c <= remaining and c * self._token_ws <= head:
+                return c
+        return 1
+
+    def _advance_prefill(self, lv: _Live, now: float) -> None:
+        S = len(lv.req.prompt)
+        c = self._next_chunk(S - lv.pos)
+        tok = jnp.asarray(lv.req.prompt[lv.pos:lv.pos + c][None, :])
+        self.compile_keys.add(("prefill", lv.bucket, int(tok.shape[1])))
+        logits, lv.staging = self._prefill_jit(self.params, tok,
+                                               lv.staging, lv.pos)
+        lv.pos += int(tok.shape[1])
+        self.stats["prefill_chunks"] += 1
+        if lv.pos < S:
+            return
+        # prefill complete: first token comes from the prompt's last
+        # logits (greedy), then the slot joins the pool's decode batch
+        first = int(jnp.argmax(logits[0, -1]))
+        pool, slot = lv.pool, lv.slot     # claimed at admission (and
+        self.compile_keys.add(("insert", lv.bucket, 1, pool.slots))
+        pool.cache = self._insert_jit(pool.cache, lv.staging, slot)
+        pool.index[slot] = S              # re-pointed by pool growth)
+        pool.last_tok[slot] = first
+        lv.staging = None                 # row is now decoding
+        lv.tokens.append(first)
+        lv.token_times.append(now)
+        self.prefilling.remove(lv)
+        self._finish_if_done(lv, now)
+
+    # -- decode ------------------------------------------------------------
+    def _finish_if_done(self, lv: _Live, now: float) -> None:
+        if len(lv.tokens) < lv.req.max_new_tokens:
+            return
+        pool, slot = lv.pool, lv.slot
+        self.compile_keys.add(("evict", pool.bucket, pool.slots))
+        pool.cache = self._evict_jit(pool.cache, slot)
+        pool.index[slot] = pool.bucket          # park: writes drop
+        pool.live[slot] = None
+        lv.pool, lv.slot = None, -1
+        lv.t_done = now
+        self.done.append(lv)
+        self.stats["completed"] += 1
+        if pool.n_active() == 0 and not any(
+                w.bucket == pool.bucket
+                for w in self.waiting + self.prefilling):
+            del self.pools[pool.bucket]         # release the HBM
+
+    def _decode_pools(self, now: float) -> None:
+        for pool in list(self.pools.values()):
+            if pool.n_active() == 0:
+                continue
+            self.compile_keys.add(("decode", pool.bucket, pool.slots))
+            for _ in range(self.decode_steps):
+                if pool.n_active() == 0:
+                    break
+                toks = jnp.asarray(pool.last_tok[:, None])
+                idx = jnp.asarray(pool.index)
+                nxt, pool.cache = self._decode_jit(self.params, toks,
+                                                   pool.cache, idx)
+                nxt = np.asarray(nxt)
+                t_emit = self._now()
+                self.stats["decode_batches"] += 1
+                for s, lv in enumerate(pool.live):
+                    if lv is None or lv.staging is not None:
+                        continue    # empty, or reserved + still prefilling
+                    pool.index[s] += 1
+                    pool.last_tok[s] = int(nxt[s])
+                    lv.tokens.append(int(nxt[s]))
+                    lv.token_times.append(t_emit)
+                    self.stats["decode_tokens"] += 1
+                    self._finish_if_done(lv, t_emit)
+
+    # -- scheduler loop ----------------------------------------------------
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0 + self._clock_skip
+
+    def run(self, trace: Sequence[TraceRequest]) -> "ServeResult":
+        """Serve an open-loop trace to completion and report."""
+        pending = sorted(trace, key=lambda r: (r.arrival_s, r.rid))
+        self._t0 = time.perf_counter()
+        self._clock_skip = 0.0
+        wall0 = time.perf_counter()
+        while pending or self.waiting or self.prefilling or any(
+                p.n_active() for p in self.pools.values()):
+            now = self._now()
+            while pending and pending[0].arrival_s <= now:
+                req = pending.pop(0)
+                self.waiting.append(_Live(req=req,
+                                          bucket=self.bucket_of(req),
+                                          arrival_s=req.arrival_s,
+                                          t_admit=0.0))
+            # FIFO admission: defer what the prediction says won't fit
+            still: List[_Live] = []
+            for lv in self.waiting:
+                if not self._try_admit(lv, now):
+                    if lv.pool is None:
+                        self.stats["deferrals"] += 1
+                    still.append(lv)
+            self.waiting = still
+            for lv in list(self.prefilling):
+                self._advance_prefill(lv, self._now())
+            self._decode_pools(self._now())
+            self._note_bytes()
+            if (not self.prefilling and not any(
+                    p.n_active() for p in self.pools.values())):
+                if self.waiting:
+                    # nothing in flight and the head still doesn't fit:
+                    # it never will — reject instead of spinning/OOMing
+                    lv = self.waiting.pop(0)
+                    self.rejected.append(lv)
+                    self.stats["rejected"] += 1
+                elif pending:
+                    # idle until the next arrival: fast-forward
+                    gap = pending[0].arrival_s - self._now()
+                    if gap > 0:
+                        self._clock_skip += gap
+        return ServeResult.collect(self, time.perf_counter() - wall0)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Summary of one ``ServeEngine.run``."""
+    wall_s: float
+    completed: int
+    rejected: int
+    total_tokens: int
+    tokens_per_s: float
+    ttft_p50_s: float
+    ttft_p99_s: float
+    itl_p50_s: float
+    itl_p99_s: float
+    stats: dict
+    outputs: Dict[int, List[int]]
+    compile_counts: Dict[str, int]
+
+    @classmethod
+    def collect(cls, eng: ServeEngine, wall: float) -> "ServeResult":
+        ttft, itl, total = [], [], 0
+        outputs: Dict[int, List[int]] = {}
+        for lv in eng.done:
+            outputs[lv.req.rid] = list(lv.tokens)
+            total += len(lv.tokens)
+            if lv.token_times:
+                ttft.append(lv.token_times[0] - lv.arrival_s)
+                itl.extend(np.diff(lv.token_times).tolist())
+        kinds: Dict[str, int] = {}
+        for key in eng.compile_keys:
+            kinds[key[0]] = kinds.get(key[0], 0) + 1
+        return cls(
+            wall_s=wall, completed=len(eng.done), rejected=len(eng.rejected),
+            total_tokens=total,
+            tokens_per_s=total / wall if wall > 0 else 0.0,
+            ttft_p50_s=_percentile(ttft, 50), ttft_p99_s=_percentile(ttft, 99),
+            itl_p50_s=_percentile(itl, 50), itl_p99_s=_percentile(itl, 99),
+            stats=dict(eng.stats), outputs=outputs, compile_counts=kinds)
+
+    def summary(self) -> dict:
+        return {
+            "wall_s": round(self.wall_s, 4),
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "total_tokens": self.total_tokens,
+            "tokens_per_s": round(self.tokens_per_s, 1),
+            "ttft_p50_ms": round(self.ttft_p50_s * 1e3, 2),
+            "ttft_p99_ms": round(self.ttft_p99_s * 1e3, 2),
+            "itl_p50_ms": round(self.itl_p50_s * 1e3, 3),
+            "itl_p99_ms": round(self.itl_p99_s * 1e3, 3),
+            "admitted": self.stats["admitted"],
+            "deferrals": self.stats["deferrals"],
+            "pool_grows": self.stats["pool_grows"],
+            "decode_batches": self.stats["decode_batches"],
+            "peak_predicted_mb": round(
+                self.stats["peak_predicted_bytes"] / 1e6, 3),
+            "peak_actual_mb": round(
+                self.stats["peak_actual_bytes"] / 1e6, 3),
+            "compile_counts": dict(self.compile_counts),
+        }

@@ -1,4 +1,14 @@
-"""Batched serving: prefill + token-by-token decode with KV / SSM caches."""
+"""Batched serving: prefill + token-by-token decode with KV / SSM caches.
+
+The compiled decode step is cached per LM (``cached_serve_step``): a
+``jax.jit`` callable caches its executables by input shape, so one
+jitted step per model serves every (batch, chunk, cache-geometry)
+bucket — the old per-call ``jax.jit(make_serve_step(lm))`` built a new
+closure each time and re-traced on *every* ``generate`` /
+``prefill_into_cache`` call.  ``tests/test_serve.py`` asserts the
+compile counts.  The continuous-batching engine on top of this lives in
+``repro.train.engine``.
+"""
 from __future__ import annotations
 
 import time
@@ -13,10 +23,25 @@ from repro.models.lm import LM
 
 
 def make_serve_step(lm: LM):
-    """jit-able decode step: (params, tokens(B,1), cache, index) -> (logits, cache)."""
+    """jit-able decode step: (params, tokens(B,C), cache, index) -> (logits, cache)."""
     def serve_step(params, tokens, cache, index):
         return lm.decode_step(params, tokens, cache, index)
     return serve_step
+
+
+def cached_serve_step(lm: LM):
+    """The LM's compiled serve step — built once, cached on the model.
+
+    ``jax.jit`` keys executables on input shapes internally, so shape
+    buckets (decode (B,1), prefill chunks (B,c), different cache
+    lengths) share this one callable and each geometry compiles exactly
+    once per LM.  Use ``cached_serve_step(lm)._cache_size()`` to audit
+    compile counts."""
+    step = getattr(lm, "_serve_step_jit", None)
+    if step is None:
+        step = jax.jit(make_serve_step(lm))
+        lm._serve_step_jit = step
+    return step
 
 
 def prefill_into_cache(lm: LM, params, tokens, cache, chunk: int = 32):
@@ -30,7 +55,7 @@ def prefill_into_cache(lm: LM, params, tokens, cache, chunk: int = 32):
     the one-shot forward instead."""
     B, S = tokens.shape
     chunk = max(int(chunk), 1)
-    step = jax.jit(make_serve_step(lm))
+    step = cached_serve_step(lm)
     logits = None
     for t in range(0, S, chunk):
         logits, cache = step(params, tokens[:, t:t + chunk], cache, t)
@@ -39,13 +64,22 @@ def prefill_into_cache(lm: LM, params, tokens, cache, chunk: int = 32):
 
 def generate(lm: LM, params, prompt: jnp.ndarray, max_new_tokens: int,
              temperature: float = 0.0, seed: int = 0,
-             prefill_chunk: int = 32):
-    """Greedy / sampled generation for the examples."""
+             prefill_chunk: int = 32, cache_len: Optional[int] = None):
+    """Greedy / sampled generation for the examples.
+
+    ``cache_len``: total cache length to allocate (default: exactly
+    ``S + max_new_tokens``).  Passing a quantum-bucketed length keeps
+    the number of compiled cache geometries bounded across requests of
+    different lengths — generation output is identical either way (the
+    decode mask never reads past each query's own position)."""
     B, S = prompt.shape
-    cache = lm.init_cache(B, S + max_new_tokens)
+    if cache_len is None:
+        cache_len = S + max_new_tokens
+    assert cache_len >= S + max_new_tokens, (cache_len, S, max_new_tokens)
+    cache = lm.init_cache(B, cache_len)
     logits, cache = prefill_into_cache(lm, params, prompt, cache,
                                        chunk=prefill_chunk)
-    step = jax.jit(make_serve_step(lm))
+    step = cached_serve_step(lm)
     key = jax.random.PRNGKey(seed)
     toks = []
     for i in range(max_new_tokens):

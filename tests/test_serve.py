@@ -1,0 +1,301 @@
+"""Tests for the continuous-batching serve engine (ISSUE 9): trace
+equivalence vs sequential generation across LM families, input-aware
+admission under an HBM budget (never exceed, defer-then-serve, reject
+what can never fit), the batched cache-slot API, vector-index decode,
+the cached serve step's compile accounting, the admission estimator's
+accuracy on unsampled buckets, and trace-generator determinism.
+
+All engine tests carry ``-m serve`` (own CI job; tier-1 excludes them).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.trace import TraceRequest, gen_trace
+from repro.launch.report import serve_report
+from repro.models.lm import build_model
+from repro.models.registry import get_config
+from repro.train.engine import ServeEngine, cache_leaf_bytes
+from repro.train.serve import cached_serve_step, generate
+
+pytestmark = pytest.mark.serve
+
+
+def _setup(arch, seed=0, **kw):
+    red = dict(num_layers=2, d_model=64, d_ff=128, vocab_size=256,
+               dtype="float32")
+    red.update(kw)
+    cfg = get_config(arch).reduced(**red)
+    lm = build_model(cfg)
+    return cfg, lm, lm.init(jax.random.PRNGKey(seed))
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    return _setup("qwen3_1p7b")
+
+
+@pytest.fixture(scope="module")
+def ssm_setup():
+    return _setup("mamba2_1p3b", seed=1)
+
+
+def _mixed_trace(cfg, n=6, new=8, rate=0.0, seed=3):
+    return gen_trace(num_requests=n, vocab_size=cfg.vocab_size,
+                     rate_rps=rate, max_new_tokens=new, min_new_tokens=4,
+                     prompt_scale=0.2, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: engine output == sequential generate, per request
+
+
+@pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+def test_engine_matches_sequential_generate(family, dense_setup, ssm_setup):
+    """Every request of a mixed-length greedy trace decodes
+    token-for-token identically to a one-request ``generate`` at the
+    engine's bucketed cache geometry — across attention, SSM, and
+    hybrid cache families."""
+    if family == "dense":
+        cfg, lm, params = dense_setup
+    elif family == "ssm":
+        cfg, lm, params = ssm_setup
+    else:
+        cfg, lm, params = _setup("hymba_1p5b", seed=2)
+    trace = _mixed_trace(cfg)
+    eng = ServeEngine(lm, params, hbm_bytes=2e9, quantum=32, max_slots=4,
+                      prefill_chunk=8, decode_steps=2)
+    res = eng.run(trace)
+    assert res.completed == len(trace)
+    lens = {len(r.prompt) for r in trace}
+    assert len(lens) > 1, "trace must mix prompt lengths"
+    for r in trace:
+        want = np.asarray(generate(lm, params, jnp.asarray(r.prompt[None]),
+                                   r.max_new_tokens,
+                                   cache_len=eng.bucket_of(r)))[0]
+        got = np.asarray(res.outputs[r.rid])
+        np.testing.assert_array_equal(got, want, err_msg=f"rid {r.rid}")
+
+
+def test_vector_index_decode_matches_scalar(dense_setup):
+    """``decode_step`` with a (B,) index vector of equal entries is the
+    scalar-index step — the per-row scatter path is numerically the
+    dynamic-slice path."""
+    cfg, lm, params = dense_setup
+    B, S = 2, 11
+    tok = jax.random.randint(jax.random.PRNGKey(5), (B, 1), 1,
+                             cfg.vocab_size)
+    cache_s = lm.init_cache(B, 32)
+    cache_v = jax.tree_util.tree_map(jnp.copy, cache_s)
+    lg_s, cache_s = lm.decode_step(params, tok, cache_s, S)
+    lg_v, cache_v = lm.decode_step(params, tok, cache_v,
+                                   jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_v),
+                               rtol=1e-6, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(cache_s),
+                    jax.tree_util.tree_leaves(cache_v)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_cache_insert_extract_evict_roundtrip(dense_setup):
+    """One-row staging caches survive a pool insert/extract round trip
+    bit-exactly; evict zeroes exactly the evicted slot."""
+    cfg, lm, params = dense_setup
+    pool = lm.init_cache(3, 16)
+    row = jax.tree_util.tree_map(
+        lambda l: jnp.ones_like(l) * 0.5,
+        lm.init_cache(1, 16))
+    pool = lm.cache_insert(pool, row, 1)
+    back = lm.cache_extract(pool, 1)
+    for a, b in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(row)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    other = lm.cache_extract(pool, 0)       # neighbours untouched
+    assert all(float(jnp.abs(l).max()) == 0.0
+               for l in jax.tree_util.tree_leaves(other))
+    pool = lm.cache_evict(pool, 1)
+    gone = lm.cache_extract(pool, 1)
+    assert all(float(jnp.abs(l).max()) == 0.0
+               for l in jax.tree_util.tree_leaves(gone))
+
+
+# ---------------------------------------------------------------------------
+# admission under the HBM budget
+
+
+def test_admission_never_exceeds_budget(dense_setup):
+    """Under a budget tight enough to force deferrals, the predicted
+    peak bounds the actual allocated peak, and both stay within the
+    budget — admit-before-allocate means zero admission OOMs."""
+    cfg, lm, params = dense_setup
+    trace = _mixed_trace(cfg, n=8, seed=11)
+    eng = ServeEngine(lm, params, hbm_bytes=1e9, quantum=32, max_slots=2,
+                      prefill_chunk=8)
+    # tightest budget that still fits params + one admitted request
+    tight = (eng.param_bytes + eng.slot_bytes(64) * 3
+             + eng.prefill_chunk * eng._token_ws * 2)
+    eng2 = ServeEngine(lm, params, hbm_bytes=tight, quantum=32,
+                       max_slots=2, prefill_chunk=8)
+    res = eng2.run(trace)
+    assert res.stats["deferrals"] > 0, "budget was not tight"
+    assert res.completed == len(trace)
+    assert (res.stats["peak_actual_bytes"]
+            <= res.stats["peak_predicted_bytes"] <= tight)
+
+
+def test_deferred_requests_eventually_served(dense_setup):
+    """An over-subscribed burst (every request at t=0, budget fits ~1
+    in flight) defers most of the queue but completes all of it."""
+    cfg, lm, params = dense_setup
+    trace = _mixed_trace(cfg, n=5, seed=13)
+    probe = ServeEngine(lm, params, hbm_bytes=1e9, quantum=32)
+    tight = (probe.param_bytes + probe.slot_bytes(64) * 3
+             + probe.prefill_chunk * probe._token_ws * 2)
+    eng = ServeEngine(lm, params, hbm_bytes=tight, quantum=32,
+                      max_slots=4, prefill_chunk=8)
+    res = eng.run(trace)
+    assert res.stats["deferrals"] > 0
+    assert res.rejected == 0
+    assert res.completed == len(trace)
+    assert sorted(res.outputs) == sorted(r.rid for r in trace)
+
+
+def test_request_that_never_fits_is_rejected_not_crashed(dense_setup):
+    """A request whose single slot exceeds the whole budget is REJECTED
+    with the run completing normally — never an allocation failure."""
+    cfg, lm, params = dense_setup
+    probe = ServeEngine(lm, params, hbm_bytes=1e9, quantum=32)
+    small = TraceRequest(rid=0, arrival_s=0.0,
+                         prompt=np.arange(1, 9, dtype=np.int32),
+                         max_new_tokens=4)
+    huge = TraceRequest(rid=1, arrival_s=0.0,
+                        prompt=np.ones(4096, np.int32),
+                        max_new_tokens=64)
+    tight = (probe.param_bytes + probe.slot_bytes(32) * 4
+             + probe.prefill_chunk * probe._token_ws * 2)
+    eng = ServeEngine(lm, params, hbm_bytes=tight, quantum=32,
+                      max_slots=2, prefill_chunk=8)
+    res = eng.run([small, huge])
+    assert res.completed == 1 and 0 in res.outputs
+    assert res.rejected == 1
+    assert res.stats["peak_actual_bytes"] <= tight
+
+
+def test_budget_below_params_raises(dense_setup):
+    cfg, lm, params = dense_setup
+    with pytest.raises(ValueError, match="parameter bytes"):
+        ServeEngine(lm, params, hbm_bytes=1.0)
+
+
+def test_encdec_family_rejected():
+    cfg, lm, params = _setup("seamless_m4t_large_v2", seed=4,
+                             encoder_layers=1, num_layers=1)
+    assert lm.kind == "dec"
+    with pytest.raises(ValueError, match="decoder-only"):
+        ServeEngine(lm, params, hbm_bytes=1e9)
+
+
+# ---------------------------------------------------------------------------
+# estimator accuracy
+
+
+def test_estimator_predicts_unseen_buckets(dense_setup, ssm_setup):
+    """The admission estimator (PolyEstimator over per-leaf cache
+    bytes) matches the eval_shape ground truth within 5% on buckets it
+    never sampled — for both linear-in-S (KV) and constant (SSM state)
+    cache families."""
+    for cfg, lm, params in (dense_setup, ssm_setup):
+        eng = ServeEngine(lm, params, hbm_bytes=1e9, quantum=32)
+        for bucket in (64, 128, 320):       # warm-fit sampled 32/96/160
+            truth = float(cache_leaf_bytes(lm, bucket).sum())
+            assert abs(eng.slot_bytes(bucket) - truth) <= 0.05 * truth, \
+                (lm.kind, bucket, eng.slot_bytes(bucket), truth)
+
+
+# ---------------------------------------------------------------------------
+# compile accounting
+
+
+def test_cached_serve_step_is_shared_and_compiles_once(dense_setup):
+    """Satellite 1: ``generate``/``prefill_into_cache`` share one jit
+    per LM — repeated calls at the same geometry add zero compiles."""
+    cfg, lm, params = dense_setup
+    prompt = jax.random.randint(jax.random.PRNGKey(6), (1, 12), 1,
+                                cfg.vocab_size)
+    assert cached_serve_step(lm) is cached_serve_step(lm)
+    generate(lm, params, prompt, 4, cache_len=32)
+    before = cached_serve_step(lm)._cache_size()
+    for _ in range(3):
+        generate(lm, params, prompt, 4, cache_len=32)
+    assert cached_serve_step(lm)._cache_size() == before
+
+
+def test_engine_decode_compiles_bounded_by_buckets(dense_setup):
+    """Decode geometries stay O(#buckets x #slot-tiers) and strictly
+    below #requests, and a second engine over the same LM re-traces
+    nothing (executables are cached on the model)."""
+    cfg, lm, params = dense_setup
+    trace = _mixed_trace(cfg, n=8, seed=17)
+    eng = ServeEngine(lm, params, hbm_bytes=2e9, quantum=32, max_slots=4,
+                      prefill_chunk=8)
+    res = eng.run(trace)
+    n_buckets = len({eng.bucket_of(r) for r in trace})
+    decode_geoms = res.compile_counts["decode"]
+    assert decode_geoms <= n_buckets * len(eng.tiers)
+    assert decode_geoms < len(trace)
+    before = eng._decode_jit._cache_size()
+    eng2 = ServeEngine(lm, params, hbm_bytes=2e9, quantum=32,
+                       max_slots=4, prefill_chunk=8)
+    assert eng2._decode_jit is eng._decode_jit
+    eng2.run(trace)
+    assert eng2._decode_jit._cache_size() == before
+
+
+def test_prefill_chunks_are_powers_of_two(dense_setup):
+    """Prefill never traces an arbitrary remainder width: every chunk
+    geometry is drawn from the fixed power-of-two candidate set, so
+    compile count is O(log max_chunk) per bucket."""
+    cfg, lm, params = dense_setup
+    trace = _mixed_trace(cfg, n=6, seed=19)
+    eng = ServeEngine(lm, params, hbm_bytes=2e9, quantum=32,
+                      prefill_chunk=16)
+    eng.run(trace)
+    widths = {k[2] for k in eng.compile_keys if k[0] == "prefill"}
+    assert widths <= {1, 2, 4, 8, 16}, widths
+
+
+# ---------------------------------------------------------------------------
+# trace generator + report
+
+
+def test_gen_trace_deterministic_and_open_loop():
+    a = gen_trace(num_requests=10, vocab_size=128, rate_rps=4.0,
+                  max_new_tokens=8, seed=5)
+    b = gen_trace(num_requests=10, vocab_size=128, rate_rps=4.0,
+                  max_new_tokens=8, seed=5)
+    c = gen_trace(num_requests=10, vocab_size=128, rate_rps=4.0,
+                  max_new_tokens=8, seed=6)
+    assert all(np.array_equal(x.prompt, y.prompt)
+               and x.arrival_s == y.arrival_s for x, y in zip(a, b))
+    assert any(not np.array_equal(x.prompt, y.prompt)
+               for x, y in zip(a, c))
+    arr = [r.arrival_s for r in a]
+    assert arr == sorted(arr) and arr[-1] > 0.0
+    burst = gen_trace(num_requests=4, vocab_size=128, rate_rps=0.0,
+                      max_new_tokens=8, seed=5)
+    assert all(r.arrival_s == 0.0 for r in burst)
+    rt = [TraceRequest.from_json(r.to_json()) for r in a]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, rt))
+
+
+def test_serve_report_renders(dense_setup):
+    cfg, lm, params = dense_setup
+    trace = _mixed_trace(cfg, n=3, seed=23)
+    eng = ServeEngine(lm, params, hbm_bytes=2e9, quantum=32)
+    res = eng.run(trace)
+    text = serve_report(eng, res)
+    assert "| metric | value |" in text
+    assert "admission" in text and "compiled geometries" in text
+    assert f"{res.completed} /" in text

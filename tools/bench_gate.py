@@ -45,6 +45,9 @@ DRIFT_METRICS = [
     # measured offload-vs-remat step-time ratio at the transfer-bound
     # point (wall-clock, so warn-only drift absorbs runner variance)
     (("offload_exec", "speedup"), True),
+    # continuous-batching vs sequential serving throughput ratio at
+    # equal HBM budget (wall-clock; warn-only drift absorbs runners)
+    (("serve", "speedup_vs_sequential"), True),
 ]
 
 
