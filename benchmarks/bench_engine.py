@@ -66,7 +66,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+import tempfile
 import time
 
 import jax
@@ -84,6 +86,7 @@ from repro.kernels import flash_attention as fa
 from repro.kernels import ssd_scan as ssd
 from repro.models.lm import build_model
 from repro.models.registry import get_config
+from repro.obs import Telemetry, build_telemetry, flush_telemetry
 from repro.optim.adamw import AdamW
 from repro.sharding.budget import fixed_train_bytes_per_device
 from repro.train.trainer import Trainer
@@ -1122,6 +1125,75 @@ def bench_serve(smoke: bool) -> dict:
     }
 
 
+def bench_telemetry(smoke: bool) -> dict:
+    """(l) telemetry overhead + disabled-path identity.
+
+    Runs the SAME training loop twice from the same initial params:
+    once with ``Telemetry.disabled()`` (the default everywhere) and
+    once with every surface on — structured events, span tracing, and
+    all three file sinks.  The two loops are *interleaved* step-by-step
+    so machine noise (frequency scaling, neighbours on a CI runner)
+    hits both modes alike, and the comparison uses the **min** warm
+    step time: noise only ever adds time, so the min is the clean
+    estimate of intrinsic per-step cost.  Two acceptance gates read
+    this point:
+
+    * full telemetry costs <= 2% of the warm step time (min of the
+      warm steps, compile excluded);
+    * the disabled path is bitwise identical: the two loss trajectories
+      match float-for-float, so telemetry can never change training.
+    """
+    cfg = get_config("bert_base_paper").reduced(
+        num_layers=2 if smoke else 4, d_model=128, d_ff=256,
+        vocab_size=512, dtype="float32")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    B, S = 4, 128 if smoke else 256
+    steps = 8 if smoke else 16
+    batch = {"tokens": jnp.ones((B, S), jnp.int32),
+             "labels": jnp.ones((B, S), jnp.int32)}
+
+    def make(telemetry):
+        planner = MimosePlanner(lm, 1e18, quantum=64, warmup_samples=1)
+        tr = Trainer(lm, planner, AdamW(lr=1e-3), telemetry=telemetry)
+        p = jax.tree_util.tree_map(jnp.copy, params)
+        return {"tr": tr, "p": p, "opt": tr.optimizer.init(p),
+                "losses": [], "times": []}
+
+    tmp = tempfile.mkdtemp(prefix="bench_obs_")
+    tel = build_telemetry(metrics_path=os.path.join(tmp, "metrics.json"),
+                          events_path=os.path.join(tmp, "events.jsonl"),
+                          trace_path=os.path.join(tmp, "trace.json"))
+    modes = [make(Telemetry.disabled()), make(tel)]
+    for _ in range(steps):
+        for st in modes:              # interleaved: noise hits both alike
+            t0 = time.perf_counter()
+            st["p"], st["opt"], loss = st["tr"].step(
+                st["p"], st["opt"], dict(batch))
+            st["times"].append(time.perf_counter() - t0)
+            st["losses"].append(float(loss))
+    losses_off, t_off = modes[0]["losses"], modes[0]["times"]
+    losses_on, t_on = modes[1]["losses"], modes[1]["times"]
+    n_spans = len([e for e in tel.tracer.events() if e.get("ph") == "X"])
+    flush_telemetry(tel)
+    n_events = sum(1 for _ in open(os.path.join(tmp, "events.jsonl")))
+
+    # min of the warm steps: step 0 compiles, step 1 still touches cold
+    # caches — both excluded; min, not median, because noise is strictly
+    # additive and the gate measures intrinsic cost, not runner load
+    off = float(np.min(t_off[2:]))
+    on = float(np.min(t_on[2:]))
+    return {
+        "steps": steps,
+        "warm_step_off_s": round(off, 6),
+        "warm_step_on_s": round(on, 6),
+        "overhead_ratio": round(max(on - off, 0.0) / off, 6),
+        "losses_bitwise_identical": losses_on == losses_off,
+        "trace_spans": n_spans,
+        "event_records": n_events,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -1142,6 +1214,7 @@ def main(argv=None) -> int:
         "solver": bench_solver(args.smoke),
         "offload_exec": bench_offload_exec(args.smoke),
         "serve": bench_serve(args.smoke),
+        "telemetry": bench_telemetry(args.smoke),
     }
     sched96 = report["scheduler"]["units_96"]
     coll = report["collector"]
@@ -1258,6 +1331,17 @@ def main(argv=None) -> int:
         "serve_decode_compiles_bounded_by_buckets":
             srv["decode_geometries"] <= srv["decode_geometry_bound"]
             and srv["decode_geometries"] < srv["requests"],
+        # full telemetry (events + spans + file sinks) costs <= 2% of
+        # warm step time, and spans/events were actually recorded (the
+        # cheap way to pass an overhead gate is to record nothing)
+        "telemetry_overhead_le_2pct":
+            report["telemetry"]["overhead_ratio"] <= 0.02
+            and report["telemetry"]["trace_spans"] > 0
+            and report["telemetry"]["event_records"] > 0,
+        # telemetry off (the default) is bitwise identical to the
+        # instrumented build: the loss trajectories match exactly
+        "telemetry_disabled_bitwise_identical":
+            report["telemetry"]["losses_bitwise_identical"],
     }
 
     with open(args.out, "w") as f:

@@ -67,6 +67,7 @@ import numpy as np
 from repro.core.cache import LRUCache
 from repro.core.collector import ShuttlingCollector, input_size_of, _tree_bytes
 from repro.core.estimator import PolyEstimator
+from repro.obs import StatsView, Telemetry, TRACK_PLANNER
 from repro.core.scheduler import (Plan, escalate_plan, greedy_plan,
                                   greedy_plan_adaptive)
 from repro.core.solver import BackgroundSolver, SolveRequest
@@ -101,6 +102,7 @@ class PlanInfo:
 
 class PlannerBase:
     name = "base"
+    telemetry: Optional[Telemetry] = None
     quantum: int = 1          # batch geometry granularity (1 = no bucketing)
     mesh_budget: Optional[MeshBudget] = None
     fixed_bytes: Optional[float] = None
@@ -125,12 +127,32 @@ class PlannerBase:
         value-identical to False/True."""
         raise NotImplementedError
 
+    # -- observability (repro.obs) ---------------------------------------
+    def bind_telemetry(self, telemetry: Telemetry) -> None:
+        """Re-home this planner's metrics into ``telemetry``'s registry.
+
+        Called by the trainer (and the serve engine) so every component
+        of a run shares ONE registry: same-named metrics merge, which is
+        exactly how planner and watchdog converge on a single
+        ``train_oom_events`` counter instead of double-booking."""
+        self.telemetry = telemetry
+        st = getattr(self, "stats", None)
+        if isinstance(st, StatsView):
+            st.attach(telemetry.metrics)
+
     # -- OOM-watchdog hooks (repro.train.resilience) ---------------------
     def record_oom(self, bucket: int) -> None:
         """Book a device-OOM (real or injected) against ``bucket`` in
-        ``stats`` — a planner without a stats dict just drops it."""
+        ``stats`` — a planner without a stats mapping just drops it.
+
+        NOTE: when the planner shares a registry with an
+        ``OOMWatchdog`` (the trainer binds both), the watchdog's
+        ``on_oom`` bumps the SAME ``train_oom_events`` counter — call
+        one or the other per OOM, never both."""
         st = getattr(self, "stats", None)
-        if isinstance(st, dict):
+        if isinstance(st, StatsView):
+            st.inc("oom_events", bucket=bucket)
+        elif isinstance(st, dict):
             st["oom_events"] = st.get("oom_events", 0) + 1
             by = st.setdefault("oom_by_bucket", {})
             by[bucket] = by.get(bucket, 0) + 1
@@ -412,8 +434,11 @@ class MimosePlanner(PlannerBase):
                  audit_tol: float = 0.02,
                  escalate_shrink: float = 0.85,
                  solver: str = "off",
-                 solver_budget_ms: float = 50.0):
+                 solver_budget_ms: float = 50.0,
+                 telemetry: Optional[Telemetry] = None):
         self.lm = lm
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry.disabled()
         self.mesh_budget = mesh_budget
         self.budget_bytes = self.resolve_budget_bytes(budget_bytes)
         self.fixed_bytes = fixed_bytes          # resolved lazily from params
@@ -459,15 +484,35 @@ class MimosePlanner(PlannerBase):
         # re-paying the online warmup Mimose exists to avoid
         self._sample_log: list = []
         # stats (paper Table 2) + resilience counters (watchdog/restore)
-        # + optimal-plan-tier counters (repro.core.solver)
-        self.stats = {"cache_hits": 0, "cache_misses": 0, "collections": 0,
-                      "collect_time_s": 0.0, "estimate_time_s": 0.0,
-                      "schedule_time_s": 0.0, "audits": 0, "refits": 0,
-                      "evictions": 0, "oom_events": 0, "escalations": 0,
-                      "poisoned_plans": 0, "restored_samples": 0,
-                      "restored_plans": 0, "dropped_plans": 0,
-                      "solves": 0, "solver_swaps": 0, "solver_wins": 0,
-                      "solver_timeouts": 0, "offload_fallbacks": 0}
+        # + optimal-plan-tier counters (repro.core.solver) — a
+        # dict-shaped view over the shared metrics registry, so one
+        # store serves the legacy ``stats[...]`` call sites, Prometheus
+        # export and the exit report alike
+        self.stats = StatsView(
+            self.telemetry.metrics,
+            scalars={"cache_hits": "plan_cache_hits",
+                     "cache_misses": "plan_cache_misses",
+                     "collections": "planner_collections",
+                     "collect_time_s": "planner_collect_time_s",
+                     "estimate_time_s": "planner_estimate_time_s",
+                     "schedule_time_s": "planner_schedule_time_s",
+                     "audits": "planner_audits",
+                     "refits": "planner_refits",
+                     "evictions": "plan_cache_evictions",
+                     "oom_events": "train_oom_events",
+                     "escalations": "train_escalations",
+                     "poisoned_plans": "plan_cache_poisoned",
+                     "restored_samples": "planner_restored_samples",
+                     "restored_plans": "planner_restored_plans",
+                     "dropped_plans": "planner_dropped_plans",
+                     "solves": "solver_solves",
+                     "solver_swaps": "solver_swaps",
+                     "solver_wins": "solver_wins",
+                     "solver_timeouts": "solver_timeouts",
+                     "offload_fallbacks": "offload_fallbacks"},
+            labeled={"oom_by_bucket": ("train_oom_events", "bucket"),
+                     "escalations_by_bucket": ("train_escalations",
+                                               "bucket")})
         # optimal-plan tier: a daemon thread solves the (k, action)
         # assignment exactly and swaps strictly better plans into the
         # cache above — all cache access goes through _cache_lock so
@@ -503,6 +548,33 @@ class MimosePlanner(PlannerBase):
                                str(getattr(v, "dtype", "int32"))]
                            for k, v in probe.items()
                            if np.shape(v)}})
+
+    def _record_drift_point(self, bucket: int, size: int, est, truth,
+                            rel_err: float = 0.0,
+                            refit: bool = False) -> None:
+        """One point of the predicted-vs-actual peak-bytes series: the
+        drift-audit (and every sheltered collection) compares the
+        estimator's activation-byte prediction against an exact
+        abstract re-collection — this publishes that comparison as
+        per-bucket gauges and a ``drift`` event instead of discarding
+        it after the refit decision."""
+        div = self.activation_divisor_scalar()
+        fixed = float(self.fixed_bytes) if self.fixed_bytes is not None \
+            else 0.0
+        pred = fixed + float(np.sum(est)) / div
+        act = fixed + float(np.sum(truth)) / div
+        m = self.telemetry.metrics
+        m.gauge("plan_predicted_peak_bytes",
+                "predicted per-device peak bytes at the bucket's "
+                "geometry").set(pred, bucket=bucket)
+        m.gauge("plan_actual_peak_bytes",
+                "collected (ground-truth) per-device peak bytes").set(
+                    act, bucket=bucket)
+        if self.telemetry.events_on:
+            self.telemetry.events.emit(
+                "drift", bucket=int(bucket), size=int(size),
+                predicted_bytes=pred, actual_bytes=act,
+                rel_err=float(rel_err), refit=bool(refit))
 
     def _microbatch_vectors(self, params, batch, k: int, est1, flops1,
                             res) -> dict:
@@ -564,7 +636,9 @@ class MimosePlanner(PlannerBase):
             return p.as_actions(), PlanInfo(s, qs, True, False, p)
         self.stats["cache_misses"] += 1
 
+        tel = self.telemetry
         collected = False
+        audited = False
         flops = None
         res = None
         t_est = t_col = 0.0
@@ -572,7 +646,8 @@ class MimosePlanner(PlannerBase):
             # sheltered execution: collect this size online (the
             # collection carries the recompute-cost vector for this
             # geometry, so the scheduler reads it straight off)
-            res = self.collector.collect(params, batch)
+            with tel.tracer.span("collect", TRACK_PLANNER):
+                res = self.collector.collect(params, batch)
             self._feed_estimators(s, res, batch)
             est = self.collected_vector(res)
             if self.cost_aware:
@@ -581,19 +656,26 @@ class MimosePlanner(PlannerBase):
             t_col = res.collect_time_s
             self.stats["collections"] += 1
             self.stats["collect_time_s"] += t_col
+            self._record_drift_point(qs, s, est, est)
         else:
             t0 = time.perf_counter()
-            est = self.estimator.predict(s)
+            with tel.tracer.span("predict", TRACK_PLANNER):
+                est = self.estimator.predict(s)
             t_est = time.perf_counter() - t0
             self.stats["estimate_time_s"] += t_est
             if (self.audit_every
                     and self.stats["cache_misses"] % self.audit_every == 0):
                 # drift audit: exact abstract re-collection for this size
                 self.stats["audits"] += 1
-                audit_res = self.collector.collect(params, batch)
+                with tel.tracer.span("collect", TRACK_PLANNER):
+                    audit_res = self.collector.collect(params, batch)
                 truth = self.collected_vector(audit_res)
                 err = abs(truth.sum() - est.sum()) / max(truth.sum(), 1.0)
-                if err > self.audit_tol:
+                refit = err > self.audit_tol
+                audited = True
+                self._record_drift_point(qs, s, est, truth,
+                                         rel_err=err, refit=refit)
+                if refit:
                     self._feed_estimators(s, audit_res, batch)
                     self.estimator.fit()
                     self.est_output.fit()
@@ -605,6 +687,11 @@ class MimosePlanner(PlannerBase):
                         self.cache.clear()  # stale plans out — also
                     # invalidates in-flight solves: their swap is
                     # identity-checked against the evicted objects
+                    if tel.events_on:
+                        tel.events.emit("refit", bucket=qs, size=s,
+                                        rel_err=float(err))
+                    tel.tracer.instant("refit", TRACK_PLANNER,
+                                       args={"bucket": qs})
 
         t0 = time.perf_counter()
         # analytic recompute cost at this bucket's geometry (pure python
@@ -613,33 +700,59 @@ class MimosePlanner(PlannerBase):
         if self.cost_aware and flops is None:
             flops = plan_unit_flops(self.lm, batch)
         ks = self.candidate_microbatches(batch)
-        if ks == [1]:
-            # plain path — bit-identical to planning without the
-            # microbatching subsystem
-            div = self.activation_divisor_scalar()
-            plan = greedy_plan(est / div,
-                               self.budget_bytes,
-                               self.resolve_fixed_bytes(params),
-                               tol=self.bucket_tol,
-                               flops=self.planning_flops(flops),
-                               **self._hybrid_kwargs(s, res))
-        else:
-            plan = greedy_plan_adaptive(
-                lambda k: self._microbatch_vectors(params, batch, k,
-                                                   est, flops, res),
-                self.budget_bytes,
-                self.resolve_fixed_bytes(params),
-                candidate_ks=ks,
-                tol=self.bucket_tol,
-                pcie_bytes_per_s=self.pcie_gbps * 1e9,
-                offload_overlap=self.offload_overlap,
-                accum_overhead_s=self.microbatch_overhead_s)
+        with tel.tracer.span("schedule", TRACK_PLANNER):
+            if ks == [1]:
+                # plain path — bit-identical to planning without the
+                # microbatching subsystem
+                div = self.activation_divisor_scalar()
+                plan = greedy_plan(est / div,
+                                   self.budget_bytes,
+                                   self.resolve_fixed_bytes(params),
+                                   tol=self.bucket_tol,
+                                   flops=self.planning_flops(flops),
+                                   **self._hybrid_kwargs(s, res))
+            else:
+                plan = greedy_plan_adaptive(
+                    lambda k: self._microbatch_vectors(params, batch, k,
+                                                       est, flops, res),
+                    self.budget_bytes,
+                    self.resolve_fixed_bytes(params),
+                    candidate_ks=ks,
+                    tol=self.bucket_tol,
+                    pcie_bytes_per_s=self.pcie_gbps * 1e9,
+                    offload_overlap=self.offload_overlap,
+                    accum_overhead_s=self.microbatch_overhead_s)
         t_sch = time.perf_counter() - t0
         self.stats["schedule_time_s"] += t_sch
+        if not collected and not audited:
+            # responsive plans carry a prediction but no ground truth;
+            # keep the predicted-peak gauge current for the drift column
+            # (an audit this call already published the fresher
+            # predicted/actual pair — don't clobber it)
+            div = self.activation_divisor_scalar()
+            self.telemetry.metrics.gauge(
+                "plan_predicted_peak_bytes").set(
+                    float(self.fixed_bytes or 0.0)
+                    + float(np.sum(est)) / div, bucket=qs)
 
+        ev_before = self.cache.evictions
         with self._cache_lock:
             self.cache[key] = plan
         self.stats["evictions"] = self.cache.evictions
+        if tel.events_on:
+            tel.events.emit(
+                "plan", bucket=qs, size=s, source=plan.source,
+                collected=bool(collected),
+                k=int(getattr(plan, "microbatch", 1) or 1),
+                n_remat=int(plan.n_remat),
+                n_offload=int(plan.n_offload),
+                n_opt=int(plan.n_opt),
+                recompute_flops=float(plan.recompute_flops),
+                offload_bytes=float(plan.offload_bytes),
+                schedule_time_s=t_sch)
+            if self.cache.evictions > ev_before:
+                tel.events.emit("plan_evicted", bucket=qs,
+                                evictions=int(self.cache.evictions))
         self._maybe_submit_solve(params, batch, key, plan)
         return plan.as_actions(), PlanInfo(s, qs, False, collected, plan,
                                            t_est, t_sch, t_col)
@@ -775,11 +888,20 @@ class MimosePlanner(PlannerBase):
         with self._cache_lock:
             if key in self.cache:
                 self.stats["poisoned_plans"] += 1
+                if self.telemetry.events_on:
+                    self.telemetry.events.emit("plan_poisoned",
+                                               bucket=bucket, level=level)
             # installing a NEW object also invalidates any in-flight
             # solve for this key (identity-checked swap)
             self.cache[key] = plan
         self._escalation[key] = level
-        self.stats["escalations"] += 1
-        by = self.stats.setdefault("escalations_by_bucket", {})
-        by[bucket] = by.get(bucket, 0) + 1
+        self.stats.inc("escalations", bucket=bucket)
+        tel = self.telemetry
+        if tel.events_on:
+            tel.events.emit("escalation", bucket=bucket, level=level,
+                            k=int(getattr(plan, "microbatch", 1) or 1),
+                            n_remat=int(plan.n_remat),
+                            n_offload=int(plan.n_offload))
+        tel.tracer.instant("escalation", TRACK_PLANNER,
+                           args={"bucket": bucket, "level": level})
         return True

@@ -47,6 +47,7 @@ construction.
 from __future__ import annotations
 
 import bisect
+import contextlib
 import dataclasses
 import queue
 import threading
@@ -58,6 +59,7 @@ import numpy as np
 from repro.actions import Action
 from repro.core.scheduler import (ActionTables, Plan, action_tables,
                                   greedy_plan_adaptive)
+from repro.obs.tracing import TRACK_SOLVER as _TRACK_SOLVER
 from repro.core.simulator import simulate, simulate_many
 from repro.launch.roofline import MICROBATCH_OVERHEAD_S, PCIE_BW
 
@@ -510,16 +512,22 @@ class BackgroundSolver:
 
     def _process(self, req: SolveRequest) -> None:
         stats = self.planner.stats
-        res = solve(lambda k: req.vectors[int(k)], req.budget_bytes,
-                    req.fixed_bytes, candidate_ks=req.candidate_ks,
-                    pcie_bytes_per_s=req.pcie_bytes_per_s,
-                    offload_overlap=req.offload_overlap,
-                    accum_overhead_s=req.accum_overhead_s,
-                    method=self.method,
-                    deadline_s=self.budget_ms / 1e3,
-                    grid_bytes=self.grid_bytes,
-                    max_states=self.max_states,
-                    include_greedy=False, seed_plans=(req.baseline,))
+        tel = getattr(self.planner, "telemetry", None)
+        span = (tel.tracer.span("solve", _TRACK_SOLVER,
+                                args={"bucket": req.bucket}
+                                if tel.trace_on else None)
+                if tel is not None else contextlib.nullcontext())
+        with span:
+            res = solve(lambda k: req.vectors[int(k)], req.budget_bytes,
+                        req.fixed_bytes, candidate_ks=req.candidate_ks,
+                        pcie_bytes_per_s=req.pcie_bytes_per_s,
+                        offload_overlap=req.offload_overlap,
+                        accum_overhead_s=req.accum_overhead_s,
+                        method=self.method,
+                        deadline_s=self.budget_ms / 1e3,
+                        grid_bytes=self.grid_bytes,
+                        max_states=self.max_states,
+                        include_greedy=False, seed_plans=(req.baseline,))
         req.baseline.solver_checked = True
         if res.timed_out:
             stats["solver_timeouts"] = stats.get("solver_timeouts", 0) + 1
@@ -549,3 +557,15 @@ class BackgroundSolver:
             if cache.get(req.key) is req.baseline:
                 cache[req.key] = plan
                 stats["solver_swaps"] = stats.get("solver_swaps", 0) + 1
+                if tel is not None and tel.events_on:
+                    tel.events.emit(
+                        "solver_swap", bucket=req.bucket,
+                        greedy_s=float(base_score),
+                        solved_s=float(res.score),
+                        improvement_pct=float(
+                            100.0 * (1.0 - res.score / base_score)
+                            if base_score > 0 else 0.0),
+                        k=int(plan.microbatch))
+                if tel is not None:
+                    tel.tracer.instant("solver_swap", _TRACK_SOLVER,
+                                       args={"bucket": req.bucket})

@@ -4,12 +4,16 @@ plus the live engine report a training run prints at exit.
     PYTHONPATH=src python -m repro.launch.report dryrun_scan.jsonl --kind dryrun
     PYTHONPATH=src python -m repro.launch.report roofline.jsonl --kind roofline
 
-``engine_report(trainer, planner)`` turns the trainer's cache stats into
-a per-bucket table — steps, gradient-accumulation split factor ``k``,
-padded vs effective tokens, pad fraction — so a run shows exactly where
-padding waste went and where adaptive microbatching kicked in,
-alongside the plan cache and jit cache hit rates (``launch/train.py``
-prints it).
+``engine_report(trainer, planner)`` renders a per-bucket table — steps,
+gradient-accumulation split factor ``k``, padded vs effective tokens,
+pad fraction — so a run shows exactly where padding waste went and
+where adaptive microbatching kicked in, alongside the plan cache and
+jit cache hit rates (``launch/train.py`` prints it).  Both reports are
+built from the run's :class:`repro.obs.MetricsRegistry` snapshot (the
+single store every component writes to), not by reaching into
+trainer/engine internals; the drift table comes from the
+``plan_predicted_peak_bytes`` / ``plan_actual_peak_bytes`` gauges the
+planner maintains per bucket.
 """
 from __future__ import annotations
 
@@ -18,47 +22,102 @@ import json
 from collections import OrderedDict
 
 
+# -- metrics-snapshot accessors ---------------------------------------------
+def _by_label(snap: dict, name: str, label: str = "bucket") -> dict:
+    """``{int(label-value): value}`` for one metric in a registry
+    snapshot (labels are stored as strings; buckets parse back to int)."""
+    out: dict = {}
+    for row in snap.get(name, {}).get("values", []):
+        raw = row["labels"].get(label)
+        if raw is None:
+            continue
+        try:
+            key = int(raw)
+        except (TypeError, ValueError):
+            key = raw
+        out[key] = out.get(key, 0) + row["value"]
+    return {k: int(v) if float(v).is_integer() else v
+            for k, v in out.items()}
+
+
+def _total(snap: dict, name: str) -> int:
+    return int(snap.get(name, {}).get("total", 0))
+
+
+def _ftotal(snap: dict, name: str) -> float:
+    return float(snap.get(name, {}).get("total", 0.0))
+
+
+def drift_table(snap: dict) -> list:
+    """Per-bucket predicted-vs-actual peak-bytes rows from the planner's
+    drift gauges.  ``actual`` renders ``-`` for buckets that only ever
+    ran responsive (predicted) plans and were never audited."""
+    pred = _by_label(snap, "plan_predicted_peak_bytes")
+    act = _by_label(snap, "plan_actual_peak_bytes")
+    if not pred and not act:
+        return []
+    lines = ["", "| bucket S | predicted peak MB | actual peak MB "
+                 "| drift % |", "|---|---|---|---|"]
+    for b in sorted(set(pred) | set(act)):
+        p = pred.get(b)
+        a = act.get(b)
+        p_s = f"{p / 1e6:.2f}" if p else "-"
+        a_s = f"{a / 1e6:.2f}" if a else "-"
+        d_s = f"{100.0 * (p - a) / a:+.2f}" if p and a else "-"
+        lines.append(f"| {b} | {p_s} | {a_s} | {d_s} |")
+    return lines
+
+
 def engine_report(trainer, planner=None) -> str:
     """Markdown report of the compile-once engine's caches and padding.
 
     ``trainer``: a ``repro.train.trainer.Trainer`` after some steps.
-    ``planner``: optionally the planner, for plan-cache hit rates.
+    ``planner``: optionally the planner, for the solver delta table
+    (everything else comes from the trainer's metrics snapshot).
     """
-    cs = trainer.cache_stats
+    snap = trainer.telemetry.metrics.snapshot()
+    bucket_steps = _by_label(snap, "train_bucket_steps")
+    padded_by = _by_label(snap, "train_bucket_padded_tokens")
+    eff_by = _by_label(snap, "train_bucket_tokens")
+    k_by = _by_label(snap, "train_bucket_microbatch")
     lines = ["| bucket S | steps | k | padded tok | effective tok | pad % |",
              "|---|---|---|---|---|---|"]
     tot_pad = tot_eff = 0
-    for bucket in sorted(cs["bucket_steps"]):
-        steps = cs["bucket_steps"][bucket]
-        padded, eff = cs.get("bucket_tokens", {}).get(bucket, (0, 0))
+    for bucket in sorted(bucket_steps):
+        steps = bucket_steps[bucket]
+        padded = padded_by.get(bucket, 0)
+        eff = eff_by.get(bucket, 0)
         # gradient-accumulation split the planner picked for the bucket
         # (where adaptive microbatching kicked in; 1 = full-batch steps)
-        k = cs.get("bucket_microbatch", {}).get(bucket, 1)
+        k = k_by.get(bucket, 1)
         tot_pad += padded
         tot_eff += eff
         frac = 100.0 * (1.0 - eff / padded) if padded else 0.0
         lines.append(f"| {bucket} | {steps} | {k} | {padded} | {eff} "
                      f"| {frac:.1f} |")
     tot_frac = 100.0 * (1.0 - tot_eff / tot_pad) if tot_pad else 0.0
-    lines.append(f"| **total** | {sum(cs['bucket_steps'].values())} | - "
+    lines.append(f"| **total** | {sum(bucket_steps.values())} | - "
                  f"| {tot_pad} | {tot_eff} | {tot_frac:.1f} |")
     lines.append("")
-    lines.append(f"jit cache: {cs['compiles']} compiles "
-                 f"(+{cs['prewarm_compiles']} prewarmed), "
-                 f"{cs['jit_hits']} hits")
-    stats = getattr(planner, "stats", None) if planner is not None else None
-    if stats and "cache_hits" in stats:
-        lines.append(f"plan cache: {stats['cache_hits']} hits, "
-                     f"{stats['cache_misses']} misses, "
-                     f"{stats['collections']} collections")
+    lines.append(f"jit cache: {_total(snap, 'train_jit_compiles')} compiles "
+                 f"(+{_total(snap, 'train_jit_prewarm_compiles')} "
+                 f"prewarmed), {_total(snap, 'train_jit_hits')} hits")
+    # plan-cache metrics only exist when an input-aware planner was
+    # bound (baselines have no stats), so baseline reports stay short
+    if "plan_cache_hits" in snap:
+        lines.append(f"plan cache: {_total(snap, 'plan_cache_hits')} hits, "
+                     f"{_total(snap, 'plan_cache_misses')} misses, "
+                     f"{_total(snap, 'planner_collections')} collections")
     # background-solver tier — only when solves actually ran, so runs
     # with --solver off keep the report unchanged
-    if stats and (stats.get("solves") or stats.get("solver_timeouts")):
-        lines.append(f"solver: {stats.get('solves', 0)} solve(s), "
-                     f"{stats.get('solver_wins', 0)} win(s), "
-                     f"{stats.get('solver_swaps', 0)} swap(s), "
-                     f"{stats.get('solver_timeouts', 0)} timeout(s)")
-        deltas = stats.get("solver_delta_by_bucket", {})
+    if _total(snap, "solver_solves") or _total(snap, "solver_timeouts"):
+        lines.append(f"solver: {_total(snap, 'solver_solves')} solve(s), "
+                     f"{_total(snap, 'solver_wins')} win(s), "
+                     f"{_total(snap, 'solver_swaps')} swap(s), "
+                     f"{_total(snap, 'solver_timeouts')} timeout(s)")
+        stats = getattr(planner, "stats", None) \
+            if planner is not None else None
+        deltas = (stats or {}).get("solver_delta_by_bucket", {})
         if deltas:
             lines.append("")
             lines.append("| bucket S | greedy overhead s | solved overhead s "
@@ -74,11 +133,10 @@ def engine_report(trainer, planner=None) -> str:
     # line is the anti-silent-failure guarantee: a mesh that cannot
     # shard the host-offload calls shows up HERE, not as a mystery
     # step-time regression
-    hist = getattr(trainer, "history", [])
-    degraded = sum(getattr(s, "offload_degraded", False) for s in hist)
-    exposed = sum(getattr(s, "exposed_transfer_s", 0.0) for s in hist)
-    sim_x = sum(getattr(s, "sim_transfer_s", 0.0) for s in hist)
-    fallbacks = (stats or {}).get("offload_fallbacks", 0)
+    degraded = _total(snap, "train_offload_degraded_steps")
+    exposed = _ftotal(snap, "train_exposed_transfer_s")
+    sim_x = _ftotal(snap, "train_sim_transfer_s")
+    fallbacks = _total(snap, "offload_fallbacks")
     if exposed or degraded or fallbacks:
         lines.append(f"offload: exposed transfer {exposed:.4f}s measured "
                      f"vs {sim_x:.4f}s simulated")
@@ -89,23 +147,23 @@ def engine_report(trainer, planner=None) -> str:
                      f"typed actions)")
     # elastic-resilience counters (repro.train.resilience) — only when
     # something actually happened, so quiet runs keep a quiet report
-    wd = getattr(trainer, "watchdog", None)
-    sn = getattr(trainer, "snapshots", None)
-    oom = int(wd.stats["oom_events"]) if wd is not None else 0
-    snaps = int(sn.written) if sn is not None else 0
+    oom = _total(snap, "train_oom_events")
+    snaps = _total(snap, "snapshots_written")
     restores = int(getattr(trainer, "restores", 0))
     if oom or snaps or restores:
         lines.append(f"resilience: {snaps} snapshot(s) written, "
                      f"{restores} restore(s), {oom} OOM event(s), "
-                     f"{wd.stats['escalations'] if wd else 0} escalation(s), "
-                     f"{wd.stats['retry_successes'] if wd else 0} retry "
+                     f"{_total(snap, 'train_escalations')} escalation(s), "
+                     f"{_total(snap, 'train_retry_successes')} retry "
                      f"success(es), "
-                     f"{wd.stats['retry_failures'] if wd else 0} retry "
+                     f"{_total(snap, 'train_retry_failures')} retry "
                      "failure(s)")
-        esc_by = (stats or {}).get("escalations_by_bucket", {})
+        esc_by = _by_label(snap, "train_escalations")
         if esc_by:
             per = ", ".join(f"{b}: {n}" for b, n in sorted(esc_by.items()))
             lines.append(f"escalations by bucket: {per}")
+    # input-aware memory drift: predicted vs audited per-device peak
+    lines.extend(drift_table(snap))
     return "\n".join(lines)
 
 
@@ -119,7 +177,7 @@ def serve_report(engine, result) -> str:
     the serving analogue of ``engine_report``'s jit-cache line
     (``launch/serve.py`` prints it).
     """
-    s = result.stats
+    snap = engine.telemetry.metrics.snapshot()
     lines = ["| metric | value |", "|---|---|"]
     lines.append(f"| completed / rejected | {result.completed} / "
                  f"{result.rejected} |")
@@ -129,16 +187,16 @@ def serve_report(engine, result) -> str:
                  f"{result.ttft_p99_s * 1e3:.1f} ms |")
     lines.append(f"| inter-token p50 / p99 | {result.itl_p50_s * 1e3:.2f} / "
                  f"{result.itl_p99_s * 1e3:.2f} ms |")
-    lines.append(f"| admission | {s['admitted']} admitted, "
-                 f"{s['deferrals']} deferral(s), "
-                 f"{s['rejected']} rejected |")
+    lines.append(f"| admission | {_total(snap, 'serve_admitted')} admitted, "
+                 f"{_total(snap, 'serve_deferrals')} deferral(s), "
+                 f"{_total(snap, 'serve_rejected')} rejected |")
     lines.append(f"| peak HBM predicted / actual | "
-                 f"{s['peak_predicted_bytes'] / 1e6:.2f} / "
-                 f"{s['peak_actual_bytes'] / 1e6:.2f} MB "
+                 f"{_ftotal(snap, 'serve_peak_predicted_bytes') / 1e6:.2f} / "
+                 f"{_ftotal(snap, 'serve_peak_actual_bytes') / 1e6:.2f} MB "
                  f"(budget {engine.hbm_bytes / 1e6:.0f} MB) |")
-    lines.append(f"| pools | {s['pool_grows']} grow(s), "
-                 f"{s['decode_batches']} decode batch(es), "
-                 f"{s['prefill_chunks']} prefill chunk(s) |")
+    lines.append(f"| pools | {_total(snap, 'serve_pool_grows')} grow(s), "
+                 f"{_total(snap, 'serve_decode_batches')} decode batch(es), "
+                 f"{_total(snap, 'serve_prefill_chunks')} prefill chunk(s) |")
     comp = ", ".join(f"{k}: {v}" for k, v in
                      sorted(result.compile_counts.items()))
     lines.append(f"| compiled geometries | {comp} |")

@@ -30,6 +30,7 @@ from repro.data.pipeline import DISTRIBUTIONS
 from repro.data.trace import TraceRequest, gen_trace
 from repro.launch.report import serve_report
 from repro.models.lm import build_model
+from repro.obs import build_telemetry, flush_telemetry
 from repro.models.registry import get_config
 from repro.train.engine import ServeEngine
 
@@ -61,6 +62,16 @@ def main():
                     help="shrink the model for CPU runs")
     ap.add_argument("--save", default=None,
                     help="write the run summary as JSON")
+    # unified telemetry (repro.obs) — same flags as launch/train.py
+    ap.add_argument("--metrics", default=None,
+                    help="write the final metrics snapshot here at exit "
+                         "(.json = JSON doc, else Prometheus text)")
+    ap.add_argument("--events-out", default=None,
+                    help="JSONL event log: admit/defer/reject decisions "
+                         "with predicted bytes, pool grows, completions")
+    ap.add_argument("--trace-out", default=None,
+                    help="Chrome trace_event JSON (Perfetto): per-request "
+                         "queue-wait, prefill-chunk and decode-batch spans")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -88,10 +99,14 @@ def main():
           f"{min(lens)}..{max(lens)}, "
           f"last arrival {trace[-1].arrival_s:.2f}s")
 
+    telemetry = build_telemetry(metrics_path=args.metrics,
+                                events_path=args.events_out,
+                                trace_path=args.trace_out)
     engine = ServeEngine(lm, params, hbm_bytes=args.hbm_gb * 1e9,
                          quantum=args.quantum, max_slots=args.max_slots,
                          prefill_chunk=args.prefill_chunk,
-                         decode_steps=args.decode_steps)
+                         decode_steps=args.decode_steps,
+                         telemetry=telemetry)
     t0 = time.time()
     result = engine.run(trace)
     print(f"served in {time.time() - t0:.2f}s\n")
@@ -100,6 +115,8 @@ def main():
         with open(args.save, "w") as f:
             json.dump(result.summary(), f, indent=2)
         print(f"\nsummary written to {args.save}")
+    for kind, path in flush_telemetry(telemetry).items():
+        print(f"{kind} written to {path}")
 
 
 if __name__ == "__main__":

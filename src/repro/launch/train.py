@@ -27,6 +27,7 @@ from repro.core import (DTRSimPlanner, MeshBudget, MimosePlanner,
                         NonePlanner, SublinearPlanner)
 from repro.launch.mesh import make_production_mesh, parse_mesh_shape
 from repro.launch.report import engine_report
+from repro.obs import build_telemetry, flush_telemetry
 from repro.data.pipeline import (DISTRIBUTIONS, bucket_length, make_batches,
                                  top_buckets)
 from repro.models.lm import build_model
@@ -127,6 +128,20 @@ def main(argv=None):
                          "int N (fail the first N step executions) or "
                          'JSON like {"bucket": {"1024": 2}} — also '
                          "readable from $MIMOSE_INJECT_OOM")
+    # unified telemetry (repro.obs): all three sinks are opt-in and the
+    # run is bitwise-identical with them off
+    ap.add_argument("--metrics", default=None,
+                    help="write the final metrics snapshot here at exit "
+                         "(.json = JSON doc, anything else = Prometheus "
+                         "text exposition)")
+    ap.add_argument("--events-out", default=None,
+                    help="structured JSONL event log: every planner "
+                         "decision (plan/drift/refit/escalation), OOM, "
+                         "snapshot and train step with provenance")
+    ap.add_argument("--trace-out", default=None,
+                    help="Chrome trace_event JSON (load in Perfetto / "
+                         "chrome://tracing): per-step plan/compile/execute "
+                         "spans, planner and transfer tracks")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -226,8 +241,12 @@ def main(argv=None):
                 else FaultInjector.from_env())
     watchdog = OOMWatchdog(max_retries=args.max_oom_retries,
                            injector=injector)
+    telemetry = build_telemetry(metrics_path=args.metrics,
+                                events_path=args.events_out,
+                                trace_path=args.trace_out)
     trainer = Trainer(lm, planner, opt, mesh=mesh,
-                      watchdog=watchdog, snapshots=snapshots)
+                      watchdog=watchdog, snapshots=snapshots,
+                      telemetry=telemetry)
     batches = make_batches(args.dataset, batch_size=args.batch_size,
                            vocab_size=cfg.vocab_size,
                            num_batches=args.steps, quantum=args.quantum,
@@ -288,6 +307,8 @@ def main(argv=None):
     if args.save:
         ckpt.save(args.save, params)
         print("saved", args.save)
+    for kind, path in flush_telemetry(telemetry).items():
+        print(f"{kind} written to {path}")
 
 
 if __name__ == "__main__":

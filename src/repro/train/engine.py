@@ -55,6 +55,7 @@ from repro.core.estimator import PolyEstimator
 from repro.data.pipeline import bucket_length
 from repro.data.trace import TraceRequest
 from repro.models.lm import LM
+from repro.obs import StatsView, Telemetry, TRACK_SERVE
 from repro.train.serve import cached_serve_step
 
 
@@ -152,7 +153,8 @@ class ServeEngine:
     def __init__(self, lm: LM, params, *, hbm_bytes: float,
                  quantum: int = 64, max_slots: int = 4,
                  prefill_chunk: int = 32, decode_steps: int = 4,
-                 warmup_buckets: int = 3, estimator_degree: int = 2):
+                 warmup_buckets: int = 3, estimator_degree: int = 2,
+                 telemetry: Optional[Telemetry] = None):
         if lm.kind == "dec":
             raise ValueError(
                 "encoder/decoder serving needs encoder frames per request;"
@@ -213,11 +215,24 @@ class ServeEngine:
         self._evict_jit = jits["evict"]
         self.compile_keys: set = set()
 
-        self.stats: Dict[str, Any] = dict(
-            admitted=0, deferrals=0, rejected=0, completed=0,
-            prefill_chunks=0, decode_batches=0, decode_tokens=0,
-            pool_grows=0, peak_predicted_bytes=0.0, peak_actual_bytes=0,
-            admission_checks=0)
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry.disabled()
+        self.stats = StatsView(
+            self.telemetry.metrics,
+            scalars={
+                "admitted": "serve_admitted",
+                "deferrals": "serve_deferrals",
+                "rejected": "serve_rejected",
+                "completed": "serve_completed",
+                "prefill_chunks": "serve_prefill_chunks",
+                "decode_batches": "serve_decode_batches",
+                "decode_tokens": "serve_decode_tokens",
+                "pool_grows": "serve_pool_grows",
+                "admission_checks": "serve_admission_checks",
+                "peak_predicted_bytes": "serve_peak_predicted_bytes",
+                "peak_actual_bytes": "serve_peak_actual_bytes",
+            },
+            float_keys=("peak_predicted_bytes",))
         self._t0 = time.perf_counter()
         self._clock_skip = 0.0
 
@@ -307,12 +322,16 @@ class ServeEngine:
             if lv is not None:
                 lv.pool = grown
         self.pools[bucket] = grown
-        self.stats["pool_grows"] += 1
+        self.stats.inc("pool_grows")
+        if self.telemetry.events_on:
+            self.telemetry.events.emit("pool_grow", bucket=bucket,
+                                       slots=new_slots)
         self.compile_keys.add(("pool", bucket, new_slots))
         return grown
 
     def _try_admit(self, lv: _Live, now: float) -> bool:
-        self.stats["admission_checks"] += 1
+        tel = self.telemetry
+        self.stats.inc("admission_checks")
         cost = self._admit_cost(lv.bucket)
         if cost is None or self.predicted_bytes() + cost > self.hbm_bytes:
             return False
@@ -324,7 +343,21 @@ class ServeEngine:
         lv.pool, lv.slot = pool, slot     # parked (index == bucket)
         lv.t_admit = now                  # until prefill completes
         self.prefilling.append(lv)
-        self.stats["admitted"] += 1
+        self.stats.inc("admitted")
+        if tel.events_on:
+            tel.events.emit("admit", rid=lv.req.rid, bucket=lv.bucket,
+                            cost_bytes=float(cost),
+                            predicted_bytes=self.predicted_bytes(),
+                            wait_s=max(now - lv.arrival_s, 0.0))
+        if tel.trace_on:
+            wait = max(now - lv.arrival_s, 0.0)
+            if wait > 0:
+                # retroactive: the span covers the engine-clock interval
+                # the request spent queued (arrival -> admission)
+                tel.tracer.complete(
+                    "queue_wait", time.perf_counter() - wait, wait,
+                    TRACK_SERVE,
+                    args={"rid": lv.req.rid, "bucket": lv.bucket})
         return True
 
     # -- prefill -----------------------------------------------------------
@@ -340,14 +373,19 @@ class ServeEngine:
         return 1
 
     def _advance_prefill(self, lv: _Live, now: float) -> None:
+        tel = self.telemetry
         S = len(lv.req.prompt)
         c = self._next_chunk(S - lv.pos)
         tok = jnp.asarray(lv.req.prompt[lv.pos:lv.pos + c][None, :])
         self.compile_keys.add(("prefill", lv.bucket, int(tok.shape[1])))
-        logits, lv.staging = self._prefill_jit(self.params, tok,
-                                               lv.staging, lv.pos)
+        with tel.tracer.span(
+                "prefill_chunk", TRACK_SERVE,
+                args={"rid": lv.req.rid, "bucket": lv.bucket,
+                      "chunk": int(tok.shape[1])} if tel.trace_on else None):
+            logits, lv.staging = self._prefill_jit(self.params, tok,
+                                                   lv.staging, lv.pos)
         lv.pos += int(tok.shape[1])
-        self.stats["prefill_chunks"] += 1
+        self.stats.inc("prefill_chunks")
         if lv.pos < S:
             return
         # prefill complete: first token comes from the prompt's last
@@ -376,7 +414,12 @@ class ServeEngine:
         lv.pool, lv.slot = None, -1
         lv.t_done = now
         self.done.append(lv)
-        self.stats["completed"] += 1
+        self.stats.inc("completed")
+        if self.telemetry.events_on:
+            self.telemetry.events.emit(
+                "serve_complete", rid=lv.req.rid, bucket=pool.bucket,
+                tokens=len(lv.tokens),
+                latency_s=max(now - lv.arrival_s, 0.0))
         if pool.n_active() == 0 and not any(
                 w.bucket == pool.bucket
                 for w in self.waiting + self.prefilling):
@@ -387,16 +430,22 @@ class ServeEngine:
             if pool.n_active() == 0:
                 continue
             self.compile_keys.add(("decode", pool.bucket, pool.slots))
+            tel = self.telemetry
             for _ in range(self.decode_steps):
                 if pool.n_active() == 0:
                     break
                 toks = jnp.asarray(pool.last_tok[:, None])
                 idx = jnp.asarray(pool.index)
-                nxt, pool.cache = self._decode_jit(self.params, toks,
-                                                   pool.cache, idx)
-                nxt = np.asarray(nxt)
+                with tel.tracer.span(
+                        "decode_batch", TRACK_SERVE,
+                        args={"bucket": pool.bucket,
+                              "active": pool.n_active()}
+                        if tel.trace_on else None):
+                    nxt, pool.cache = self._decode_jit(self.params, toks,
+                                                       pool.cache, idx)
+                    nxt = np.asarray(nxt)
                 t_emit = self._now()
-                self.stats["decode_batches"] += 1
+                self.stats.inc("decode_batches")
                 for s, lv in enumerate(pool.live):
                     if lv is None or lv.staging is not None:
                         continue    # empty, or reserved + still prefilling
@@ -404,7 +453,7 @@ class ServeEngine:
                     pool.last_tok[s] = int(nxt[s])
                     lv.tokens.append(int(nxt[s]))
                     lv.token_times.append(t_emit)
-                    self.stats["decode_tokens"] += 1
+                    self.stats.inc("decode_tokens")
                     self._finish_if_done(lv, t_emit)
 
     # -- scheduler loop ----------------------------------------------------
@@ -431,7 +480,11 @@ class ServeEngine:
             for lv in self.waiting:
                 if not self._try_admit(lv, now):
                     if lv.pool is None:
-                        self.stats["deferrals"] += 1
+                        self.stats.inc("deferrals")
+                        if self.telemetry.events_on:
+                            self.telemetry.events.emit(
+                                "defer", rid=lv.req.rid, bucket=lv.bucket,
+                                predicted_bytes=self.predicted_bytes())
                     still.append(lv)
             self.waiting = still
             for lv in list(self.prefilling):
@@ -445,7 +498,12 @@ class ServeEngine:
                     # it never will — reject instead of spinning/OOMing
                     lv = self.waiting.pop(0)
                     self.rejected.append(lv)
-                    self.stats["rejected"] += 1
+                    self.stats.inc("rejected")
+                    if self.telemetry.events_on:
+                        self.telemetry.events.emit(
+                            "reject", rid=lv.req.rid, bucket=lv.bucket,
+                            predicted_bytes=self.predicted_bytes(),
+                            hbm_bytes=self.hbm_bytes)
                 elif pending:
                     # idle until the next arrival: fast-forward
                     gap = pending[0].arrival_s - self._now()

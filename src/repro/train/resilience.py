@@ -41,6 +41,7 @@ import json
 import os
 import shutil
 import time
+from collections.abc import MutableMapping
 from typing import Any, Optional
 
 import jax
@@ -49,6 +50,7 @@ import numpy as np
 
 from repro.actions import Action
 from repro.core.scheduler import Plan
+from repro.obs import StatsView, Telemetry
 from repro.train import checkpoint
 from repro.train.checkpoint import CheckpointError
 
@@ -168,15 +170,30 @@ class OOMWatchdog:
     """
 
     def __init__(self, *, max_retries: int = 3,
-                 injector: Optional[FaultInjector] = None):
+                 injector: Optional[FaultInjector] = None,
+                 telemetry: Optional[Telemetry] = None):
         if max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.max_retries = int(max_retries)
         self.injector = injector if injector is not None \
             else FaultInjector.from_env()
-        self.stats = {"oom_events": 0, "escalations": 0,
-                      "retry_successes": 0, "retry_failures": 0,
-                      "oom_by_bucket": {}}
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry.disabled()
+        # dict-shaped view over the shared registry: oom_events and
+        # escalations are the SAME metrics the planner's stats read
+        # once the trainer binds both to one registry — one counter,
+        # two views, no double bookkeeping
+        self.stats = StatsView(
+            self.telemetry.metrics,
+            scalars={"oom_events": "train_oom_events",
+                     "escalations": "train_escalations",
+                     "retry_successes": "train_retry_successes",
+                     "retry_failures": "train_retry_failures"},
+            labeled={"oom_by_bucket": ("train_oom_events", "bucket")})
+
+    def bind_telemetry(self, telemetry: Telemetry) -> None:
+        self.telemetry = telemetry
+        self.stats.attach(telemetry.metrics)
 
     @staticmethod
     def is_oom(e: BaseException) -> bool:
@@ -199,12 +216,13 @@ class OOMWatchdog:
             raise SimulatedOOM(step, bucket)
 
     def on_oom(self, bucket: int) -> None:
-        self.stats["oom_events"] += 1
-        by = self.stats["oom_by_bucket"]
-        by[int(bucket)] = by.get(int(bucket), 0) + 1
+        self.stats.inc("oom_events", bucket=int(bucket))
 
     def on_escalation(self) -> None:
-        self.stats["escalations"] += 1
+        """Kept for standalone use; NOT called by the trainer — the
+        planner's ``escalate`` bumps the shared ``train_escalations``
+        counter already, and this view reads the same metric."""
+        self.stats.inc("escalations")
 
     def on_retry_success(self) -> None:
         self.stats["retry_successes"] += 1
@@ -342,7 +360,7 @@ def restore_planner_state(planner, state: dict, params=None) -> dict:
             planner._escalation[key] = int(rec["escalation"])
         summary["restored_plans"] += 1
     st = getattr(planner, "stats", None)
-    if isinstance(st, dict):
+    if isinstance(st, MutableMapping):
         st["restored_samples"] = st.get("restored_samples", 0) \
             + summary["restored_samples"]
         st["restored_plans"] = st.get("restored_plans", 0) \
@@ -395,7 +413,8 @@ class SnapshotManager:
     MANIFEST = "manifest.json"
 
     def __init__(self, directory: str, *, every_steps: int = 0,
-                 every_secs: float = 0.0, keep: int = 3):
+                 every_secs: float = 0.0, keep: int = 3,
+                 telemetry: Optional[Telemetry] = None):
         if keep < 1:
             raise ValueError(f"keep must be >= 1, got {keep}")
         self.dir = directory
@@ -403,8 +422,13 @@ class SnapshotManager:
         self.every_secs = float(every_secs)
         self.keep = int(keep)
         self.written = 0
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry.disabled()
         self._last_save = time.monotonic()
         os.makedirs(self.dir, exist_ok=True)
+
+    def bind_telemetry(self, telemetry: Telemetry) -> None:
+        self.telemetry = telemetry
 
     # -- cadence -------------------------------------------------------
     def due(self, step: int) -> bool:
@@ -445,6 +469,12 @@ class SnapshotManager:
         os.replace(tmp, final)
         self.written += 1
         self._last_save = time.monotonic()
+        self.telemetry.metrics.counter(
+            "snapshots_written", "atomic snapshot saves").inc()
+        if self.telemetry.events_on:
+            self.telemetry.events.emit(
+                "snapshot_save", step=int(step), path=final,
+                bytes=int(sum(rec["bytes"] for rec in files.values())))
         self._retain()
         return final
 
@@ -511,6 +541,15 @@ class SnapshotManager:
                                                  strict_map_key=False)
                     psummary = restore_planner_state(planner, pstate,
                                                      params=params)
+                self.telemetry.metrics.counter(
+                    "snapshots_restored", "snapshot restores").inc()
+                if self.telemetry.events_on:
+                    self.telemetry.events.emit(
+                        "snapshot_restore", step=int(meta["step"]),
+                        path=path,
+                        restored_plans=psummary.get("restored_plans", 0),
+                        dropped_plans=psummary.get("dropped_plans", 0),
+                        mesh_changed=psummary.get("mesh_changed", False))
                 return Restored(params=params, opt_state=opt_state,
                                 step=int(meta["step"]),
                                 data_cursor=int(meta.get("data_cursor", 0)),

@@ -41,6 +41,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
+from collections.abc import MutableMapping
 from typing import Any, Dict, Iterable, Optional, Tuple
 
 import jax
@@ -51,6 +52,7 @@ from repro.core.cache import LRUCache
 from repro.core.planner import PlannerBase
 from repro.data.pipeline import pad_batch
 from repro.models.lm import LM
+from repro.obs import LabelView, StatsView, Telemetry, TRACK_STEP
 from repro.optim.adamw import AdamW, AdamWState
 from repro.train.accumulate import accumulated_grads, build_accumulated_step
 from repro.train.transfer import TransferLane
@@ -90,9 +92,18 @@ class Trainer:
                  mesh=None,
                  max_cached_steps: int = 64,
                  watchdog=None,
-                 snapshots=None):
+                 snapshots=None,
+                 telemetry: Optional[Telemetry] = None):
         self.lm = lm
         self.planner = planner
+        # ONE registry per run: the trainer's telemetry is authoritative
+        # and the planner / watchdog / snapshot manager re-home their
+        # metrics into it, so overlapping counters (oom_events,
+        # escalations) become a single shared metric instead of
+        # parallel bookkeeping (repro.obs)
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry.disabled()
+        planner.bind_telemetry(self.telemetry)
         self.optimizer = optimizer or AdamW()
         self.remat_policy = remat_policy
         self.bucket_pad = bucket_pad
@@ -117,16 +128,64 @@ class Trainer:
         # compiled executable per rare bucket forever
         self._step_cache = LRUCache(max_cached_steps)
         self.history: list[StepStats] = []
-        self.cache_stats = {"compiles": 0, "prewarm_compiles": 0,
-                            "jit_hits": 0, "evictions": 0,
-                            "bucket_steps": {},
-                            # per bucket: [padded_tokens, effective_tokens]
-                            # (where the padding waste went — see
-                            # launch/report.engine_report)
-                            "bucket_tokens": {},
-                            # per bucket: largest gradient-accumulation
-                            # split the planner picked for it
-                            "bucket_microbatch": {}}
+        reg = self.telemetry.metrics
+        # per bucket: padded vs effective tokens (where the padding
+        # waste went — launch/report.engine_report) and the largest
+        # gradient-accumulation split the planner picked
+        self._m_padded_tokens = reg.counter(
+            "train_bucket_padded_tokens",
+            "bucket-shape tokens actually computed over")
+        self._m_eff_tokens = reg.counter(
+            "train_bucket_tokens", "effective (unpadded) tokens")
+        self._g_bucket_k = reg.gauge(
+            "train_bucket_microbatch",
+            "largest gradient-accumulation split seen per bucket")
+        self._h_step_s = reg.histogram(
+            "train_step_time_s", "wall time per executed train step")
+        self.cache_stats = StatsView(
+            reg,
+            scalars={"compiles": "train_jit_compiles",
+                     "prewarm_compiles": "train_jit_prewarm_compiles",
+                     "jit_hits": "train_jit_hits",
+                     "evictions": "train_jit_evictions"},
+            labeled={"bucket_steps": ("train_bucket_steps", "bucket")},
+            composite={
+                "bucket_tokens": self._bucket_tokens_view,
+                "bucket_microbatch":
+                    lambda: LabelView(self._g_bucket_k, "bucket")})
+
+    # watchdog / snapshots are properties so a post-construction
+    # assignment (``tr.watchdog = OOMWatchdog(...)``) still re-homes the
+    # component's metrics into the trainer's registry — the shared
+    # oom_events / escalations counters only exist when both sides are
+    # bound to the same registry
+    @property
+    def watchdog(self):
+        return self._watchdog
+
+    @watchdog.setter
+    def watchdog(self, wd) -> None:
+        if wd is not None and hasattr(wd, "bind_telemetry"):
+            wd.bind_telemetry(self.telemetry)
+        self._watchdog = wd
+
+    @property
+    def snapshots(self):
+        return self._snapshots
+
+    @snapshots.setter
+    def snapshots(self, sm) -> None:
+        if sm is not None and hasattr(sm, "bind_telemetry"):
+            sm.bind_telemetry(self.telemetry)
+        self._snapshots = sm
+
+    def _bucket_tokens_view(self) -> dict:
+        """``{bucket: [padded_tokens, effective_tokens]}`` materialised
+        from the two per-bucket token counters."""
+        padded = LabelView(self._m_padded_tokens, "bucket")
+        eff = LabelView(self._m_eff_tokens, "bucket")
+        return {b: [padded.get(b, 0), eff.get(b, 0)]
+                for b in set(padded) | set(eff)}
 
     # ------------------------------------------------------------------
     def _batch_key(self, batch) -> tuple:
@@ -248,7 +307,8 @@ class Trainer:
     def _lane(self) -> TransferLane:
         if self.transfer_lane is None:
             self.transfer_lane = TransferLane(
-                mesh_sig=self.planner.mesh_sig())
+                mesh_sig=self.planner.mesh_sig(),
+                telemetry=self.telemetry)
         return self.transfer_lane
 
     def _moment_get(self, tree, u: int):
@@ -389,9 +449,12 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def step(self, params, opt_state: AdamWState, batch) -> tuple:
+        tel = self.telemetry
+        tracer = tel.tracer
         batch = self._prepare(batch)
         t0 = time.perf_counter()
-        mask, info = self.planner.plan(params, batch)
+        with tracer.span("plan", TRACK_STEP):
+            mask, info = self.planner.plan(params, batch)
         t_plan = time.perf_counter() - t0
 
         bucket = self.planner.bucket_key(batch)
@@ -399,7 +462,13 @@ class Trainer:
         attempt = 0
         while True:
             k = max(int(getattr(info.plan, "microbatch", 1)), 1)
+            t_c0 = time.perf_counter()
             fn, is_new = self._get_step_fn(mask, batch, k)
+            if is_new:
+                tracer.complete("build_step", t_c0,
+                                time.perf_counter() - t_c0, TRACK_STEP,
+                                args={"bucket": bucket}
+                                if tel.trace_on else None)
             if self.transfer_lane is not None:
                 self.transfer_lane.reset_stats()
             t1 = time.perf_counter()
@@ -408,7 +477,7 @@ class Trainer:
                     # injected faults fire BEFORE the jit call so no
                     # donated buffer is consumed by a simulated failure
                     wd.maybe_inject(step=self.global_step, bucket=bucket)
-                with self._mesh_ctx():
+                with self._mesh_ctx(), tracer.span("execute", TRACK_STEP):
                     if isinstance(fn, tuple) and fn[0] == "opt_split":
                         params, opt_state, loss, metrics = \
                             self._run_opt_split(fn, params, opt_state,
@@ -416,26 +485,31 @@ class Trainer:
                     else:
                         params, opt_state, loss, metrics = fn(
                             params, opt_state, batch)
-                # device sync: an async allocation failure surfaces here,
-                # inside the try, not on a later unrelated line
-                loss = float(loss)
+                    # device sync: an async allocation failure surfaces
+                    # here, inside the try, not on a later unrelated line
+                    loss = float(loss)
             except Exception as e:
                 if wd is None or not wd.is_oom(e):
                     raise
                 # the plan predicted this bucket fits; reality disagreed —
-                # book it, poison the compiled step for the failed plan,
+                # book it (ONE bump of the shared train_oom_events
+                # counter — the planner's stats view reads the same
+                # metric), poison the compiled step for the failed plan,
                 # and ask the planner for a strictly more aggressive one
                 wd.on_oom(bucket)
-                self.planner.record_oom(bucket)
                 self._step_cache.pop(self._step_key(mask, batch, k))
+                if tel.events_on:
+                    tel.events.emit("oom", step=self.global_step,
+                                    bucket=bucket, attempt=attempt + 1)
+                tracer.instant("oom", TRACK_STEP, args={"bucket": bucket})
                 attempt += 1
                 if attempt > wd.max_retries \
                         or not self.planner.escalate(params, batch):
                     wd.on_retry_failure()
                     raise
-                wd.on_escalation()
                 t0b = time.perf_counter()
-                mask, info = self.planner.plan(params, batch)
+                with tracer.span("plan", TRACK_STEP):
+                    mask, info = self.planner.plan(params, batch)
                 t_plan += time.perf_counter() - t0b
                 continue
             break
@@ -450,13 +524,11 @@ class Trainer:
             # the padding-waste accounting understates those buckets
             B0 = int(np.shape(batch["tokens"])[0])
             padded_tokens = padded_tokens // B0 * (-(-B0 // k) * k)
-        bs = self.cache_stats["bucket_steps"]
-        bs[bucket] = bs.get(bucket, 0) + 1
-        bt = self.cache_stats["bucket_tokens"].setdefault(bucket, [0, 0])
-        bt[0] += padded_tokens
-        bt[1] += eff_tokens
-        bm = self.cache_stats["bucket_microbatch"]
-        bm[bucket] = max(bm.get(bucket, 1), k)
+        self.cache_stats.inc("bucket_steps", bucket=bucket)
+        self._m_padded_tokens.inc(padded_tokens, bucket=bucket)
+        self._m_eff_tokens.inc(eff_tokens, bucket=bucket)
+        self._g_bucket_k.set_max(k, bucket=bucket)
+        self._h_step_s.observe(t_step)
         # transfer telemetry: what the lane measured this step vs what
         # the simulator's (1 - overlap) pricing predicts for the SAME
         # bytes — the bench gate holds the pair to a tolerance band
@@ -470,14 +542,20 @@ class Trainer:
                 pcie = float(getattr(self.planner, "pcie_gbps", 16.0)) * 1e9
                 ov = float(getattr(self.planner, "offload_overlap", 0.5))
                 sim_s = (1.0 - ov) * moved / pcie
+        if exposed_s or sim_s:
+            reg = tel.metrics
+            reg.counter("train_exposed_transfer_s").inc(exposed_s)
+            reg.counter("train_sim_transfer_s").inc(sim_s)
         degraded = bool(info.plan.n_offload and not self.lm.offload_exec)
+        if degraded:
+            tel.metrics.counter("train_offload_degraded_steps").inc()
         if degraded and bucket not in self._degraded_buckets:
             # surface the silent SPMD offload->remat degradation: once
             # per bucket into the planner's stats (engine_report reads
             # it), every step into StepStats
             self._degraded_buckets.add(bucket)
             st = getattr(self.planner, "stats", None)
-            if isinstance(st, dict):
+            if isinstance(st, MutableMapping):
                 st["offload_fallbacks"] = st.get("offload_fallbacks", 0) + 1
         self.history.append(StepStats(loss, t_step, t_plan, is_new,
                                       info.plan.n_remat, eff_tokens, bucket,
@@ -489,6 +567,19 @@ class Trainer:
                                       offload_degraded=degraded,
                                       exposed_transfer_s=exposed_s,
                                       sim_transfer_s=sim_s))
+        if tel.events_on:
+            tel.events.emit("train_step", step=self.global_step,
+                            bucket=bucket, loss=loss, k=k,
+                            compile=bool(is_new),
+                            plan_source=info.plan.source,
+                            cache_hit=bool(info.cache_hit),
+                            n_remat=int(info.plan.n_remat),
+                            n_offload=int(info.plan.n_offload),
+                            step_time_s=t_step, plan_time_s=t_plan,
+                            exposed_transfer_s=exposed_s,
+                            predicted_peak_bytes=float(
+                                self.planner.fixed_bytes or 0.0)
+                            + float(info.plan.est_activation_bytes))
         self.global_step += 1
         self.data_cursor += 1
         if self.snapshots is not None and self.snapshots.due(self.global_step):

@@ -33,6 +33,8 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+from repro.obs import Telemetry, TRACK_TRANSFER
+
 # env overrides: bandwidth wins outright, path relocates the JSON
 PCIE_ENV = "MIMOSE_PCIE_GBPS"
 CALIBRATION_ENV = "MIMOSE_CALIBRATION"
@@ -148,9 +150,16 @@ class TransferLane:
     """
 
     def __init__(self, depth: int = DEFAULT_DEPTH,
-                 mesh_sig: Optional[tuple] = None):
+                 mesh_sig: Optional[tuple] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.depth = max(int(depth), 1)
         self.mesh_sig = mesh_sig
+        # ``stats`` stays a plain per-step scratch dict (the trainer
+        # zeroes it every step via reset_stats); the telemetry registry
+        # accumulates the run totals and the tracer gets copy/exposed
+        # spans on the dedicated transfer track
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry.disabled()
         self._pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="mimose-xfer")
         self._in_flight: list = []          # oldest-first outbound futures
@@ -163,6 +172,14 @@ class TransferLane:
     def _charge(self, dt: float) -> None:
         with self._lock:
             self.stats["exposed_s"] += float(dt)
+        self.telemetry.metrics.counter(
+            "transfer_exposed_s",
+            "wall time callers spent blocked on the lane").inc(float(dt))
+        if dt > 0.0:
+            # retroactive span: the caller was blocked for the interval
+            # ending now — lands under the execute span that paid it
+            self.telemetry.tracer.complete(
+                "exposed", time.perf_counter() - dt, dt, TRACK_TRANSFER)
 
     def _reserve_slot(self) -> None:
         """Block until the lane has a free in-flight slot; the wait is
@@ -182,18 +199,32 @@ class TransferLane:
         t0 = time.perf_counter()
         y = to_host(x)
         jax.block_until_ready(y)
+        dt = time.perf_counter() - t0
         with self._lock:
             self.stats["transfers"] += 1
-            self.stats["copy_s"] += time.perf_counter() - t0
+            self.stats["copy_s"] += dt
+        tel = self.telemetry
+        tel.metrics.counter("transfer_copy_s").inc(dt)
+        tel.metrics.counter("transfer_bytes_out").inc(_nbytes(x))
+        tel.tracer.complete("copy_d2h", t0, dt, TRACK_TRANSFER,
+                            args={"bytes": _nbytes(x)}
+                            if tel.trace_on else None)
         return y
 
     def _copy_in(self, host, like):
         t0 = time.perf_counter()
         y = to_device(host, like)
         jax.block_until_ready(y)
+        dt = time.perf_counter() - t0
         with self._lock:
             self.stats["transfers"] += 1
-            self.stats["copy_s"] += time.perf_counter() - t0
+            self.stats["copy_s"] += dt
+        tel = self.telemetry
+        tel.metrics.counter("transfer_copy_s").inc(dt)
+        tel.metrics.counter("transfer_bytes_in").inc(_nbytes(host))
+        tel.tracer.complete("copy_h2d", t0, dt, TRACK_TRANSFER,
+                            args={"bytes": _nbytes(host)}
+                            if tel.trace_on else None)
         return y
 
     # -- API -----------------------------------------------------------

@@ -48,6 +48,10 @@ DRIFT_METRICS = [
     # continuous-batching vs sequential serving throughput ratio at
     # equal HBM budget (wall-clock; warn-only drift absorbs runners)
     (("serve", "speedup_vs_sequential"), True),
+    # full-telemetry step-time overhead ratio (events + spans + sinks
+    # vs disabled) — smaller is better; the hard <=2% bound is an
+    # acceptance gate, this drift check catches creep below it
+    (("telemetry", "overhead_ratio"), False),
 ]
 
 

@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""Summarize telemetry artifacts from a training or serving run.
+
+Works on both outputs of the unified telemetry layer (``repro.obs``):
+
+* a Chrome ``trace_event`` JSON written by ``--trace-out`` — span
+  rollup: per (track, name) count / total / mean / max wall time,
+  sorted by where the time actually went;
+* a JSONL event log written by ``--events-out`` — plan-swap timeline
+  (plan / solver_swap / escalation / refit / drift decisions in time
+  order) and the serve admission ledger (admit / defer / reject per
+  bucket with queue-wait stats).
+
+Usage:
+
+    python tools/trace_view.py trace.json                # span rollup
+    python tools/trace_view.py events.jsonl              # everything
+    python tools/trace_view.py events.jsonl --mode plans
+    python tools/trace_view.py events.jsonl --mode admission
+    python tools/trace_view.py trace.json --top 5
+
+Stdlib only — safe to run anywhere the artifacts land.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+PLAN_KINDS = ("plan", "solver_swap", "escalation", "refit", "drift",
+              "plan_poisoned", "plan_evicted")
+ADMIT_KINDS = ("admit", "defer", "reject")
+
+
+def _load(path: str):
+    """Return ("trace", events) or ("jsonl", records) by sniffing."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        doc = json.loads(text)
+        if isinstance(doc, dict) and "traceEvents" in doc:
+            return "trace", doc["traceEvents"]
+    except json.JSONDecodeError:
+        pass                        # multi-line JSONL falls through
+    recs = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            recs.append(json.loads(line))
+        except json.JSONDecodeError:
+            continue
+    return "jsonl", recs
+
+
+# -- trace_event span rollup ------------------------------------------------
+def span_rollup(events: list, top: int) -> None:
+    tracks = {}
+    for e in events:
+        if e.get("ph") == "M" and e.get("name") == "thread_name":
+            tracks[e.get("tid")] = e.get("args", {}).get("name", "?")
+    agg = defaultdict(lambda: [0, 0.0, 0.0])     # (track,name) -> n,sum,max
+    for e in events:
+        if e.get("ph") != "X":
+            continue
+        key = (tracks.get(e.get("tid"), str(e.get("tid"))), e["name"])
+        dur_ms = float(e.get("dur", 0)) / 1e3
+        cell = agg[key]
+        cell[0] += 1
+        cell[1] += dur_ms
+        cell[2] = max(cell[2], dur_ms)
+    rows = sorted(agg.items(), key=lambda kv: -kv[1][1])[:top]
+    print(f"{'track':<12} {'span':<16} {'count':>6} {'total ms':>10} "
+          f"{'mean ms':>9} {'max ms':>9}")
+    for (track, name), (n, tot, mx) in rows:
+        print(f"{track:<12} {name:<16} {n:>6} {tot:>10.2f} "
+              f"{tot / n:>9.3f} {mx:>9.2f}")
+
+
+# -- event-log views --------------------------------------------------------
+def plan_timeline(recs: list) -> None:
+    rows = [r for r in recs if r.get("kind") in PLAN_KINDS]
+    if not rows:
+        print("no plan events")
+        return
+    t0 = rows[0].get("ts", 0.0)
+    print("plan timeline (t=0 at first plan event):")
+    for r in rows:
+        t = r.get("ts", 0.0) - t0
+        kind = r["kind"]
+        if kind == "plan":
+            detail = (f"bucket={r.get('bucket')} source={r.get('source')} "
+                      f"k={r.get('k')} remat={r.get('n_remat')} "
+                      f"offload={r.get('n_offload')}")
+        elif kind == "solver_swap":
+            detail = (f"bucket={r.get('bucket')} "
+                      f"{r.get('greedy_s', 0):.6f}s -> "
+                      f"{r.get('solved_s', 0):.6f}s "
+                      f"({r.get('improvement_pct', 0):+.2f}%)")
+        elif kind == "escalation":
+            detail = (f"bucket={r.get('bucket')} level={r.get('level')} "
+                      f"k={r.get('k')}")
+        elif kind == "drift":
+            detail = (f"bucket={r.get('bucket')} "
+                      f"pred={r.get('predicted_bytes', 0) / 1e6:.2f}MB "
+                      f"act={r.get('actual_bytes', 0) / 1e6:.2f}MB "
+                      f"rel_err={r.get('rel_err', 0):.4f}"
+                      + (" REFIT" if r.get("refit") else ""))
+        else:
+            detail = " ".join(f"{k}={v}" for k, v in r.items()
+                              if k not in ("v", "ts", "kind"))
+        print(f"  +{t:9.3f}s {kind:<14} {detail}")
+
+
+def admission_view(recs: list) -> None:
+    rows = [r for r in recs if r.get("kind") in ADMIT_KINDS]
+    if not rows:
+        print("no admission events")
+        return
+    per = defaultdict(lambda: defaultdict(int))
+    waits = []
+    for r in rows:
+        per[r.get("bucket")][r["kind"]] += 1
+        if r["kind"] == "admit":
+            waits.append(float(r.get("wait_s", 0.0)))
+    print("admission outcomes:")
+    print(f"  {'bucket':>8} {'admit':>6} {'defer':>6} {'reject':>7}")
+    for b in sorted(per, key=lambda x: (x is None, x)):
+        c = per[b]
+        print(f"  {str(b):>8} {c['admit']:>6} {c['defer']:>6} "
+              f"{c['reject']:>7}")
+    if waits:
+        waits.sort()
+        mid = waits[len(waits) // 2]
+        print(f"  queue wait: mean {sum(waits) / len(waits):.4f}s "
+              f"p50 {mid:.4f}s max {waits[-1]:.4f}s")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="trace_event JSON or events JSONL")
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "spans", "plans", "admission"],
+                    help="view to render (auto = all that apply)")
+    ap.add_argument("--top", type=int, default=20,
+                    help="span rollup rows (default 20)")
+    args = ap.parse_args(argv)
+    kind, recs = _load(args.path)
+    if kind == "trace":
+        if args.mode in ("auto", "spans"):
+            span_rollup(recs, args.top)
+        else:
+            ap.error(f"--mode {args.mode} needs an events JSONL, "
+                     "got a trace_event JSON")
+        return
+    if args.mode in ("auto", "plans"):
+        plan_timeline(recs)
+    if args.mode in ("auto", "admission"):
+        admission_view(recs)
+
+
+if __name__ == "__main__":
+    main()
